@@ -1,0 +1,36 @@
+"""Shared benchmark helpers: timing, CSV emission, result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(table: str, name: str, value, derived: str = "") -> None:
+    """One CSV line per measurement: table,name,value,derived."""
+    print(f"{table},{name},{value},{derived}", flush=True)
+
+
+def save(table: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{table}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) after warmup calls."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

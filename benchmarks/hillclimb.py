@@ -1,0 +1,84 @@
+"""Hillclimb driver (§Perf): lower one (arch x shape) pair under a named
+variant, print the three roofline terms + dominant collective breakdown.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch llama3.2-3b \
+        --shape train_4k --profile dp2 [--microbatches 8] [--tag iter1]
+
+Results append to benchmarks/results/hillclimb.jsonl so EXPERIMENTS.md §Perf
+can cite exact numbers.
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--profile", default="baseline")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None,
+                    help="override cfg.attn_chunk_size for this lowering")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_one
+    if args.attn_chunk:
+        import dataclasses
+        import repro.configs as _cfgs
+        base = _cfgs.REGISTRY[args.arch]
+        _cfgs.REGISTRY[args.arch] = dataclasses.replace(
+            base, attn_chunk_size=args.attn_chunk)
+    t0 = time.time()
+    rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                  profile=args.profile, num_microbatches=args.microbatches)
+    if rec["status"] != "ok":
+        print(json.dumps(rec, indent=1)[:2000])
+        raise SystemExit(1)
+    h = rec["hlo"]
+    terms = {
+        "compute": h["dot_flops_executed"] / PEAK_FLOPS,
+        "memory": h["hbm_bytes_executed"] / HBM_BW,
+        "collective": h["collective_bytes_executed"] / LINK_BW,
+    }
+    dom = max(terms, key=terms.get)
+    print(f"{args.arch} x {args.shape} [{args.profile}"
+          f"{' mb=' + str(args.microbatches) if args.microbatches else ''}]"
+          f" mesh={rec['mesh']}")
+    print(f"  compute={terms['compute']:.3f}s memory={terms['memory']:.3f}s "
+          f"collective={terms['collective']:.3f}s -> bound "
+          f"{max(terms.values()):.3f}s dominant={dom}")
+    print(f"  peak={rec['memory']['peak_estimate_bytes'] / 2**30:.2f} GiB "
+          f"compile={rec['compile_s']:.0f}s")
+    for k, v in h["collectives"].items():
+        if v["count"]:
+            print(f"    {k:20s} n={v['count']:4d} "
+                  f"exec={v['executed_bytes'] / 2**30:9.1f} GiB")
+    out = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
+           "profile": args.profile, "microbatches": args.microbatches,
+           "attn_chunk": args.attn_chunk,
+           "mesh": rec["mesh"], "terms": terms, "dominant": dom,
+           "peak_gib": rec["memory"]["peak_estimate_bytes"] / 2**30,
+           "collectives": {k: v["executed_bytes"]
+                           for k, v in h["collectives"].items()},
+           "wall_s": round(time.time() - t0, 1)}
+    path = os.path.join(os.path.dirname(__file__), "results",
+                        "hillclimb.jsonl")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(out) + "\n")
+
+
+if __name__ == "__main__":
+    main()

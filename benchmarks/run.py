@@ -1,0 +1,58 @@
+"""Benchmark runner — one function per paper table.
+
+Emits ``table,name,value,derived`` CSV lines and persists JSON to
+benchmarks/results/. The roofline table (from dry-run records, if present)
+prints at the end.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single table (table1..table5, roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import (table1_async, table2_trimodel, table3_spa,
+                            table4_dp_baselines, table5_scaling,
+                            table6_cbatch)
+    tables = {
+        "table1": table1_async.main,
+        "table2": table2_trimodel.main,
+        "table3": table3_spa.main,
+        "table4": table4_dp_baselines.main,
+        "table5": table5_scaling.main,
+        "table6": table6_cbatch.main,   # beyond-paper: continuous batching
+    }
+    print("table,name,value,derived")
+    failures = 0
+    for name, fn in tables.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,,")
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        rows = roofline.load("16x16")
+        if rows:
+            print()
+            print(roofline.render(rows, "16x16"))
+    if failures:
+        raise SystemExit(f"{failures} benchmark failures")
+
+
+if __name__ == "__main__":
+    main()

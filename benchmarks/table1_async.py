@@ -1,0 +1,88 @@
+"""Table 1 analogue: end-to-end throughput of sync vs periodic-async
+scheduling under a decoupled deployment.
+
+The paper's Table 1 measures TPSPD on 16 NPUs; here the inference service is
+a simulated remote deployment (constant-latency instances — exactly the
+trainer's-eye view of separate inference devices) while training runs the
+REAL jitted tri-model GRPO step on CPU. This isolates the quantity Table 1
+varies: the *pipeline structure*.
+
+Reported: TPSPD (tokens/s/device) for sync and async, speedup, and the
+theoretical bound (T_i + T_t) / max(T_i, T_t) from Eq. 4, plus (--timeline)
+per-stage occupancy mirroring Figure 3.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.launch.train import build_pipeline
+from repro.rl.rollout import RolloutBatch
+
+T_RESP = 12           # scripted response length
+LATENCY = 0.125       # tuned so T_infer ~= T_train (Eq. 4 bound -> 2)
+
+
+def scripted(prompts, key):
+    G = len(prompts)
+    rng = np.random.RandomState(int(np.asarray(prompts[0]).sum()) % 997)
+    resp = rng.randint(3, 200, size=(G, T_RESP)).astype(np.int32)
+    return RolloutBatch(response_ids=jnp.asarray(resp),
+                        response_len=jnp.full((G,), T_RESP, jnp.int32))
+
+
+def run_mode(mode: str, iterations: int = 3, batch: int = 16,
+             instances: int = 2):
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    rl = RLConfig(mode=mode, batch_prompts=batch, group_size=4,
+                  micro_batch=4, num_inference_instances=instances,
+                  max_prompt_len=32, max_response_len=T_RESP,
+                  learning_rate=1e-4)
+    sched, parts = build_pipeline(cfg, rl, scripted_fn=scripted,
+                                  latency_fn=lambda out: LATENCY)
+    sched.run(1)                      # jit warmup iteration
+    parts["pool"].reset_stats()
+    t0 = time.perf_counter()
+    hist = sched.run(iterations)
+    wall = time.perf_counter() - t0
+    tokens = sum(s.trained_tokens for s in hist)
+    infer_busy = sum(i.busy_time for i in parts["pool"].instances)
+    train_time = sum(s.train_time for s in hist)
+    return {"tpspd": tokens / wall, "wall": wall, "tokens": tokens,
+            "infer_busy": infer_busy, "train_time": train_time,
+            "history": [s.__dict__ for s in hist]}
+
+
+def main(timeline: bool = False) -> dict:
+    sync = run_mode("sync")
+    async_ = run_mode("async")
+    speedup = async_["tpspd"] / sync["tpspd"]
+    # Eq. 4 bound from the measured stage times of the sync run
+    t_i = sync["wall"] - sync["train_time"]
+    t_t = sync["train_time"]
+    bound = (t_i + t_t) / max(t_i, t_t)
+    emit("table1", "sync_tpspd", f"{sync['tpspd']:.1f}")
+    emit("table1", "async_tpspd", f"{async_['tpspd']:.1f}")
+    emit("table1", "speedup", f"{speedup:.2f}",
+         f"eq4_bound={bound:.2f}")
+    if timeline:
+        for name, r in (("sync", sync), ("async", async_)):
+            occ_i = r["infer_busy"] / (r["wall"] * 2)
+            occ_t = r["train_time"] / r["wall"]
+            print(f"  [{name}] inference-instance occupancy {occ_i:.2f}, "
+                  f"trainer occupancy {occ_t:.2f}")
+    out = {"sync": sync, "async": async_, "speedup": speedup,
+           "eq4_bound": bound}
+    save("table1_async", out)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    main(timeline="--timeline" in sys.argv)

@@ -1,0 +1,102 @@
+"""Table 2 analogue: the unified tri-model architecture's contribution.
+
+The paper's Table 2 attributes part of its 32B-model advantage to the
+tri-model design: policy, old-policy and reference logits computed in one
+micro-step under a shared parallel layout instead of three separately
+scheduled models.
+
+Measured here (CPU, reduced model, REAL jitted programs):
+  * fused:    one jitted program, old+ref via stacked-vmap + policy forward
+              (the shape the dry-run lowers)
+  * separate: three sequential jitted forwards (the colocated baseline)
+and the decoupled-vs-colocated step-time model that generates Table 2's
+resource-economy argument.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save, timeit
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.models import forward_hidden, init, token_logprobs
+from repro.rl.grpo import MicroBatch, trimodel_ref_old_logprobs
+
+
+def _mb(cfg, B=4, S=64):
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (B, S), 3, cfg.vocab_size)
+    return MicroBatch(
+        tokens=toks, labels=toks,
+        positions=jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)),
+        segments=jnp.zeros((B, S), jnp.int32),
+        loss_mask=jnp.ones((B, S), jnp.float32) / S,
+        advantages=jnp.ones((B, S), jnp.float32),
+        n_samples=jnp.float32(B))
+
+
+def main() -> dict:
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    params = init(jax.random.PRNGKey(0), cfg)
+    mb = _mb(cfg)
+
+    @jax.jit
+    def fused(p_old, p_ref, mb):
+        return trimodel_ref_old_logprobs(p_old, p_ref, cfg, mb)
+
+    @jax.jit
+    def single(p, mb):
+        h, _, _, _ = forward_hidden(p, cfg, mb.tokens,
+                                    positions=mb.positions,
+                                    segments=mb.segments)
+        return token_logprobs(p, cfg, h, mb.labels)
+
+    t_fused = timeit(fused, params, params, mb)
+    t_single = timeit(single, params, mb)
+    t_separate = 2 * t_single      # old + ref as two scheduled programs
+    emit("table2", "fused_oldref_ms", f"{t_fused * 1e3:.1f}",
+         "1 dispatch, 1 compiled program")
+    emit("table2", "separate_oldref_ms", f"{t_separate * 1e3:.1f}",
+         "2 dispatches, 2 compiled programs")
+    emit("table2", "trimodel_wall_ratio", f"{t_separate / t_fused:.2f}",
+         "NOTE: the tri-model win the paper credits is structural "
+         "(one scheduled program, shared layout, no per-model resource "
+         "allocation) — single-core CPU wall time may not show it")
+
+    # --- deployment step-time model (Table 2's resource-economy axis) ---
+    # decoupled SYNC  (paper Eq. 2): step = I/n_inf + T/n_train
+    # decoupled ASYNC (paper Eq. 3): step = max(I/n_inf, T/n_train)
+    # With the optimal instance ratio the async pipeline recovers the
+    # perfect-packing ideal (I+T)/N; sync pays the serial sum — this is
+    # exactly the <= 2x bound of Eq. 4 plus the ratio-tuning lever the paper
+    # ships (training:rollout configurable, 1:4 used on NPUs).
+    I, T, N = 4.0, 1.0, 48          # 32B regime: inference-heavy
+    ideal = (I + T) / N
+    best_sync = best_async = None
+    for r in range(1, 12):
+        n_inf = N * r / (r + 1.0)
+        n_tr = N - n_inf
+        s_sync = I / n_inf + T / n_tr
+        s_async = max(I / n_inf, T / n_tr)
+        if best_sync is None or s_sync < best_sync[1]:
+            best_sync = (r, s_sync)
+        if best_async is None or s_async < best_async[1]:
+            best_async = (r, s_async)
+    emit("table2", "ideal_step", f"{ideal:.4f}", "(I+T)/N perfect packing")
+    emit("table2", "decoupled_sync_step", f"{best_sync[1]:.4f}",
+         f"best ratio {best_sync[0]}:1")
+    emit("table2", "decoupled_async_step", f"{best_async[1]:.4f}",
+         f"best ratio {best_async[0]}:1, async/sync speedup "
+         f"{best_sync[1] / best_async[1]:.2f}x (Eq. 4 bound 2.0)")
+    out = {"fused_s": t_fused, "separate_s": t_separate,
+           "ideal_step": ideal, "sync_step": best_sync[1],
+           "async_step": best_async[1],
+           "async_ratio": best_async[0]}
+    save("table2_trimodel", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

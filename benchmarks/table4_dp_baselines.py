@@ -1,0 +1,60 @@
+"""Table 4 analogue: DP-only comparison of sync / periodic-async /
+off-policy-async (AReaL-like, staleness eta=1) on the synthetic math task.
+
+The paper's Table 4 runs 8 A100s with data parallelism only; ours is the
+1-device analogue with REAL jitted inference + training, so the relative
+ordering (async > sync in TPSPD; off-policy async fastest-or-similar but
+stale) reflects pipeline structure, not hardware.
+
+Reported per mode: TPSPD, mean reward of the final iteration, max staleness.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.launch.train import build_pipeline
+
+
+def run_mode(mode: str, iterations: int = 3):
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    rl = RLConfig(mode=mode, batch_prompts=4, group_size=4, micro_batch=4,
+                  num_inference_instances=2, max_prompt_len=32,
+                  max_response_len=12, learning_rate=1e-4,
+                  staleness_eta=1)
+    sched, _ = build_pipeline(cfg, rl)
+    sched.run(1)      # warmup
+    t0 = time.perf_counter()
+    hist = sched.run(iterations)
+    wall = time.perf_counter() - t0
+    tokens = sum(s.trained_tokens for s in hist)
+    return {"tpspd": tokens / wall,
+            "reward": float(np.mean([s.reward_mean for s in hist])),
+            "max_staleness": max(s.max_staleness for s in hist)}
+
+
+def main() -> dict:
+    out = {}
+    for mode in ("sync", "async", "async_offpolicy"):
+        r = run_mode(mode)
+        out[mode] = r
+        emit("table4", f"{mode}_tpspd", f"{r['tpspd']:.1f}",
+             f"reward={r['reward']:.3f} staleness={r['max_staleness']} "
+             "(single CPU core: real inference+training contend, so async"
+             "~=sync here; the pipeline gain appears in table1/table5's "
+             "remote-service view)")
+    # ordering claims of Table 4
+    emit("table4", "async_over_sync",
+         f"{out['async']['tpspd'] / out['sync']['tpspd']:.2f}")
+    emit("table4", "onpolicy_staleness", out["async"]["max_staleness"],
+         "periodic async stays at 0; AReaL-like baseline >= 1")
+    save("table4_dp_baselines", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

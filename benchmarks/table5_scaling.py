@@ -1,0 +1,101 @@
+"""Table 5 / Figure 6 analogue: scaling.
+
+Two axes, matching the paper's scalability section:
+  1. producer-pool scaling (measured): total rollout throughput with 1/2/4
+     simulated inference instances under the async scheduler — the paper's
+     near-linear scaling comes from the producer side scaling independently.
+  2. chip scaling (derived): roofline-model projected TPSPD of the
+     llama3.2-3b train_4k step at 16/32/64-chip data-parallel slices of the
+     dry-run mesh, from the measured per-device FLOPs/bytes and the
+     bandwidth-proportional gradient all-reduce.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.launch.train import build_pipeline
+from repro.rl.rollout import RolloutBatch
+
+T_RESP = 12
+LATENCY = 0.30   # inference-dominated at 1 instance -> scaling visible
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def scripted(prompts, key):
+    G = len(prompts)
+    rng = np.random.RandomState(0)
+    resp = rng.randint(3, 200, size=(G, T_RESP)).astype(np.int32)
+    return RolloutBatch(response_ids=jnp.asarray(resp),
+                        response_len=jnp.full((G,), T_RESP, jnp.int32))
+
+
+def measure_instances(n: int, iterations: int = 2) -> float:
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    rl = RLConfig(mode="async", batch_prompts=8, group_size=4, micro_batch=4,
+                  num_inference_instances=n, max_prompt_len=32,
+                  max_response_len=T_RESP, learning_rate=1e-4)
+    sched, _ = build_pipeline(cfg, rl, scripted_fn=scripted,
+                              latency_fn=lambda out: LATENCY)
+    sched.run(1)
+    t0 = time.perf_counter()
+    hist = sched.run(iterations)
+    wall = time.perf_counter() - t0
+    return sum(s.trained_tokens for s in hist) / wall
+
+
+def projected_tpspd(chips: int, rec: dict, tokens_per_step: int) -> float:
+    """Roofline projection: per-device work from the 256-chip dry-run,
+    rescaled to a data-parallel slice of `chips` devices (per-device batch
+    share grows by 256/chips; gradient all-reduce bytes stay ~constant)."""
+    scale = 256 / chips
+    h = rec["hlo"]
+    compute = h["dot_flops_executed"] * scale / PEAK_FLOPS
+    memory = h["hbm_bytes_executed"] * scale / HBM_BW
+    coll = h["collective_bytes_executed"] / LINK_BW   # grads: size-constant
+    step = max(compute, memory, coll)
+    return tokens_per_step / step / chips
+
+
+def main() -> dict:
+    out = {"instances": {}, "chips": {}}
+    base = None
+    for n in (1, 2, 4):
+        tp = measure_instances(n)
+        out["instances"][n] = tp
+        base = base or tp
+        emit("table5", f"tpspd_{n}_instances", f"{tp:.1f}",
+             f"scaling x{tp / base:.2f}")
+
+    rec_path = os.path.join(os.path.dirname(__file__), "results", "dryrun",
+                            "llama3.2-3b__train_4k__16x16.json")
+    if os.path.exists(rec_path):
+        rec = json.load(open(rec_path))
+        if rec.get("status") == "ok" and "hbm_bytes_executed" in rec["hlo"]:
+            tokens = 256 * 4096
+            prev = None
+            for chips in (16, 32, 64, 128, 256):
+                tp = projected_tpspd(chips, rec, tokens)
+                out["chips"][chips] = tp
+                note = f"x{tp * chips / (prev[1] * prev[0]):.2f} total" \
+                    if prev else ""
+                emit("table5", f"projected_tpspd_{chips}chips",
+                     f"{tp:.0f}", note)
+                prev = (chips, tp)
+    save("table5_scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Shared-Prompt Attention demo (paper §4.3).
+
+Shows, on one GRPO group:
+  1. the packed layout (tokens / positions / segments / loss weights),
+  2. exactness: packed gradients == per-sample gradients (fp32 allclose),
+  3. the Eq. 5 complexity reduction rho measured against its closed form,
+  4. the block-sparse Pallas kernel's live-tile fraction (the structural
+     realisation of rho on the MXU).
+
+Run:
+    PYTHONPATH=src python examples/spa_demo.py [--Lp 256] [--Lr 32] [--K 8]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.core.queue import RolloutGroup
+from repro.core.spa import pack_plain, pack_spa, spa_reduction_ratio
+from repro.kernels.spa_attention import block_map
+from repro.models import init
+from repro.rl.grpo import MicroBatch, make_grad_step, group_advantages
+
+
+def make_group(Lp: int, Lr: int, K: int, seed: int = 0) -> RolloutGroup:
+    rng = np.random.RandomState(seed)
+    return RolloutGroup(
+        uid=0,
+        prompt_ids=rng.randint(3, 250, size=(Lp,)).astype(np.int32),
+        response_ids=rng.randint(3, 250, size=(K, Lr)).astype(np.int32),
+        response_len=np.full((K,), Lr, np.int32),
+        rewards=rng.randint(0, 2, size=(K,)).astype(np.float32),
+        weight_version=0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--Lp", type=int, default=256)
+    ap.add_argument("--Lr", type=int, default=16)
+    ap.add_argument("--K", type=int, default=8)
+    args = ap.parse_args()
+    Lp, Lr, K = args.Lp, args.Lr, args.K
+
+    group = make_group(Lp, Lr, K)
+    adv = np.asarray(group_advantages(jnp.asarray(group.rewards)))
+
+    # --- 1. layout ---------------------------------------------------------
+    mb = pack_spa(group, adv, Lp, Lr, responses_per_row=K)
+    print(f"packed row: S = {mb.tokens.shape[1]} "
+          f"(= (Lp-1) + K*(1+Lr) = {(Lp - 1) + K * (1 + Lr)})")
+    print(f"  segments: prompt=0, responses=1..{K}; "
+          f"positions restart at {Lp - 1} per response")
+
+    # --- 2. exactness ------------------------------------------------------
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    rl = RLConfig(max_prompt_len=Lp, max_response_len=Lr, group_size=K)
+    params = init(jax.random.PRNGKey(0), cfg)
+    grad_step = make_grad_step(cfg, rl)
+    as_mb = lambda m: MicroBatch(*map(jnp.asarray, m[:-2]),
+                                 n_samples=m.n_samples)
+    g_spa, _ = grad_step(params, params, params, as_mb(mb))
+    g_plain, _ = grad_step(params, params, params,
+                           as_mb(pack_plain([group], [adv], Lp, Lr)))
+    err = max(float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree.leaves(g_spa), jax.tree.leaves(g_plain)))
+    print(f"max |grad_SPA - grad_plain| = {err:.2e}  "
+          f"(exact up to fp32 reduction order)")
+
+    # --- 3. Eq. 5 ----------------------------------------------------------
+    rho = spa_reduction_ratio(Lp, Lr, K)
+    print(f"Eq.5 rho = {rho:.3f}  (1/K = {1 / K:.3f}; "
+          f"rho -> 1/K as Lp >> Lr)")
+
+    # --- 4. kernel block sparsity -----------------------------------------
+    pos, seg = jnp.asarray(mb.positions), jnp.asarray(mb.segments)
+    bq = bk = 16
+    S = pos.shape[1]
+    pad = (-S) % bq
+    if pad:
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=2**30 - 1)
+        seg = jnp.pad(seg, ((0, 0), (0, pad)), constant_values=-1)
+    bm = np.asarray(block_map(pos, pos, seg, seg, bq, bk))
+    dense_causal = np.tril(np.ones(bm.shape[1:])).mean()
+    print(f"Pallas block map: live tiles {bm.mean():.3f} "
+          f"vs dense-causal {dense_causal:.3f} "
+          f"-> {dense_causal / max(bm.mean(), 1e-9):.2f}x fewer MXU tiles")
+
+
+if __name__ == "__main__":
+    main()

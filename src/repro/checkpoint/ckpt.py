@@ -1,0 +1,65 @@
+"""Pytree checkpointing: flat .npz shards + a JSON manifest.
+
+Arrays are saved by flattened tree path. bf16 (no native numpy dtype) is
+round-tripped via a uint16 view with a dtype tag in the manifest. Sharded
+arrays are pulled to host with jax.device_get (fully-addressable meshes);
+restore re-places them with the caller's shardings if provided.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+                        for e in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype) if a.dtype != jnp.bfloat16 else "bfloat16"
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)
+        arrays[k] = a
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"dtypes": dtypes, "step": step}, f)
+
+
+def load_checkpoint(path: str, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``. Returns (tree, step)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten(like_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for k in flat_like:
+        a = data[k]
+        if manifest["dtypes"][k] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        if k in flat_shard:
+            out[k] = jax.device_put(a, flat_shard[k])
+        else:
+            out[k] = jnp.asarray(a)
+    # rebuild the tree in like_tree's structure
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    keys = list(_flatten(like_tree).keys())
+    restored = treedef.unflatten([out[k] for k in keys])
+    return restored, manifest.get("step")

@@ -1,0 +1,110 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Module file names are sanitised (dots/dashes -> underscores); the public ids
+match the assignment exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import InputShape, ModelConfig, RLConfig
+from repro.configs.shapes import SHAPES
+
+from repro.configs.mamba2_2p7b import CONFIG as _mamba2
+from repro.configs.hymba_1p5b import CONFIG as _hymba
+from repro.configs.internlm2_20b import CONFIG as _internlm2
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _dsv2lite
+from repro.configs.yi_34b import CONFIG as _yi
+from repro.configs.llama3p2_3b import CONFIG as _llama32
+from repro.configs.deepseek_coder_33b import CONFIG as _dscoder
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3moe
+from repro.configs.whisper_tiny import CONFIG as _whisper
+from repro.configs.internvl2_76b import CONFIG as _internvl
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        _mamba2, _hymba, _internlm2, _dsv2lite, _yi,
+        _llama32, _dscoder, _qwen3moe, _whisper, _internvl,
+    )
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def long_context_variant(cfg: ModelConfig, window: int = 8192) -> ModelConfig:
+    """Sub-quadratic decode variant for the long_500k shape.
+
+    SSM/hybrid archs already decode in O(1) state; full-attention archs get a
+    sliding-window KV cache (DESIGN.md §Arch-applicability).
+    """
+    if cfg.family in ("ssm", "hybrid") or cfg.sliding_window is not None:
+        return cfg
+    return dataclasses.replace(cfg, sliding_window=window)
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """CPU-smoke-testable variant of the same family: 2 layers, d_model<=512,
+    <=4 experts — used by per-arch smoke tests only."""
+    d = min(cfg.d_model, 256)
+    heads = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    kv = min(cfg.num_kv_heads, max(1, heads // 2)) if heads else 0
+    if heads and heads % max(kv, 1):
+        kv = 1
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        num_layers=2,
+        d_model=d,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=64 if heads else 0,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        attn_chunk_size=64,
+        loss_chunk_size=64,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    if cfg.is_moe:
+        kw.update(
+            num_experts=4,
+            num_experts_per_tok=2,
+            num_shared_experts=min(cfg.num_shared_experts, 1),
+            moe_d_ff=128,
+            first_k_dense=min(cfg.first_k_dense, 1),
+            dense_d_ff=256 if cfg.first_k_dense else 0,
+        )
+    if cfg.use_mla:
+        kw.update(kv_lora_rank=64, qk_nope_head_dim=32, qk_rope_head_dim=16,
+                  v_head_dim=32, head_dim=48)
+    if cfg.ssm_state_size:
+        kw.update(
+            ssm_state_size=min(cfg.ssm_state_size, 16),
+            ssm_num_heads=4,
+            ssm_head_dim=32,
+            ssm_expand=2,
+            ssm_chunk_size=16,
+        )
+        # keep d_inner = expand*d divisible by heads*head_dim: 2*256=512=4*128?
+        # 4 heads * 32 head_dim = 128 != 512 -> fix d to make it consistent:
+        kw["d_model"] = 64  # d_inner=128 = 4 heads * 32
+        kw["head_dim"] = 64 if heads else 0
+    if cfg.sliding_window is not None:
+        kw["sliding_window"] = 32
+    if cfg.is_encoder_decoder:
+        kw.update(num_encoder_layers=2, encoder_seq_len=64, max_target_positions=448)
+    if cfg.vision_prefix_len:
+        kw["vision_prefix_len"] = 8
+    return dataclasses.replace(cfg, **kw)
+
+
+__all__ = [
+    "REGISTRY", "ARCH_IDS", "get_config", "reduced_config",
+    "long_context_variant", "ModelConfig", "InputShape", "RLConfig", "SHAPES",
+]

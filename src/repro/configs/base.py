@@ -1,0 +1,219 @@
+"""Model / run configuration for the periodic-asynchrony RL framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. The config
+is a plain frozen dataclass (hashable -> usable as a jit static argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity ----------------------------------------------------------
+    name: str = "unnamed"
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+    source: str = ""       # citation (arXiv id / model card)
+
+    # core transformer ---------------------------------------------------
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0          # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # attention variants --------------------------------------------------
+    sliding_window: Optional[int] = None   # None -> full causal
+    use_mla: bool = False                  # DeepSeek-V2 multi-head latent attention
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0                   # 0 -> full-rank q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # MoE ------------------------------------------------------------------
+    num_experts: int = 0                   # 0 -> dense FFN
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                      # per-expert hidden size
+    first_k_dense: int = 0                 # leading dense layers (DeepSeek-V2)
+    dense_d_ff: int = 0                    # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # SSM (Mamba-2 / SSD) --------------------------------------------------
+    ssm_state_size: int = 0                # N; 0 -> no ssm path
+    ssm_num_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk_size: int = 128
+    ssm_num_groups: int = 1
+
+    # hybrid (Hymba): run attention AND ssm in parallel inside each block
+    hybrid: bool = False
+
+    # encoder/decoder (Whisper) ---------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 1500            # precomputed frame embeddings (stub frontend)
+    max_target_positions: int = 448
+
+    # VLM (InternVL) ----------------------------------------------------------
+    vision_prefix_len: int = 0             # precomputed patch embeddings (stub frontend)
+
+    # numerics -----------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    # use the Pallas block-sparse flash kernel for training/prefill
+    # attention instead of the pure-JAX chunked path (production TPU path;
+    # on CPU it runs in interpret mode — correct but slow, tests only)
+    use_pallas_attention: bool = False
+    # activation checkpointing (paper Table 7: gradient checkpointing enabled)
+    remat: bool = True
+    # attention chunking for the pure-JAX flash path
+    attn_chunk_size: int = 512
+    # sequence chunk for the fused logp/loss scan
+    loss_chunk_size: int = 512
+
+    # ---------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model if self.ssm_state_size else 0
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """True if decode cost/state is sub-linear in context (SSM state or
+        sliding-window KV) -> eligible for the long_500k shape."""
+        if self.is_encoder_decoder:
+            return False  # whisper decoder context is 448; see DESIGN.md
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head), for
+        MODEL_FLOPS = 6 N D book-keeping."""
+        d = self.d_model
+        n = 0
+        n += self.vocab_size * d                      # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * d                  # lm head
+        L = self.num_layers
+
+        def attn_params() -> int:
+            if self.use_mla:
+                p = d * self.kv_lora_rank + d * self.qk_rope_head_dim
+                p += self.kv_lora_rank * self.num_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                if self.q_lora_rank:
+                    p += d * self.q_lora_rank + self.q_lora_rank * self.num_heads * (
+                        self.qk_nope_head_dim + self.qk_rope_head_dim)
+                else:
+                    p += d * self.num_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                p += self.num_heads * self.v_head_dim * d
+                return p
+            hd = self.head_dim
+            return d * (self.num_heads + 2 * self.num_kv_heads) * hd + self.num_heads * hd * d
+
+        def dense_ffn(ff: int) -> int:
+            return 3 * d * ff  # swiglu
+
+        def ssm_params() -> int:
+            di = self.ssm_d_inner
+            G, N, H = self.ssm_num_groups, self.ssm_state_size, self.ssm_num_heads
+            p = d * (2 * di + 2 * G * N + H)          # in_proj [z,x,B,C,dt]
+            p += self.ssm_conv_width * (di + 2 * G * N)  # conv
+            p += H * 2 + di                           # A_log, D, dt_bias-ish + norm
+            p += di * d                               # out_proj
+            return p
+
+        per_layer = 2 * d  # norms
+        if self.family == "ssm":
+            per_layer += ssm_params()
+        else:
+            per_layer += attn_params()
+            if self.hybrid:
+                per_layer += ssm_params() + 2 * d
+        n_moe_layers = 0
+        if self.is_moe:
+            n_moe_layers = L - self.first_k_dense
+            n += self.first_k_dense * dense_ffn(self.dense_d_ff or self.d_ff)
+            n += n_moe_layers * (
+                self.num_experts * 3 * d * self.moe_d_ff
+                + self.num_shared_experts * 3 * d * self.moe_d_ff
+                + d * self.num_experts  # router
+            )
+        elif self.family != "ssm":
+            per_layer += dense_ffn(self.d_ff)
+        n += L * per_layer
+        if self.is_encoder_decoder:
+            # encoder blocks: self-attn + ffn; decoder adds cross-attn
+            enc = self.num_encoder_layers * (attn_params() + dense_ffn(self.d_ff) + 2 * d)
+            n += enc + L * (attn_params() + d)  # cross attention + norm
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: routed top-k + shared)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        n_moe_layers = self.num_layers - self.first_k_dense
+        all_experts = n_moe_layers * self.num_experts * 3 * d * self.moe_d_ff
+        active = n_moe_layers * self.num_experts_per_tok * 3 * d * self.moe_d_ff
+        return int(full - all_experts + active)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+@dataclasses.dataclass(frozen=True)
+class RLConfig:
+    """GRPO / periodic-asynchrony run configuration (paper Tables 7-9)."""
+    algo: str = "grpo"                 # grpo | ppo
+    group_size: int = 32               # answers per prompt (G)
+    batch_prompts: int = 32            # prompts per iteration (N)
+    micro_batch: int = 1               # samples per micro-step (m)
+    kl_coef: float = 0.02
+    clip_eps_low: float = 0.2
+    clip_eps_high: float = 0.2
+    temperature: float = 1.0
+    top_p: float = 1.0
+    learning_rate: float = 1e-6
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    max_prompt_len: int = 128
+    max_response_len: int = 128
+    shared_prompt_attention: bool = False
+    # beyond-paper: round SPA slot stride/prompt block up to the Pallas
+    # tile size (128) so response x response tiles prune exactly (see
+    # core/spa.py pack_spa and EXPERIMENTS.md SPerf). 0 = paper layout.
+    spa_align: int = 0
+    mode: str = "async"                # sync | async | async_offpolicy
+    staleness_eta: int = 1             # for the AReaL-like off-policy baseline
+    num_inference_instances: int = 4   # train:rollout ratio (paper: 1:4)
+    seed: int = 0

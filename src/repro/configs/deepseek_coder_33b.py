@@ -1,0 +1,19 @@
+"""deepseek-coder-33b — llama-arch dense GQA [arXiv:2401.14196].
+
+[dense] 62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    source="arXiv:2401.14196",
+    num_layers=62,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32256,
+    rope_theta=1e5,
+)

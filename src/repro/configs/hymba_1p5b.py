@@ -1,0 +1,31 @@
+"""hymba-1.5b — parallel attention + mamba heads [arXiv:2411.13676].
+
+[hybrid] 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Attention and SSM heads run in parallel inside each block and their
+(normalised) outputs are averaged. Hymba uses sliding-window attention on
+most layers; we adopt SWA(1024) uniformly (adaptation noted in DESIGN.md).
+d_inner = 2*1600 = 3200, ssm head_dim 64 -> 50 ssm heads.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="arXiv:2411.13676",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    sliding_window=1024,
+    hybrid=True,
+    ssm_state_size=16,
+    ssm_num_heads=50,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_chunk_size=128,
+    ssm_num_groups=1,
+)

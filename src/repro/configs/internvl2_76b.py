@@ -1,0 +1,24 @@
+"""internvl2-76b — InternViT (STUB frontend) + llama3-70b-class LM backbone
+[arXiv:2404.16821].
+
+[vlm] 80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+The vision encoder + projector are stubs: input_specs() provides precomputed
+patch embeddings (B, 256, 8192) prepended to the token sequence; the language
+backbone is real.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    vision_prefix_len=256,
+    rope_theta=5e5,
+)

@@ -1,0 +1,26 @@
+"""mamba2-2.7b — SSD (state-space duality) [arXiv:2405.21060].
+
+[ssm] 64L d_model=2560 (attn-free) d_ff=0 vocab=50280, ssm_state=128.
+d_inner = 2*2560 = 5120, head_dim 64 -> 80 ssm heads, 1 group, conv width 4.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state_size=128,
+    ssm_num_heads=80,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_chunk_size=128,
+    ssm_num_groups=1,
+    tie_embeddings=True,
+)

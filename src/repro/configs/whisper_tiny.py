@@ -1,0 +1,27 @@
+"""whisper-tiny — encoder-decoder with conv frontend STUB [arXiv:2212.04356].
+
+[audio] 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+The mel-spectrogram + conv feature extractor is a stub: input_specs()
+provides precomputed frame embeddings (B, 1500, 384); the transformer
+encoder + causal decoder with cross-attention are real.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    num_encoder_layers=4,
+    encoder_seq_len=1500,
+    max_target_positions=448,
+    tie_embeddings=True,
+    rope_theta=1e4,
+)

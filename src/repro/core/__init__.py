@@ -1,0 +1,27 @@
+"""Periodic asynchrony — the paper's contribution as a composable library.
+
+Pipeline wiring (paper Figure 1):
+    PromptLoader -> TemporaryDataGenerator -> InferencePool (producer side)
+                         |  RolloutQueue  |
+    PeriodicAsyncScheduler (consumer: tri-model GRPO + accumulation)
+"""
+from repro.core.cbatch import Completed, ContinuousBatchingSampler
+from repro.core.engine import InferenceInstance, InferencePool
+from repro.core.generator import TemporaryDataGenerator
+from repro.core.onpolicy import OnPolicyMonitor, OnPolicyViolation
+from repro.core.prefix import (broadcast_states, prompt_states,
+                               shared_prompt_logprobs, zero_ssm_states)
+from repro.core.queue import RolloutGroup, RolloutQueue
+from repro.core.scheduler import IterationStats, PeriodicAsyncScheduler
+from repro.core.spa import pack_plain, pack_spa, spa_reduction_ratio
+from repro.core.trimodel import TriModelState
+
+__all__ = [
+    "Completed", "ContinuousBatchingSampler",
+    "InferenceInstance", "InferencePool", "TemporaryDataGenerator",
+    "OnPolicyMonitor", "OnPolicyViolation", "RolloutGroup", "RolloutQueue",
+    "IterationStats", "PeriodicAsyncScheduler", "pack_plain", "pack_spa",
+    "spa_reduction_ratio", "TriModelState",
+    "shared_prompt_logprobs", "prompt_states", "broadcast_states",
+    "zero_ssm_states",
+]

@@ -1,0 +1,167 @@
+"""Continuous batching (paper §4.2.1: the inference service "processes them
+efficiently via continuous batching") — the slot-scheduler the async
+pipeline's >2x practical speedup leans on: without it, the batch is gated by
+its slowest rollout.
+
+JAX-native design with fixed shapes:
+
+  * a fixed pool of B slots shares one KV/SSM cache of length ``max_ctx``;
+  * ``_prefill_row`` (jit) runs ONE prompt and splices its row cache +
+    last-token logits into the pool at ``slot``;
+  * ``_decode_step`` (jit) advances ALL slots by one token with PER-ROW
+    cache offsets (models/attention.py one-hot row writes) — finished or
+    empty slots carry along masked;
+  * the host loop admits pending requests into freed slots every step, so
+    short requests drain and new ones start while long ones keep decoding —
+    completion order, not submission order.
+
+Requests are emitted in completion order with their generation step, which
+is exactly what the temporary data generator's queue consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import Tokenizer
+from repro.models import forward_hidden, init_caches
+from repro.models.layers import lm_head_weight
+from repro.rl.rollout import _sample_token
+
+
+@dataclasses.dataclass
+class Completed:
+    request_id: int
+    response_ids: np.ndarray     # (n,) int32, includes EOS if hit
+    finish_step: int             # engine step at completion (completion order)
+
+
+class ContinuousBatchingSampler:
+    def __init__(self, cfg: ModelConfig, *, num_slots: int,
+                 max_prompt_len: int, max_new_tokens: int,
+                 temperature: float = 1.0, top_p: float = 1.0,
+                 eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD):
+        assert not cfg.is_encoder_decoder and not cfg.vision_prefix_len, \
+            "continuous batching engine targets decoder-only LMs"
+        self.cfg = cfg
+        self.B = num_slots
+        self.Lp = max_prompt_len
+        self.T = max_new_tokens
+        self.max_ctx = max_prompt_len + max_new_tokens
+        self.temperature = temperature
+        self.top_p = top_p
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self._prefill = jax.jit(self._prefill_row, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
+
+    # -- jitted cores -------------------------------------------------------
+
+    def _prefill_row(self, params, caches, tokens, length, slot):
+        """tokens: (1, Lp) right-padded; splice row cache into ``slot``."""
+        cfg = self.cfg
+        ar = jnp.arange(self.Lp, dtype=jnp.int32)[None, :]
+        real = ar < length
+        positions = jnp.where(real, ar, 0).astype(jnp.int32)
+        segments = jnp.where(real, 0, -1).astype(jnp.int32)
+        row = init_caches(params, cfg, 1, self.max_ctx)
+        h, row, _, _ = forward_hidden(params, cfg, tokens,
+                                      positions=positions, segments=segments,
+                                      caches=row, cache_offset=0)
+        W = lm_head_weight(params["embed"], cfg)
+        h_last = jnp.take_along_axis(
+            h, (length - 1)[None, :, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
+                            W.astype(jnp.float32))
+        # splice the single-row cache into the pool at `slot` — every cache
+        # leaf has layout (layers, batch, ...), so update along axis 1.
+        def splice(pool, r):
+            return jax.lax.dynamic_update_slice_in_dim(pool, r, slot, axis=1)
+        caches = jax.tree.map(splice, caches, row)
+        return caches, logits[0]
+
+    def _decode_step(self, params, caches, logits, offsets, active, key):
+        """One token for every slot. logits: (B, V); offsets: (B,);
+        active: (B,) bool. Returns (tok, caches, logits', offsets')."""
+        cfg = self.cfg
+        B = self.B
+        key, k_s = jax.random.split(key)
+        tok = _sample_token(k_s, logits, self.temperature, self.top_p)
+        tok = jnp.where(active, tok, self.pad_id)
+        positions = jnp.where(active, offsets, 0).astype(jnp.int32)[:, None]
+        segments = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
+        h, caches, _, _ = forward_hidden(
+            params, cfg, tok[:, None], positions=positions,
+            segments=segments, caches=caches,
+            cache_offset=jnp.where(active, offsets, 0).astype(jnp.int32))
+        W = lm_head_weight(params["embed"], cfg)
+        logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                                 W.astype(jnp.float32))
+        return tok, caches, logits_next, offsets + active.astype(jnp.int32)
+
+    # -- host-side scheduler --------------------------------------------------
+
+    def run(self, params, prompts: List[np.ndarray], key,
+            max_new_per_request: Optional[List[int]] = None
+            ) -> List[Completed]:
+        """Serve all prompts through the slot pool; returns completions in
+        completion order. ``max_new_per_request`` caps each request's
+        generation individually (rollout lengths vary in RL; a freed slot
+        admits the next request immediately)."""
+        cfg, B = self.cfg, self.B
+        limits = (max_new_per_request if max_new_per_request is not None
+                  else [self.T] * len(prompts))
+        pending = list(enumerate(prompts))
+        caches = init_caches(params, cfg, B, self.max_ctx)
+        logits = jnp.zeros((B, cfg.vocab_size), jnp.float32)
+        offsets = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        slot_req = [-1] * B
+        slot_toks: List[list] = [[] for _ in range(B)]
+        done: List[Completed] = []
+        step = 0
+
+        while pending or active.any():
+            # admit pending requests into free slots
+            for s in range(B):
+                if active[s] or not pending:
+                    continue
+                rid, p = pending.pop(0)
+                p = np.asarray(p, np.int32)[: self.Lp]
+                row = np.full((1, self.Lp), self.pad_id, np.int32)
+                row[0, : len(p)] = p
+                caches, lg = self._prefill(
+                    params, caches, jnp.asarray(row),
+                    jnp.asarray([len(p)], jnp.int32), s)
+                logits = logits.at[s].set(lg)
+                offsets[s] = len(p)
+                active[s] = True
+                slot_req[s] = rid
+                slot_toks[s] = []
+            # one decode step for every slot
+            key, k = jax.random.split(key)
+            tok, caches, logits, off_new = self._decode(
+                params, caches, logits, jnp.asarray(offsets),
+                jnp.asarray(active), k)
+            tok = np.asarray(tok)
+            offsets = np.array(off_new)  # writable copy
+            step += 1
+            for s in range(B):
+                if not active[s]:
+                    continue
+                slot_toks[s].append(int(tok[s]))
+                if (tok[s] == self.eos_id
+                        or len(slot_toks[s]) >= min(self.T,
+                                                    limits[slot_req[s]])):
+                    done.append(Completed(
+                        request_id=slot_req[s],
+                        response_ids=np.asarray(slot_toks[s], np.int32),
+                        finish_step=step))
+                    active[s] = False
+        return done

@@ -1,0 +1,97 @@
+"""Inference service: a pool of independent engine instances with
+iteration-boundary weight synchronisation (the decoupled deployment of
+paper §4.1 — 'vLLM for inference, Megatron for training').
+
+Two execution modes per instance:
+  * real   — the jitted Sampler actually generates tokens (JAX releases the
+             GIL during compute, so producer threads overlap with the
+             consumer's training compute);
+  * simulated — the instance sleeps according to a latency model and returns
+             scripted responses. This is the trainer's-eye view of a REMOTE
+             inference deployment (inference on separate devices), and is
+             what the throughput benchmarks use so results reflect pipeline
+             structure rather than this container's single CPU core.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.rl.rollout import RolloutBatch, Sampler
+
+
+class InferenceInstance:
+    def __init__(self, inst_id: int, cfg: ModelConfig, sampler: Optional[Sampler],
+                 latency_fn: Optional[Callable] = None,
+                 scripted_fn: Optional[Callable] = None):
+        self.inst_id = inst_id
+        self.cfg = cfg
+        self.sampler = sampler
+        self.latency_fn = latency_fn
+        self.scripted_fn = scripted_fn
+        self._params = None
+        self._version = -1
+        self._lock = threading.Lock()  # one request in flight per instance
+        self.busy_time = 0.0
+
+    def sync_weights(self, params, version: int) -> None:
+        # device_put models the trainer -> rollout-worker weight broadcast
+        self._params = jax.tree.map(jax.device_put, params)
+        self._version = version
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def generate_group(self, prompts: List[np.ndarray], key) -> tuple:
+        """Returns (RolloutBatch, weight_version). Serialised per instance —
+        models single-instance occupancy / continuous batching slot limits."""
+        with self._lock:
+            t0 = time.perf_counter()
+            version = self._version
+            if self.scripted_fn is not None:
+                out = self.scripted_fn(prompts, key)
+                if self.latency_fn is not None:
+                    time.sleep(self.latency_fn(out))
+            else:
+                assert self.sampler is not None and self._params is not None
+                out = self.sampler.generate(self._params, prompts, key)
+                jax.block_until_ready(out.response_ids)
+            self.busy_time += time.perf_counter() - t0
+            return out, version
+
+
+class InferencePool:
+    """Evenly distributes incoming prompt groups across instances
+    (paper §4.2.1: 'evenly distributes incoming prompts across available
+    instances')."""
+
+    def __init__(self, instances: List[InferenceInstance]):
+        self.instances = instances
+        self._rr = 0
+        self._rr_lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self.instances)
+
+    def pick(self) -> InferenceInstance:
+        with self._rr_lock:
+            inst = self.instances[self._rr % len(self.instances)]
+            self._rr += 1
+            return inst
+
+    def sync_weights(self, params, version: int) -> None:
+        for inst in self.instances:
+            inst.sync_weights(params, version)
+
+    def generate_group(self, prompts, key):
+        return self.pick().generate_group(prompts, key)
+
+    def reset_stats(self) -> None:
+        for inst in self.instances:
+            inst.busy_time = 0.0

@@ -1,0 +1,75 @@
+"""The temporary data generator — the paper's core new component (§4.2):
+a background thread running parallel worker 'coroutines' that dispatch
+prompts to the inference service, score returned rollouts with the reward
+module, and enqueue (advantage, rollout) into the shared queue.
+
+It sits between the data loader and the trainer and is what converts the
+synchronous pipeline into a producer-consumer one without touching the RL
+algorithm.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.engine import InferencePool
+from repro.core.queue import RolloutGroup, RolloutQueue
+
+
+class TemporaryDataGenerator:
+    def __init__(self, pool: InferencePool, queue: RolloutQueue,
+                 reward_fn: Callable, group_size: int,
+                 num_workers: Optional[int] = None):
+        self.pool = pool
+        self.queue = queue
+        self.reward_fn = reward_fn
+        self.group_size = group_size
+        self.num_workers = num_workers or max(2, len(pool))
+        self._threads: list = []
+
+    # ------------------------------------------------------------------
+    def submit_batch(self, batch: List[tuple], base_key,
+                     weight_version: int) -> None:
+        """batch: list of (problem, prompt_ids). Registers all groups with
+        the queue *before* the background thread starts, then dispatches
+        asynchronously (Algorithm 1 line 5)."""
+        self.queue.register_pending(len(batch))
+        keys = jax.random.split(base_key, len(batch))
+
+        def produce_one(item, key):
+            problem, prompt_ids = item
+            prompts = [prompt_ids] * self.group_size          # G rollouts/group
+            try:
+                out, version = self.pool.generate_group(prompts, key)
+                resp = np.asarray(out.response_ids)
+                lens = np.asarray(out.response_len)
+                rewards = np.asarray(
+                    [self.reward_fn(resp[g, : lens[g]], problem.answer)
+                     for g in range(self.group_size)], np.float32)
+                self.queue.put(RolloutGroup(
+                    uid=problem.uid, prompt_ids=np.asarray(prompt_ids, np.int32),
+                    response_ids=resp, response_len=lens, rewards=rewards,
+                    weight_version=version, answer=problem.answer))
+            except BaseException as exc:  # surface in the consumer, no deadlock
+                self.queue.put_error(exc)
+                raise
+
+        def run():
+            with ThreadPoolExecutor(max_workers=self.num_workers) as ex:
+                futures = [ex.submit(produce_one, item, k)
+                           for item, k in zip(batch, keys)]
+                for f in futures:
+                    f.result()  # surface exceptions
+
+        th = threading.Thread(target=run, daemon=True)
+        self._threads.append(th)
+        th.start()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for th in self._threads:
+            th.join(timeout=timeout)
+        self._threads = [t for t in self._threads if t.is_alive()]

@@ -1,0 +1,84 @@
+"""Prefix-state sharing — the SSM analogue of Shared-Prompt Attention
+(DESIGN.md §Arch-applicability).
+
+SPA is an *attention-mask* optimisation and cannot apply to attention-free
+architectures. For SSMs the equivalent holds through the state: all K
+responses of a GRPO group continue from the SAME prompt state, so the
+prompt's O(Lp) recurrent scan is computed ONCE and its (SSD state, conv
+tail) pair is broadcast to the K response continuations.
+
+Complexity: standard per-sample training computes the prompt K times —
+O(K·(Lp+Lr)) SSD steps; prefix sharing computes O(Lp + K·Lr): the same
+K-fold prompt-compute elimination as SPA's Eq. 5, in the linear-time
+regime. Exactness: the continuation is token-exact (`tests/test_prefix.py`)
+— the conv boundary is carried explicitly (pre-conv tail), and gradients
+flow through the shared prompt pass once, which equals the sum of the K
+per-sample prompt gradients by linearity of autodiff accumulation.
+
+Layout convention matches ``core/spa.py``: each response row starts with a
+copy of the LAST prompt token (its hidden state predicts r_0), so the
+prompt pass covers prompt[:-1].
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_hidden, token_logprobs
+from repro.models.ssm import make_ssm_cache
+
+
+def zero_ssm_states(params: dict, cfg: ModelConfig, batch: int) -> dict:
+    """Per-layer zero continuation states {state, conv}, stacked over the
+    scanned body layers (leading L axis) — the body_init trigger for
+    forward_hidden(initial_ssm_states=...)."""
+    assert cfg.family == "ssm", "prefix-state sharing targets SSM archs"
+    n_body = cfg.num_layers
+    one = make_ssm_cache(cfg, batch, jnp.float32)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_body,) + a.shape), one)
+
+
+def prompt_states(params: dict, cfg: ModelConfig, prompt_ids: jax.Array
+                  ) -> Tuple[jax.Array, dict]:
+    """Run the shared prompt ONCE (minus its last token). prompt_ids:
+    (1, Lp). Returns (last_hidden (1, d), per-layer states pytree)."""
+    B, Lp = prompt_ids.shape
+    h, _, _, states = forward_hidden(
+        params, cfg, prompt_ids[:, :-1],
+        initial_ssm_states=zero_ssm_states(params, cfg, B))
+    return h[:, -1], states
+
+
+def broadcast_states(states: dict, k: int) -> dict:
+    """(L, 1, ...) per-layer states -> (L, K, ...) for K response rows."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, a.shape[:1] + (k,) + a.shape[2:]),
+        states)
+
+
+def shared_prompt_logprobs(params: dict, cfg: ModelConfig,
+                           prompt_ids: jax.Array, resp_rows: jax.Array,
+                           labels: jax.Array) -> jax.Array:
+    """Per-token log-probs for K responses sharing one prompt.
+
+    prompt_ids: (1, Lp); resp_rows: (K, 1+Lr) where resp_rows[:, 0] ==
+    prompt_ids[0, -1] (the SPA row convention); labels: (K, 1+Lr) with
+    labels[:, i] = the token predicted FROM position i (r_0..r_{Lr-1}, then
+    anything/ignored at the final slot).
+
+    Returns (K, 1+Lr) f32 log-probs; caller applies its own loss mask.
+    """
+    B, Lp = prompt_ids.shape
+    K, S = resp_rows.shape
+    _, states = prompt_states(params, cfg, prompt_ids)
+    states_k = broadcast_states(states, K)
+    positions = jnp.broadcast_to(
+        jnp.arange(Lp - 1, Lp - 1 + S, dtype=jnp.int32)[None], (K, S))
+    h, _, _, _ = forward_hidden(
+        params, cfg, resp_rows, positions=positions,
+        initial_ssm_states=states_k)
+    return token_logprobs(params, cfg, h, labels)

@@ -1,0 +1,211 @@
+"""Periodic-asynchrony scheduler — Algorithm 1 of the paper.
+
+Modes:
+  * ``sync``            — paper's synchronous decoupled baseline: dispatch all
+                          rollouts, wait for the full batch, then train in the
+                          original prompt order (Figure 3a).
+  * ``async``           — periodic asynchrony (ours): the consumer trains on
+                          rollouts in completion-time order while the producer
+                          is still generating; weights sync only at iteration
+                          boundaries (Figure 3b). Strictly on-policy —
+                          asserted at runtime per group.
+  * ``async_offpolicy`` — AReaL-like fully-asynchronous baseline with
+                          staleness threshold eta: the producer runs ahead of
+                          the trainer by up to eta iterations, so consumed
+                          rollouts may be stale (off-policy).
+
+TPSPD (tokens trained per second per device) is the paper's primary metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.core.generator import TemporaryDataGenerator
+from repro.core.onpolicy import OnPolicyMonitor
+from repro.core.queue import RolloutGroup, RolloutQueue
+from repro.core.spa import PAD, pack_plain, pack_spa
+from repro.core.trimodel import TriModelState
+from repro.optim.accumulate import GradAccumulator
+from repro.rl.grpo import (MicroBatch, group_advantages, make_apply_update,
+                           make_grad_step)
+
+
+@dataclasses.dataclass
+class IterationStats:
+    iteration: int
+    wall_time: float
+    infer_time: float
+    train_time: float
+    trained_tokens: int
+    reward_mean: float
+    tpspd: float
+    max_staleness: int
+    metrics: dict
+
+
+def _pad_rows(mb: MicroBatch, m: int) -> MicroBatch:
+    """Pad a micro-batch to exactly m rows (dummy rows carry zero weight) so
+    jitted step shapes stay static."""
+    have = mb.tokens.shape[0]
+    if have == m:
+        return mb
+    pad_n = m - have
+    S = mb.tokens.shape[1]
+    z_i = np.zeros((pad_n, S), np.int32)
+    z_f = np.zeros((pad_n, S), np.float32)
+    return MicroBatch(
+        tokens=np.concatenate([mb.tokens, np.full((pad_n, S), PAD, np.int32)]),
+        labels=np.concatenate([mb.labels, z_i]),
+        positions=np.concatenate([mb.positions, z_i]),
+        segments=np.concatenate([mb.segments, np.full((pad_n, S), -1, np.int32)]),
+        loss_mask=np.concatenate([mb.loss_mask, z_f]),
+        advantages=np.concatenate([mb.advantages, z_f]),
+        n_samples=mb.n_samples,
+    )
+
+
+class PeriodicAsyncScheduler:
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, tri: TriModelState,
+                 generator: TemporaryDataGenerator, queue: RolloutQueue,
+                 loader, *, num_devices: int = 1):
+        self.cfg = cfg
+        self.rl = rl
+        self.tri = tri
+        self.generator = generator
+        self.queue = queue
+        self.loader = loader
+        self.num_devices = num_devices
+        self.grad_step = make_grad_step(cfg, rl)
+        self.apply_update = make_apply_update(cfg, rl)
+        self.monitor = OnPolicyMonitor(strict=(rl.mode != "async_offpolicy"))
+        self.history: List[IterationStats] = []
+        self._batches = None
+        self._next_batch_idx = 0
+
+    # ------------------------------------------------------------------
+    def _micro_batches(self, group: RolloutGroup):
+        adv = np.asarray(group_advantages(group.rewards))
+        rl = self.rl
+        if rl.shared_prompt_attention:
+            if self.cfg.attention_free:
+                # SPA is an attention-MASK optimisation: packed responses
+                # would leak into each other through an SSM's recurrence.
+                # The state-space analogue is prefix-state sharing
+                # (core/prefix.py) — see DESIGN.md §Arch-applicability.
+                raise ValueError(
+                    f"{self.cfg.name} is attention-free; shared-prompt "
+                    "attention packing does not apply — use prefix-state "
+                    "sharing (repro.core.prefix) instead")
+            mb = pack_spa(group, adv, rl.max_prompt_len, rl.max_response_len,
+                          responses_per_row=rl.group_size,
+                          align=rl.spa_align)
+            yield _pad_rows(mb, mb.tokens.shape[0]), float(mb.n_samples)
+        else:
+            mb = pack_plain([group], [adv], rl.max_prompt_len,
+                            rl.max_response_len)
+            m = rl.micro_batch
+            rows = mb.tokens.shape[0]
+            for lo in range(0, rows, m):
+                hi = min(lo + m, rows)
+                sub = MicroBatch(*(a[lo:hi] for a in mb[:-2]),
+                                 n_samples=np.float32(hi - lo))
+                yield _pad_rows(sub, m), float(hi - lo)
+
+    def _train_group(self, group: RolloutGroup, acc: GradAccumulator) -> int:
+        tokens = 0
+        for mb, weight in self._micro_batches(group):
+            grads, metrics = self.grad_step(self.tri.policy, self.tri.old,
+                                            self.tri.ref, mb)
+            jax.block_until_ready(jax.tree.leaves(grads)[0])
+            acc.add(grads, weight)
+            tokens += int((np.asarray(mb.tokens) != PAD).sum())
+        return tokens
+
+    def _finish_iteration(self, acc: GradAccumulator) -> None:
+        self.tri.refresh_old()                       # line 10
+        new_params, new_opt, _ = self.apply_update(
+            self.tri.policy, self.tri.opt, acc.mean())
+        jax.block_until_ready(jax.tree.leaves(new_params)[0])
+        self.tri.apply_update(new_params, new_opt)   # line 11
+
+    # ------------------------------------------------------------------
+    def run(self, num_iterations: int, *, key=None) -> List[IterationStats]:
+        """Run ``num_iterations`` and return THEIR stats (self.history keeps
+        the full cumulative record across calls)."""
+        start = len(self.history)
+        key = jax.random.PRNGKey(self.rl.seed + start) if key is None else key
+        batches = self.loader.batches(num_iterations +
+                                      (self.rl.staleness_eta
+                                       if self.rl.mode == "async_offpolicy" else 0))
+        batches = list(batches)
+        mode = self.rl.mode
+        pool = self.generator.pool
+        next_submit = 0
+
+        for t in range(num_iterations):
+            it_start = time.perf_counter()
+            acc = GradAccumulator()
+            rewards_seen: List[float] = []
+            trained_tokens = 0
+            self.monitor.max_staleness_seen = 0
+
+            if mode in ("sync", "async"):
+                # Algorithm 1 line 3: wait until Q empty, then sync weights
+                self.queue.wait_empty()
+                pool.sync_weights(self.tri.policy, self.tri.version)
+                key, k_t = jax.random.split(key)
+                self.generator.submit_batch(batches[t], k_t, self.tri.version)
+                next_submit = t + 1
+                n_expect = len(batches[t])
+                if mode == "sync":
+                    self.generator.join()            # full-batch barrier
+                train_t0 = time.perf_counter()
+                groups = []
+                for _ in range(n_expect):
+                    groups.append(self.queue.get())
+                    if mode == "async":
+                        g = groups[-1]
+                        self.monitor.check(g, self.tri.version)
+                        rewards_seen.extend(g.rewards.tolist())
+                        trained_tokens += self._train_group(g, acc)
+                if mode == "sync":
+                    groups.sort(key=lambda g: g.uid)  # original prompt order
+                    for g in groups:
+                        self.monitor.check(g, self.tri.version)
+                        rewards_seen.extend(g.rewards.tolist())
+                        trained_tokens += self._train_group(g, acc)
+            else:  # async_offpolicy (AReaL-like, staleness <= eta)
+                pool.sync_weights(self.tri.policy, self.tri.version)
+                while (next_submit <= t + self.rl.staleness_eta
+                       and next_submit < len(batches)):
+                    key, k_t = jax.random.split(key)
+                    self.generator.submit_batch(batches[next_submit], k_t,
+                                                self.tri.version)
+                    next_submit += 1
+                train_t0 = time.perf_counter()
+                for _ in range(len(batches[t])):
+                    g = self.queue.get()
+                    self.monitor.check(g, self.tri.version)
+                    rewards_seen.extend(g.rewards.tolist())
+                    trained_tokens += self._train_group(g, acc)
+
+            self._finish_iteration(acc)
+            wall = time.perf_counter() - it_start
+            train_time = time.perf_counter() - train_t0
+            stats = IterationStats(
+                iteration=t, wall_time=wall,
+                infer_time=wall - train_time if mode == "sync" else wall,
+                train_time=train_time, trained_tokens=trained_tokens,
+                reward_mean=float(np.mean(rewards_seen)) if rewards_seen else 0.0,
+                tpspd=trained_tokens / wall / self.num_devices,
+                max_staleness=self.monitor.max_staleness_seen,
+                metrics={})
+            self.history.append(stats)
+        self.generator.join()
+        return self.history[start:]

@@ -1,0 +1,41 @@
+"""Unified tri-model state (paper §4.2.1, Figure 2).
+
+Policy, old-policy and reference parameters share one layout (identical
+pytrees, identical shardings). ``refresh_old`` implements Algorithm 1
+line 10 — the current policy weights move to the old policy *before* the
+optimizer update is applied, so the old policy always reflects the
+distribution that generated the current batch's rollouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.optim.adam import AdamState, adam_init
+
+
+@dataclasses.dataclass
+class TriModelState:
+    policy: Any
+    old: Any
+    ref: Any
+    opt: AdamState
+    version: int = 0          # iteration t whose weights the policy holds
+
+    @classmethod
+    def create(cls, params) -> "TriModelState":
+        copy = lambda t: jax.tree.map(lambda a: a + 0, t)  # materialised copies
+        return cls(policy=params, old=copy(params), ref=copy(params),
+                   opt=adam_init(params), version=0)
+
+    def refresh_old(self) -> None:
+        """Algorithm 1 line 10: old <- policy (pre-update)."""
+        self.old = self.policy
+
+    def apply_update(self, new_params, new_opt) -> None:
+        """Algorithm 1 line 11: the accumulated-gradient update."""
+        self.policy = new_params
+        self.opt = new_opt
+        self.version += 1

@@ -1,0 +1,5 @@
+from repro.data.tokenizer import Tokenizer
+from repro.data.tasks import ArithmeticTask
+from repro.data.loader import PromptLoader
+
+__all__ = ["Tokenizer", "ArithmeticTask", "PromptLoader"]

@@ -1,0 +1,107 @@
+"""Flash-decode Pallas kernel: one new token's GQA attention against a long
+KV cache, blocked over cache length with an online-softmax accumulator in
+VMEM — the serving-side hot spot of the decoupled deployment (decode_32k /
+long_500k shapes).
+
+Layout: grid = (B, Hkv, nL) with the cache-length axis innermost; the
+(G, Dv) accumulator for the Hkv head's G query heads lives in VMEM scratch.
+Invalid cache slots carry pos >= 2**30 and are masked by the causal rule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref,
+            o_ref,
+            acc_ref, m_ref, l_ref,
+            *, scale: float, window: Optional[int], nL: int):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (bL, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, bL)
+    qp = qpos_ref[0]                               # scalar-ish (1,)
+    kp = kpos_ref[0]                               # (bL,)
+    ok = kp[None, :] <= qp[:, None]
+    if window is not None:
+        ok &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (bL, Dv)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(li == nL - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_l", "interpret"))
+def decode_attention(q, k, v, kv_pos, q_pos, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     block_l: int = 256, interpret: bool = False):
+    """q: (B, H, D) one token per row; k/v: (B, L, Hkv, Dv); kv_pos: (B, L);
+    q_pos: (B,). Returns (B, H, Dv) in q.dtype."""
+    B, H, D = q.shape
+    _, L, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+
+    bL = min(block_l, L)
+    pad = (-L) % bL
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    L_p = L + pad
+    nL = L_p // bL
+
+    qr = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, nL)
+    kernel = functools.partial(_kernel, scale=scale, window=window, nL=nL)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, li: (b, 0)),          # q_pos
+            pl.BlockSpec((1, 1, G, D), lambda b, h, li: (b, h, 0, 0)),
+            pl.BlockSpec((1, bL, 1, D), lambda b, h, li: (b, li, h, 0)),
+            pl.BlockSpec((1, bL, 1, Dv), lambda b, h, li: (b, li, h, 0)),
+            pl.BlockSpec((1, bL), lambda b, h, li: (b, li)),        # kv_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, li: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dv), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos.reshape(B, 1), qr, k, v, kv_pos)
+    return out.reshape(B, H, Dv)

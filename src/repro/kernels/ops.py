@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU the
+same calls compile to Mosaic. ``auto_interpret()`` picks per backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.spa_attention import spa_attention as _spa, block_map
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spa_attention(q, k, v, q_pos, kv_pos, q_seg, kv_seg, *,
+                  scale: Optional[float] = None,
+                  window: Optional[int] = None,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: Optional[bool] = None):
+    """Block-sparse shared-prompt flash attention (see spa_attention.py)."""
+    itp = auto_interpret() if interpret is None else interpret
+    return _spa(q, k, v, q_pos, kv_pos, q_seg, kv_seg, scale=scale,
+                window=window, block_q=block_q, block_k=block_k,
+                interpret=itp)
+
+
+def decode_attention(q, k, v, kv_pos, q_pos, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     block_l: int = 256,
+                     interpret: Optional[bool] = None):
+    """Flash-decode GQA attention (see decode_attention.py)."""
+    itp = auto_interpret() if interpret is None else interpret
+    return _decode(q, k, v, kv_pos, q_pos, scale=scale, window=window,
+                   block_l=block_l, interpret=itp)
+
+
+__all__ = ["spa_attention", "decode_attention", "block_map", "auto_interpret"]

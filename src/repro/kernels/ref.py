@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (dense masked attention).
+
+These are the ground truth for tests/test_kernels.py: every kernel sweep
+asserts allclose against these at f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def allow_mask(q_pos, kv_pos, q_seg, kv_seg, window: Optional[int] = None):
+    """(B, Sq), (B, Skv) -> (B, Sq, Skv) boolean shared-prompt/causal mask:
+    kv visible iff kv_pos <= q_pos AND (kv_seg == 0 OR kv_seg == q_seg),
+    optionally windowed."""
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    qs = q_seg[:, :, None]
+    ks = kv_seg[:, None, :]
+    allow = (kp <= qp) & ((ks == 0) | (ks == qs))
+    if window is not None:
+        allow &= (qp - kp) < window
+    return allow
+
+
+def spa_attention_ref(q, k, v, q_pos, kv_pos, q_seg, kv_seg, *,
+                      window: Optional[int] = None,
+                      scale: Optional[float] = None):
+    """Dense shared-prompt attention.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D). Returns (B, Sq, H, Dv) f32.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    ok = allow_mask(q_pos, kv_pos, q_seg, kv_seg, window)
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, vf)
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, Dv)
+
+
+def decode_attention_ref(q, k, v, kv_pos, q_pos, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None):
+    """Single-token GQA decode attention against a cache.
+
+    q: (B, H, D) (one new token per row); k/v: (B, L, Hkv, D);
+    kv_pos: (B, L) int32 with INVALID slots marked by a huge position;
+    q_pos: (B,) the new token's position. Returns (B, H, Dv) f32.
+    """
+    B, H, D = q.shape
+    _, L, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32)) * scale
+    ok = kv_pos <= q_pos[:, None]
+    if window is not None:
+        ok &= (q_pos[:, None] - kv_pos) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Dv)

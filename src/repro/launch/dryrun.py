@@ -1,0 +1,248 @@
+"""Multi-pod dry-run: prove the distribution config is coherent without
+real hardware.
+
+For every (architecture x input shape) pair this lowers + compiles the
+matching step function (train_step / prefill_step / serve_step) against the
+production mesh — 16x16 single-pod and 2x16x16 multi-pod — records
+``memory_analysis()`` / ``cost_analysis()``, and parses per-device collective
+bytes from the optimised HLO. Results land in
+``benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json`` and feed the
+roofline analysis (EXPERIMENTS.md §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+from __future__ import annotations
+
+# The placeholder-device flag must be set before ANY jax import — jax locks
+# the device count on first init. This module is the only place it is set
+# (smoke tests and benches must see 1 device).
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, long_context_variant)
+from repro.configs.base import RLConfig
+from repro.launch import inputs as inputs_mod
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_prefill_step_fn, make_serve_step_fn,
+                                make_train_step_fn)
+from repro.sharding.specs import use_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,512]' -> bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in the optimised
+    HLO (async ops counted at -start only)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        result_shape, op = m.groups()
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        out[base]["count"] += 1
+        out[base]["bytes"] += _shape_bytes(result_shape)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def applicable(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k":
+        c = long_context_variant(cfg)
+        if not c.supports_long_decode:
+            return False, ("decoder context bound (448) makes a 524288-token "
+                           "decode out of family scope — see DESIGN.md")
+    return True, ""
+
+
+def build_step(cfg, shape, mesh, rl: RLConfig,
+               num_microbatches: int | None = None):
+    if shape.kind == "train":
+        from repro.launch.steps import default_microbatches
+        if num_microbatches is None:
+            num_microbatches = default_microbatches(cfg, shape.global_batch)
+        fn = make_train_step_fn(cfg, rl, num_microbatches=num_microbatches)
+        si = inputs_mod.train_inputs(cfg, shape, rl, mesh)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step_fn(cfg)
+        si = inputs_mod.prefill_inputs(cfg, shape, mesh)
+    else:
+        fn = make_serve_step_fn(cfg)
+        si = inputs_mod.decode_inputs(cfg, shape, mesh)
+    return fn, si
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            rl: RLConfig | None = None, profile: str = "baseline",
+            num_microbatches: int | None = None) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if shape.name == "long_500k":
+        cfg = long_context_variant(cfg)
+    ok, why = applicable(get_config(arch), shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "skipped", "skip_reason": why}
+    if not ok:
+        return rec
+    rl = rl or RLConfig()
+    from repro.sharding.specs import set_profile
+    set_profile(profile)
+    rec["profile"] = profile
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, si = build_step(cfg, shape, mesh, rl, num_microbatches=num_microbatches)
+
+    t0 = time.time()
+    with use_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=si.shardings,
+                         out_shardings=si.out_shardings,
+                         donate_argnums=si.donate)
+        lowered = jitted.lower(*si.args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = analyze(compiled.as_text())   # loop-corrected (see hlo_analysis.py)
+    n_chips = mesh.size
+    rec.update({
+        "status": "ok",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+        },
+        # raw XLA numbers (NOTE: CPU cost_analysis counts while bodies once)
+        "cost_raw": {k: ca.get(k) for k in
+                     ("flops", "bytes accessed", "transcendentals")
+                     if k in ca},
+        # loop-corrected per-device numbers from the optimised HLO
+        "hlo": {
+            "dot_flops_executed": hlo["dot_flops_executed"],
+            "dot_flops_once": hlo["dot_flops_once"],
+            "hbm_bytes_executed": hlo["hbm_bytes_executed"],
+            "collective_bytes_executed": hlo["collective_bytes_executed"],
+            "collective_bytes_once": hlo["collective_bytes_once"],
+            "collectives": hlo["collectives"],
+        },
+        "model": {
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        },
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for multi_pod in meshes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                fname = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[skip existing] {arch} {shape} {mesh_name}")
+                    continue
+                t0 = time.time()
+                try:
+                    rec = run_one(arch, shape, multi_pod=multi_pod)
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=1)
+                msg = rec["status"]
+                if rec["status"] == "ok":
+                    gib = rec["memory"]["peak_estimate_bytes"] / 2**30
+                    msg += (f" compile={rec['compile_s']:.0f}s "
+                            f"peak={gib:.2f}GiB "
+                            f"dotflops={rec['hlo']['dot_flops_executed']:.3g} "
+                            f"coll={rec['hlo']['collective_bytes_executed']/2**20:.0f}MiB")
+                elif rec["status"] == "error":
+                    msg += " " + rec["error"][:120]
+                print(f"[{arch} {shape} {mesh_name}] {msg} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+"""Loop-aware analysis of optimised HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts while-loop
+bodies ONCE, so any cost inside a ``lax.scan`` (layers, attention chunks,
+Eq.-1 micro-batches, decode steps) is under-counted by its trip count, and a
+naive grep over the HLO text under-counts collectives the same way.
+
+This module parses the optimised HLO, builds the computation call graph,
+recovers scan trip counts from each while-condition's ``compare(iter,
+constant)`` bound, and walks the graph with multipliers to produce:
+
+  * per-collective-type executed bytes + counts  (roofline collective term)
+  * executed dot FLOPs                           (roofline compute term)
+  * executed collective/dot bytes by computation (debugging)
+
+Byte convention: a collective's cost is its per-device RESULT bytes (operand
+bytes for reduce-scatter, which shrinks) — a uniform, documented proxy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_CALLS = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)"
+    r"(%?[\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_WHILE_PARTS = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result: str          # result-shape text (may be a tuple)
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_entry: bool = False
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        hdr = _COMP_HDR.match(line) if not line.startswith(" ") else None
+        if hdr and stripped.endswith("{"):
+            cur = Computation(name=hdr.group(1), instrs=[],
+                              is_entry=line.startswith("ENTRY"))
+            comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.instrs.append(Instr(name=m.group(1), result=m.group(2),
+                                    op=m.group(3), line=stripped))
+    return comps
+
+
+_KNOWN_TRIP = re.compile(r'known_trip_count..\{."n":"(\d+)"')
+
+
+def _trip_count(while_line: str, cond: Optional[Computation]) -> int:
+    """Prefer XLA's own ``backend_config known_trip_count`` annotation;
+    fall back to the max s32[] constant in the condition computation
+    (lax.scan lowers to iter=0; while(iter < N)). Defaults to 1."""
+    m = _KNOWN_TRIP.search(while_line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    if cond is not None:
+        for ins in cond.instrs:
+            for c in _CONST.finditer(ins.line):
+                best = max(best, int(c.group(1)))
+    return best
+
+
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+
+def _dot_flops(ins: Instr, shapes_by_name: Dict[str, List[int]]) -> int:
+    """2 * prod(result dims) * prod(contracting dims of lhs).
+
+    CPU optimised HLO prints operands by NAME only, so the lhs shape comes
+    from a per-computation name -> result-shape map."""
+    res = _shape_list(ins.result)
+    if not res:
+        return 0
+    n_out = 1
+    for d in res[0][1]:
+        n_out *= d
+    operands = ins.line.split(" dot(", 1)
+    if len(operands) < 2:
+        return 0
+    first = operands[1].split(",")[0].split(")")[0].strip().lstrip("%")
+    lhs_dims = shapes_by_name.get(first)
+    if lhs_dims is None:
+        return 0
+    mdims = _DOT_DIMS.search(ins.line)
+    k = 1
+    if mdims:
+        for idx in (int(i) for i in mdims.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+    return 2 * n_out * k
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.instrs))
+
+    coll = {k: {"count": 0, "bytes": 0, "executed_bytes": 0}
+            for k in COLLECTIVES}
+    totals = {"dot_flops": 0, "dot_flops_executed": 0,
+              "hbm_bytes_executed": 0}
+
+    # ops whose result is not a fresh HBM materialisation
+    _NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "call", "conditional",
+                   "after-all", "token"}
+
+    seen_stack: List[str] = []
+
+    def walk(comp: Computation, mult: int, fused: bool = False):
+        if comp.name in seen_stack:   # defensive: no recursion in HLO
+            return
+        seen_stack.append(comp.name)
+        shapes_by_name = {i.name: s[0][1]
+                          for i in comp.instrs
+                          for s in [_shape_list(i.result)] if s}
+        for ins in comp.instrs:
+            # HBM-traffic proxy: every top-level (non-fused) op writes its
+            # result to HBM once per execution; reads ~= writes, so the
+            # roofline memory term doubles this sum. Fusion interiors stay
+            # in registers/VMEM and are skipped.
+            if not fused and ins.op not in _NO_TRAFFIC:
+                b = _bytes_of(ins.result)
+                if ins.op == "dynamic-update-slice":
+                    # writes only the update operand, not the whole buffer
+                    ops = ins.line.split("dynamic-update-slice(", 1)
+                    if len(ops) == 2:
+                        upd = ops[1].split(",")[1].strip().lstrip("%")
+                        dims = shapes_by_name.get(upd)
+                        if dims is not None:
+                            n = 1
+                            for d in dims:
+                                n *= d
+                            dt = _shape_list(ins.result)
+                            if dt:
+                                b = n * _DTYPE_BYTES[dt[0][0]]
+                totals["hbm_bytes_executed"] += b * mult
+            base = ins.op
+            for suffix in ("-start", "-done"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            if base in COLLECTIVES and not ins.op.endswith("-done"):
+                b = _bytes_of(ins.result)
+                coll[base]["count"] += 1
+                coll[base]["bytes"] += b
+                coll[base]["executed_bytes"] += b * mult
+            if ins.op == "dot":
+                f = _dot_flops(ins, shapes_by_name)
+                totals["dot_flops"] += f
+                totals["dot_flops_executed"] += f * mult
+            if ins.op == "while":
+                wp = _WHILE_PARTS.search(ins.line)
+                if wp and wp.group(2) in comps:
+                    trips = _trip_count(ins.line, comps.get(wp.group(1)))
+                    walk(comps[wp.group(2)], mult * trips, fused)
+            elif ins.op in ("fusion", "call", "conditional", "map",
+                            "reduce", "reduce-window", "scatter", "sort",
+                            "all-reduce", "reduce-scatter", "custom-call",
+                            "async-start"):
+                cm = _CALLS.search(ins.line)
+                if cm:
+                    for callee in re.split(r",\s*", cm.group(1)):
+                        callee = callee.lstrip("%")
+                        # reducers of all-reduce etc. are trivial adders —
+                        # walking them is harmless (no dots/collectives).
+                        if callee in comps:
+                            walk(comps[callee], mult,
+                                 fused or ins.op == "fusion")
+        seen_stack.pop()
+
+    walk(entry, 1)
+
+    coll_exec = sum(v["executed_bytes"] for v in coll.values())
+    coll_once = sum(v["bytes"] for v in coll.values())
+    return {
+        "collectives": coll,
+        "collective_bytes_executed": coll_exec,
+        "collective_bytes_once": coll_once,
+        "dot_flops_once": totals["dot_flops"],
+        "dot_flops_executed": totals["dot_flops_executed"],
+        "hbm_bytes_executed": 2 * totals["hbm_bytes_executed"],
+    }

@@ -1,0 +1,149 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x input-shape) pair.
+
+No device allocation happens here — everything is a ShapeDtypeStruct, the
+same pattern used for `.lower()` dry-runs. Modality frontends are stubs per
+the assignment carve-out: ``vision_embeds`` / ``enc_embeds`` arrive as
+precomputed patch/frame embeddings of the right shape.
+
+Contract for VLM train/prefill inputs: ``tokens``/``labels``/``loss_mask``/
+``advantages`` cover only the text part (S - vision_prefix_len), while
+``positions``/``segments`` cover the full packed sequence (vision prefix +
+text) — matching forward_hidden's concatenated input row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, RLConfig
+from repro.models import init, init_caches
+from repro.models.layers import dtype_of
+from repro.optim.adam import adam_init
+from repro.rl.grpo import MicroBatch
+from repro.sharding.specs import cache_specs, param_specs, spec_for
+
+SDS = jax.ShapeDtypeStruct
+
+
+class StepInputs(NamedTuple):
+    kind: str            # train | prefill | decode
+    args: tuple          # ShapeDtypeStruct pytrees, positional
+    shardings: tuple     # matching NamedSharding pytrees
+    donate: tuple = ()   # argnums donated (decode caches / consumed state)
+    out_shardings: Any = None  # without this XLA may replicate grads/caches
+
+
+def _batch_spec(mesh: Mesh, shape, seq_axis: int | None = None):
+    """Batch over ("pod","data"); optionally the seq dim over "model"."""
+    logical = [None] * len(shape)
+    logical[0] = "batch"
+    if seq_axis is not None:
+        logical[seq_axis] = "seq"
+    return NamedSharding(mesh, spec_for(mesh, shape, tuple(logical)))
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
+
+
+def _extras(cfg: ModelConfig, B: int, mesh: Mesh):
+    """Stub-frontend embeddings (assignment carve-out)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    ex, ex_spec = {}, {}
+    if cfg.vision_prefix_len:
+        shp = (B, cfg.vision_prefix_len, cfg.d_model)
+        ex["vision_embeds"] = SDS(shp, cdt)
+        ex_spec["vision_embeds"] = _batch_spec(mesh, shp)
+    if cfg.is_encoder_decoder:
+        shp = (B, cfg.encoder_seq_len, cfg.d_model)
+        ex["enc_embeds"] = SDS(shp, cdt)
+        ex_spec["enc_embeds"] = _batch_spec(mesh, shp)
+    return ex, ex_spec
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, rl: RLConfig,
+                 mesh: Mesh) -> StepInputs:
+    B, S = shape.global_batch, shape.seq_len
+    S_tok = S - cfg.vision_prefix_len
+    ex, ex_spec = _extras(cfg, B, mesh)
+    mb = MicroBatch(
+        tokens=SDS((B, S_tok), jnp.int32), labels=SDS((B, S_tok), jnp.int32),
+        positions=SDS((B, S), jnp.int32), segments=SDS((B, S), jnp.int32),
+        loss_mask=SDS((B, S_tok), jnp.float32),
+        advantages=SDS((B, S_tok), jnp.float32),
+        n_samples=SDS((), jnp.float32), extras=ex)
+    tok_spec = _batch_spec(mesh, (B, S_tok), seq_axis=1)
+    full_spec = _batch_spec(mesh, (B, S), seq_axis=1)
+    mb_spec = MicroBatch(
+        tokens=tok_spec, labels=tok_spec, positions=full_spec,
+        segments=full_spec, loss_mask=tok_spec, advantages=tok_spec,
+        n_samples=NamedSharding(mesh, P()), extras=ex_spec)
+    pshape = param_shapes(cfg)
+    pspec = param_specs(pshape, mesh)
+    opt = jax.eval_shape(adam_init, pshape)
+    opt_spec = param_specs(opt, mesh)
+    return StepInputs(
+        kind="train",
+        args=(pshape, pshape, pshape, opt, mb),
+        shardings=(pspec, pspec, pspec, opt_spec, mb_spec),
+        donate=(0, 3),   # policy params + opt state are consumed
+        out_shardings=(pspec, opt_spec, None))
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape,
+                   mesh: Mesh) -> StepInputs:
+    B, S = shape.global_batch, shape.seq_len
+    S_tok = S - cfg.vision_prefix_len
+    ex, ex_spec = _extras(cfg, B, mesh)
+    args = (param_shapes(cfg),
+            SDS((B, S_tok), jnp.int32),     # tokens
+            SDS((B, S), jnp.int32),         # positions (full row)
+            SDS((B, S), jnp.int32),         # segments
+            ex)
+    pspec = param_specs(args[0], mesh)
+    shardings = (pspec,
+                 _batch_spec(mesh, (B, S_tok), seq_axis=1),
+                 _batch_spec(mesh, (B, S), seq_axis=1),
+                 _batch_spec(mesh, (B, S), seq_axis=1),
+                 ex_spec)
+    caches = jax.eval_shape(lambda: init_caches(args[0], cfg, B, S))
+    return StepInputs(kind="prefill", args=args, shardings=shardings,
+                      out_shardings=(cache_specs(caches, mesh),
+                                     _batch_spec(mesh, (B, cfg.vocab_size))))
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape,
+                  mesh: Mesh) -> StepInputs:
+    """ONE new token against a cache holding ``seq_len`` tokens. ``cfg``
+    should already be the long-context variant for long_500k."""
+    B, S = shape.global_batch, shape.seq_len
+    pshape = param_shapes(cfg)
+    cache_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    caches = jax.eval_shape(
+        lambda: init_caches(pshape, cfg, B, cache_len))
+    ex, ex_spec = {}, {}
+    if cfg.is_encoder_decoder:
+        cdt = dtype_of(cfg.compute_dtype)
+        shp = (B, cfg.encoder_seq_len, cfg.d_model)
+        ex["enc_out"] = SDS(shp, cdt)       # precomputed encoder states
+        ex_spec["enc_out"] = _batch_spec(mesh, shp)
+    args = (pshape, caches,
+            SDS((B, 1), jnp.int32),         # token
+            SDS((B, 1), jnp.int32),         # positions
+            SDS((), jnp.int32),             # offset
+            ex)
+    cspec = cache_specs(caches, mesh)
+    shardings = (param_specs(pshape, mesh),
+                 cspec,
+                 _batch_spec(mesh, (B, 1)),
+                 _batch_spec(mesh, (B, 1)),
+                 NamedSharding(mesh, P()),
+                 ex_spec)
+    return StepInputs(kind="decode", args=args, shardings=shardings,
+                      donate=(1,),
+                      out_shardings=(_batch_spec(mesh, (B, cfg.vocab_size)),
+                                     cspec))

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax import and only then builds the mesh.
+
+Single pod:  (16, 16)      axes ("data", "model")   = 256 chips (TPU v5e pod)
+Multi pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+Across pods we run pure data parallelism: parameters are replicated per pod
+("data"/"model" logical axes never map to "pod"), activations' batch dim is
+sharded over ("pod", "data"), and the gradient all-reduce is the only
+collective that crosses the pod axis (DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh over whatever devices exist — used by CPU-scale
+    examples so the same pjit code path runs everywhere."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

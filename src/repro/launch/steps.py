@@ -1,0 +1,82 @@
+"""The three lowered step functions of the dry-run contract.
+
+  train_4k     -> train_step   (tri-model GRPO micro-step + Adam update)
+  prefill_32k  -> prefill_step (forward over the full prompt, emit KV cache
+                                + last-token logits)
+  decode_32k / long_500k -> serve_step (ONE new token against a KV cache of
+                                seq_len; sliding-window ring buffer for the
+                                sub-quadratic dense variant, SSM state for
+                                attention-free archs)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.models import forward_hidden, init_caches
+from repro.models.layers import lm_head_weight
+from repro.rl.grpo import MicroBatch, make_train_step
+
+
+def default_microbatches(cfg: ModelConfig, global_batch: int) -> int:
+    """Eq.-1 in-step micro-batching schedule: bigger resident state (3x
+    params + fp32 Adam) -> less HBM left for activations -> more micros."""
+    p = cfg.param_count()
+    for threshold, m in ((100e9, 16), (50e9, 8), (25e9, 4), (15e9, 2)):
+        if p > threshold:
+            return min(m, global_batch)
+    return 1
+
+
+def make_train_step_fn(cfg: ModelConfig, rl: RLConfig,
+                       num_microbatches: int = 1):
+    """(policy, old, ref, opt, mb) -> (new_params, new_opt, metrics)."""
+    return make_train_step(cfg, rl, num_microbatches=num_microbatches)
+
+
+def make_prefill_step_fn(cfg: ModelConfig):
+    """(params, tokens, positions, segments, extras) -> (caches, last_logits).
+
+    The cache is created inside the step (its length = the padded prompt
+    length, i.e. tokens+vision prefix), so prefill lowers as a single
+    program: embed -> layers -> cache writes -> last-token logits.
+    """
+
+    def prefill_step(params, tokens, positions, segments, extras):
+        B, S_tok = tokens.shape
+        S = S_tok + cfg.vision_prefix_len
+        caches = init_caches(params, cfg, B, S)
+        h, caches, _, _ = forward_hidden(
+            params, cfg, tokens, positions=positions, segments=segments,
+            caches=caches, cache_offset=0, **extras)
+        W = lm_head_weight(params["embed"], cfg)
+        last = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                          W.astype(jnp.float32))
+        return caches, last
+
+    return prefill_step
+
+
+def make_serve_step_fn(cfg: ModelConfig):
+    """(params, caches, token, positions, offset, extras) -> (logits, caches).
+
+    ONE new token per call. ``offset`` is the number of tokens already in the
+    cache (traced scalar); sliding-window caches are ring buffers indexed by
+    ``offset % window``.
+    """
+
+    def serve_step(params, caches, token, positions, offset, extras):
+        B, _ = token.shape
+        h, caches, _, _ = forward_hidden(
+            params, cfg, token, positions=positions,
+            segments=jnp.zeros((B, 1), jnp.int32),
+            caches=caches, cache_offset=offset, **extras)
+        W = lm_head_weight(params["embed"], cfg)
+        logits = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                            W.astype(jnp.float32))
+        return logits, caches
+
+    return serve_step

@@ -1,0 +1,124 @@
+"""End-to-end GRPO training driver (the paper's workload at CPU scale).
+
+Wires the full periodic-asynchrony pipeline (paper Figure 1):
+
+    PromptLoader -> TemporaryDataGenerator -> InferencePool
+                          |  RolloutQueue  |
+    PeriodicAsyncScheduler (consumer: tri-model GRPO + grad accumulation)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --mode async --iterations 4 [--spa] [--prompt-pad 256]
+
+Any assigned architecture id is accepted; the model is reduced to its
+CPU-smoke variant unless --full is given (full configs are for the dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.core import (InferenceInstance, InferencePool, PeriodicAsyncScheduler,
+                        RolloutQueue, TemporaryDataGenerator, TriModelState)
+from repro.data.loader import PromptLoader
+from repro.data.tasks import ArithmeticTask
+from repro.data.tokenizer import Tokenizer
+from repro.models import init
+from repro.rl.reward import RuleBasedReward
+from repro.rl.rollout import Sampler
+
+
+def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
+                   latency_fn=None, scripted_fn=None):
+    """Returns (scheduler, components dict). With ``scripted_fn`` the
+    inference instances run in simulated-latency mode (remote-service view);
+    otherwise they run the real jitted sampler."""
+    tok = Tokenizer(cfg.vocab_size)
+    task = ArithmeticTask(seed=seed, prompt_pad=prompt_pad)
+    loader = PromptLoader(task, tok, rl.batch_prompts, rl.max_prompt_len)
+    params = init(jax.random.PRNGKey(seed), cfg)
+    tri = TriModelState.create(params)
+    sampler = None
+    if scripted_fn is None:
+        sampler = Sampler(cfg, rl.max_prompt_len, rl.max_response_len,
+                          temperature=rl.temperature, top_p=rl.top_p)
+    instances = [InferenceInstance(i, cfg, sampler, latency_fn=latency_fn,
+                                   scripted_fn=scripted_fn)
+                 for i in range(rl.num_inference_instances)]
+    pool = InferencePool(instances)
+    queue = RolloutQueue()
+    gen = TemporaryDataGenerator(pool, queue, RuleBasedReward(tok),
+                                 rl.group_size)
+    sched = PeriodicAsyncScheduler(cfg, rl, tri, gen, queue, loader)
+    return sched, {"tokenizer": tok, "task": task, "loader": loader,
+                   "pool": pool, "queue": queue, "generator": gen,
+                   "tri": tri}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", choices=ARCH_IDS)
+    ap.add_argument("--mode", default="async",
+                    choices=["sync", "async", "async_offpolicy"])
+    ap.add_argument("--iterations", type=int, default=4)
+    ap.add_argument("--batch-prompts", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--micro-batch", type=int, default=2)
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--max-prompt-len", type=int, default=48)
+    ap.add_argument("--max-response-len", type=int, default=16)
+    ap.add_argument("--prompt-pad", type=int, default=0)
+    ap.add_argument("--spa", action="store_true",
+                    help="enable shared-prompt attention packing")
+    ap.add_argument("--spa-align", type=int, default=0,
+                    help="round SPA slot stride to this tile size "
+                         "(128 on TPU; 0 = paper layout)")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "dp2", "dp2_zero1", "sp_heads"],
+                    help="sharding profile (see sharding/specs.py SPerf)")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-reduced) config — dry-run scale")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced_config(cfg)
+    rl = RLConfig(
+        mode=args.mode, batch_prompts=args.batch_prompts,
+        group_size=args.group_size, micro_batch=args.micro_batch,
+        num_inference_instances=args.instances,
+        max_prompt_len=args.max_prompt_len,
+        max_response_len=args.max_response_len,
+        shared_prompt_attention=args.spa, spa_align=args.spa_align,
+        seed=args.seed)
+
+    from repro.sharding.specs import set_profile
+    set_profile(args.profile)
+    sched, _ = build_pipeline(cfg, rl, seed=args.seed,
+                              prompt_pad=args.prompt_pad)
+    t0 = time.time()
+    history = sched.run(args.iterations)
+    wall = time.time() - t0
+
+    total_tokens = sum(s.trained_tokens for s in history)
+    print(f"\n{args.arch} mode={args.mode} spa={args.spa}: "
+          f"{args.iterations} iterations, {total_tokens} tokens, "
+          f"{wall:.1f}s wall, TPSPD={total_tokens / wall:.1f}")
+    for s in history:
+        print(f"  iter {s.iteration}: wall={s.wall_time:.2f}s "
+              f"tokens={s.trained_tokens} reward={s.reward_mean:.3f} "
+              f"staleness={s.max_staleness}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([s.__dict__ for s in history], f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

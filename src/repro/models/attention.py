@@ -1,0 +1,407 @@
+"""Attention: GQA and MLA (DeepSeek-V2 latent attention), with a pure-JAX
+chunked flash implementation (lax.scan over KV chunks + online softmax) so
+activation memory stays bounded at 32k-500k contexts in the compiled HLO.
+
+Masking is driven by (position, segment) arrays, which uniformly express:
+  * causal:            kv_pos <= q_pos
+  * sliding window:    q_pos - kv_pos < window
+  * shared-prompt:     kv_seg == 0 (shared prompt)  OR  kv_seg == q_seg
+Padding uses seg == -1 (tokens only attend within their own padding run via
+the diagonal) and invalid cache slots use pos == INVALID_POS (masked by the
+causal rule).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+from repro.sharding.specs import constrain, profile_has
+
+INVALID_POS = jnp.int32(2**30)
+NEG_INF = -1e30
+
+
+def allow_mask(q_pos, kv_pos, q_seg, kv_seg, window: Optional[int]):
+    """(B, Sq), (B, Skv) -> (B, Sq, Skv) boolean allow mask."""
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    qs = q_seg[:, :, None]
+    ks = kv_seg[:, None, :]
+    allow = kp <= qp
+    allow &= (ks == 0) | (ks == qs)
+    if window is not None:
+        allow &= (qp - kp) < window
+    return allow
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, q_seg, kv_seg, *,
+                      window: Optional[int] = None, chunk_size: int = 512,
+                      scale: Optional[float] = None):
+    """Flash-style attention with online softmax over KV chunks.
+
+    q: (B, Sq, H, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv).
+    Returns (B, Sq, H, Dv) in q.dtype.
+    """
+    B, Sq, H, Dk = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = Dk ** -0.5 if scale is None else scale
+    C = min(chunk_size, Skv)
+    pad = (-Skv) % C
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)), constant_values=-2)
+    n = k.shape[1] // C
+
+    qr = q.reshape(B, Sq, Hkv, G, Dk)
+
+    if Sq == 1:
+        # Decode fast path (SPerf, deepseek-v2-lite decode hillclimb): a
+        # single-token query needs no KV-chunk scan -- scanning makes the
+        # chunk index the leading dim, and dynamic-slicing that dim forces
+        # SPMD to ALL-GATHER the whole seq-sharded cache every layer
+        # (measured: 27.6 GiB/step on dsv2-lite decode_32k). The dense
+        # single-pass form keeps the contraction over the sharded cache
+        # dim local: softmax stats and the PV product decompose into local
+        # partials + (B, H)-sized reductions. Score tile is only
+        # (B, Hkv, G, 1, L) f32.
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                       preferred_element_type=jnp.float32) * scale
+        ok = allow_mask(q_pos, kv_pos, q_seg, kv_seg, window)  # (B, 1, L)
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        out = out / jnp.maximum(p.sum(axis=-1)[..., None], 1e-30)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv)
+        return out.astype(q.dtype)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # checkpointed: backward recomputes the (B, Hkv, G, Sq, C) score /
+        # probability tiles per chunk instead of saving every chunk's —
+        # the flash-attention memory property in reverse mode.
+        acc, m, l = carry
+        kc, vc, kpc, ksc = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, kc,
+                       preferred_element_type=jnp.float32) * scale
+        ok = allow_mask(q_pos, kpc, q_seg, ksc, window)        # (B, Sq, C)
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # NOTE (§Perf iter 2, refuted): materialising p in bf16 does NOT cut
+        # HBM traffic — the f32 score chain (dot -> mask -> exp) dominates
+        # and dots are fusion barriers; only the fused Pallas kernel
+        # (kernels/spa_attention.py) removes that traffic structurally.
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+
+    xs = (
+        jnp.moveaxis(k.reshape(B, n, C, Hkv, Dk), 1, 0),
+        jnp.moveaxis(v.reshape(B, n, C, Hkv, Dv), 1, 0),
+        jnp.moveaxis(kv_pos.reshape(B, n, C), 1, 0),
+        jnp.moveaxis(kv_seg.reshape(B, n, C), 1, 0),
+    )
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]               # (B,Hkv,G,Sq,Dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+# ==========================================================================
+# GQA attention block
+# ==========================================================================
+
+def init_gqa(key, cfg: ModelConfig, dtype) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, H * hd), 0, dtype),
+        "wk": dense_init(k2, (d, Hkv * hd), 0, dtype),
+        "wv": dense_init(k3, (d, Hkv * hd), 0, dtype),
+        "wo": dense_init(k4, (H * hd, d), 0, dtype),
+    }
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
+    """length = window size when cfg.sliding_window is set (ring buffer)."""
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, Hkv, hd), dtype),
+        "v": jnp.zeros((batch, length, Hkv, hd), dtype),
+        "pos": jnp.full((batch, length), INVALID_POS, jnp.int32),
+        "seg": jnp.full((batch, length), -2, jnp.int32),
+    }
+
+
+def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
+                  cache: Optional[dict] = None, cache_offset=None):
+    """x: (B, S, d). Training/prefill when cache is None or being filled;
+    decode when S == 1 and cache holds history.
+
+    Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if profile_has("heads") and S > 1:
+        # Megatron-SP: gather seq once per layer; projections below then
+        # emit head-sharded q (column parallel) instead of forcing a full
+        # weight gather against seq-sharded activations.
+        x = constrain(x, "batch", None, None)
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, S, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, S, Hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        kk, vv, kp, ks = k, v, positions, segments
+    else:
+        L = cache["k"].shape[1]
+        if S == 1:
+            # NOTE (SPerf, refuted): a mask-based (iota==idx select) write
+            # does NOT avoid the SPMD cache gather here -- XLA computes the
+            # select replicated and the gather just moves to the sharding
+            # constraint (measured identical 2.16 s bound on internlm2
+            # decode_32k), while a full-cache rewrite would be strictly
+            # worse on real hardware than an in-place DUS. The single-slot
+            # write on a seq-sharded dim remains the documented residual
+            # collective of dense-GQA decode; the structural fix is a
+            # shard_map'd decode step (future lever).
+            off = jnp.asarray(cache_offset)
+            if off.ndim == 1:
+                # per-row offsets (continuous batching: each slot is at a
+                # different position) -> per-row one-hot masked write.
+                idx = off % L if cfg.sliding_window is not None else off
+                sel = (jnp.arange(L, dtype=jnp.int32)[None, :]
+                       == idx[:, None])                      # (B, L)
+                sel4 = sel[..., None, None]
+                new_cache = {
+                    "k": jnp.where(sel4, k, cache["k"]),
+                    "v": jnp.where(sel4, v, cache["v"]),
+                    "pos": jnp.where(sel, positions, cache["pos"]),
+                    "seg": jnp.where(sel, segments, cache["seg"]),
+                }
+            else:
+                idx = (cache_offset % L if cfg.sliding_window is not None
+                       else cache_offset)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0)),
+                    "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, (0, idx)),
+                    "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, (0, idx)),
+                }
+        elif S > L:
+            # windowed prefill (S > window): attend against the full fresh
+            # K/V (the window mask handles visibility) and ring-write only
+            # the trailing L tokens — token i lands in slot i % L so later
+            # decode steps (idx = offset % L) find it.
+            assert cfg.sliding_window is not None, "prefill exceeds cache"
+            r = S % L
+            ring = lambda a: jnp.roll(a[:, -L:], r, axis=1)
+            new_cache = {"k": ring(k), "v": ring(v),
+                         "pos": ring(positions), "seg": ring(segments)}
+            out = chunked_attention(q, k, v, positions, positions,
+                                    segments, segments,
+                                    window=cfg.sliding_window,
+                                    chunk_size=cfg.attn_chunk_size)
+            out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
+                             params["wo"])
+            return out, new_cache
+        else:  # prefill into an empty cache (L >= S, offset 0)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+                "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, (0, 0)),
+                "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, (0, 0)),
+            }
+        kk, vv = new_cache["k"], new_cache["v"]
+        kp, ks = new_cache["pos"], new_cache["seg"]
+
+    # Under the "sp_heads" profile (§Perf): reshard once per layer — q to
+    # head-sharded, k/v replicated over the model axis — so the KV-chunk
+    # scan below is collective-free. No-op when heads don't divide the
+    # model axis or under other profiles ("heads" unmapped).
+    q = constrain(q, "batch", None, "heads", None)
+    kk = constrain(kk, "batch", None, None, None)
+    vv = constrain(vv, "batch", None, None, None)
+    if cfg.use_pallas_attention and S > 1:
+        # production TPU path: fused block-sparse shared-prompt flash
+        # kernel — scores/probs never leave VMEM (§Perf iter A5), dead
+        # response x response tiles are skipped via the block map.
+        from repro.kernels.ops import spa_attention as _spa_kernel
+        out = _spa_kernel(q, kk, vv, positions, kp, segments, ks,
+                          window=cfg.sliding_window)
+    else:
+        out = chunked_attention(q, kk, vv, positions, kp, segments, ks,
+                                window=cfg.sliding_window,
+                                chunk_size=cfg.attn_chunk_size)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
+    return out, new_cache
+
+
+# ==========================================================================
+# MLA (multi-head latent attention, DeepSeek-V2)
+# ==========================================================================
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    r, nd, rd, vd = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, H * (nd + rd)), 0, dtype),
+        "w_dkv": dense_init(ks[1], (d, r), 0, dtype),
+        "w_kr": dense_init(ks[2], (d, rd), 0, dtype),
+        "ckv_norm": jnp.ones((r,), dtype),
+        "w_uk": dense_init(ks[3], (r, H * nd), 0, dtype),
+        "w_uv": dense_init(ks[4], (r, H * vd), 0, dtype),
+        "wo": dense_init(ks[5], (H * vd, d), 0, dtype),
+    }
+
+
+def make_mla_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, length), INVALID_POS, jnp.int32),
+        "seg": jnp.full((batch, length), -2, jnp.int32),
+    }
+
+
+def _mla_qckv(params, cfg: ModelConfig, x, positions):
+    from repro.models.layers import rmsnorm
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nd, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = rmsnorm({"scale": params["ckv_norm"]},
+                  jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]), cfg.norm_eps)
+    kr = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :]
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, kr
+
+
+def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
+                  cache: Optional[dict] = None, cache_offset=None):
+    """Expanded path for train/prefill; absorbed path for decode (S == 1):
+    scores and values live in the (rank + rope) latent space so the KV cache
+    stores only ckv + shared rope key — the MLA memory win."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nd, rd, vd, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim, cfg.kv_lora_rank)
+    q_nope, q_rope, ckv, kr = _mla_qckv(params, cfg, x, positions)
+    scale = (nd + rd) ** -0.5
+
+    new_cache = None
+    if cache is not None:
+        L = cache["ckv"].shape[1]
+        if S > 1 and S > L:
+            # windowed prefill: ring-write trailing window, attend full
+            # (mirrors gqa_attention's windowed-prefill path).
+            assert cfg.sliding_window is not None, "prefill exceeds cache"
+            r = S % L
+            ring = lambda a: jnp.roll(a[:, -L:], r, axis=1)
+            new_cache = {"ckv": ring(ckv), "kr": ring(kr),
+                         "pos": ring(positions), "seg": ring(segments)}
+            ckv_all, kr_all = ckv, kr
+            kp, ks = positions, segments
+        else:
+            if S == 1:
+                off = jnp.asarray(cache_offset)
+                if off.ndim == 1:    # per-row offsets (continuous batching)
+                    idx = off % L if cfg.sliding_window is not None else off
+                    sel = (jnp.arange(L, dtype=jnp.int32)[None, :]
+                           == idx[:, None])
+                    new_cache = {
+                        "ckv": jnp.where(sel[..., None], ckv, cache["ckv"]),
+                        "kr": jnp.where(sel[..., None], kr, cache["kr"]),
+                        "pos": jnp.where(sel, positions, cache["pos"]),
+                        "seg": jnp.where(sel, segments, cache["seg"]),
+                    }
+                else:
+                    idx = (cache_offset % L if cfg.sliding_window is not None
+                           else cache_offset)
+                    at = (0, idx)
+                    new_cache = {
+                        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv, at + (0,)),
+                        "kr": jax.lax.dynamic_update_slice(cache["kr"], kr, at + (0,)),
+                        "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, at),
+                        "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, at),
+                    }
+            else:
+                at = (0, 0)
+                new_cache = {
+                    "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv, at + (0,)),
+                    "kr": jax.lax.dynamic_update_slice(cache["kr"], kr, at + (0,)),
+                    "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, at),
+                    "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, at),
+                }
+            ckv_all, kr_all = new_cache["ckv"], new_cache["kr"]
+            kp, ks = new_cache["pos"], new_cache["seg"]
+    else:
+        ckv_all, kr_all, kp, ks = ckv, kr, positions, segments
+
+    if S == 1 and cache is not None:
+        # absorbed decode: fold w_uk into q, attend in latent space.
+        w_uk = params["w_uk"].reshape(r, H, nd)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)     # (B,1,H,r)
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)       # (B,1,H,r+rd)
+        k_cat = jnp.concatenate([ckv_all, kr_all], axis=-1)[:, :, None, :]
+        o_lat = chunked_attention(q_cat, k_cat,
+                                  ckv_all[:, :, None, :],
+                                  positions, kp, segments, ks,
+                                  window=cfg.sliding_window,
+                                  chunk_size=cfg.attn_chunk_size,
+                                  scale=scale)                  # (B,1,H,r)
+        w_uv = params["w_uv"].reshape(r, H, vd)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)
+    else:
+        # expanded: materialise per-head k/v from the latent (chunk-bounded
+        # activations come from scanning layers; S*H*(nd+rd) is one layer's).
+        k_nope = jnp.einsum("bsr,rh->bsh", ckv_all, params["w_uk"]).reshape(
+            B, -1, H, nd)
+        v = jnp.einsum("bsr,rh->bsh", ckv_all, params["w_uv"]).reshape(
+            B, -1, H, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      k_nope.shape[:3] + (rd,))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(q, k, v, positions, kp, segments, ks,
+                                window=cfg.sliding_window,
+                                chunk_size=cfg.attn_chunk_size, scale=scale)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * vd), params["wo"])
+    return out, new_cache
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    return init_mla(key, cfg, dtype) if cfg.use_mla else init_gqa(key, cfg, dtype)
+
+
+def attention(params, cfg: ModelConfig, x, positions, segments, **kw):
+    fn = mla_attention if cfg.use_mla else gqa_attention
+    return fn(params, cfg, x, positions, segments, **kw)
+
+
+def make_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
+    if cfg.use_mla:
+        return make_mla_cache(cfg, batch, length, dtype)
+    return make_kv_cache(cfg, batch, length, dtype)

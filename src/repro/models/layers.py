@@ -1,0 +1,119 @@
+"""Core layers: norms, embeddings, SwiGLU MLP, RoPE. Pure-functional JAX:
+``init_*`` builds a params pytree, ``apply`` functions consume it."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import constrain, profile_has
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches Megatron-style scaled init)."""
+    fan_in = 1
+    for a in (in_axis,) if isinstance(in_axis, int) else in_axis:
+        fan_in *= shape[a]
+    scale = 1.0 / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), 0, dtype),
+        "w_up": dense_init(k2, (d, ff), 0, dtype),
+        "w_down": dense_init(k3, (ff, d), 0, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    nd = x.ndim
+    if profile_has("ffn") and nd == 3:
+        # Megatron-SP (sp_heads profile, §Perf): gather the seq dim once,
+        # run column-parallel gate/up (ffn dim on the model axis) and
+        # row-parallel down; without this, seq-sharded activations force
+        # SPMD to all-gather the FULL layer weights at every use.
+        x = constrain(x, "batch", None, None)
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if profile_has("ffn") and nd == 3:
+        g = constrain(g, "batch", None, "ffn")
+        u = constrain(u, "batch", None, "ffn")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs    # (..., S, D/2)
+    angles = angles[..., None, :]                                # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head
+# --------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                                         jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), 0, dtype)
+    return p
+
+
+def embed(params: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return params["embedding"].astype(compute_dtype)[tokens]
+
+
+def lm_head_weight(params: dict, cfg: ModelConfig) -> jax.Array:
+    """(d_model, vocab)."""
+    if cfg.tie_embeddings:
+        return params["embedding"].T
+    return params["lm_head"]
+
+
+def logits_from_hidden(params: dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    w = lm_head_weight(params, cfg).astype(h.dtype)
+    return jnp.einsum("...d,dv->...v", h, w)

@@ -1,0 +1,265 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), TPU-adapted.
+
+The chunked SSD algorithm maps naturally onto the MXU: within a chunk the
+recurrence is computed as dense quadratic attention-like matmuls (the
+"duality"), across chunks a linear state recurrence is carried by a
+`lax.scan`. We scan chunk-by-chunk (rather than materialising all per-chunk
+decay matrices) so activation memory is bounded by one chunk regardless of
+sequence length — the same reasoning as chunked flash attention.
+
+Supports an initial state (used for decode continuation and for
+prefix-state sharing, the SSM analogue of shared-prompt attention).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+from repro.sharding.specs import constrain
+
+
+# --------------------------------------------------------------------------
+# core SSD scan
+# --------------------------------------------------------------------------
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) lower-triangular segment sums
+    S[i, j] = sum_{k=j+1..i} dA_k for i >= j, -inf above the diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    idx = jnp.arange(Q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(x, dt, A, B, C, chunk: int, initial_state: Optional[jax.Array] = None
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective-state-space forward.
+
+    x:  (Bb, S, H, P)   inputs (already conv'd + activated)
+    dt: (Bb, S, H)      post-softplus step sizes
+    A:  (H,)            negative decay rates
+    B:  (Bb, S, G, N)   input projections  (G groups, H % G == 0)
+    C:  (Bb, S, G, N)   output projections
+    returns y (Bb, S, H, P), final_state (Bb, H, P, N).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    R = H // G  # heads per group
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_p = S + pad
+    n = S_p // Q
+
+    f32 = jnp.float32
+    x32, dt32 = x.astype(f32), dt.astype(f32)
+    B32, C32 = B.astype(f32), C.astype(f32)
+    # tensor-parallel SSD: shard the head dim over "model" so the per-chunk
+    # (Bb, H, Q, Q) matrices and their matmuls split across the TP group.
+    x32 = constrain(x32, "batch", None, "model", None)
+    dt32 = constrain(dt32, "batch", None, "model")
+    dA = dt32 * A.astype(f32)[None, None, :]                     # (Bb,S,H)
+    dA = constrain(dA, "batch", None, "model")
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape((Bb, n, Q) + a.shape[2:]), 1, 0)
+
+    xs = tuple(map(to_chunks, (x32, dt32, dA, B32, C32)))
+
+    h0 = (jnp.zeros((Bb, H, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    @jax.checkpoint
+    def body(h, inp):
+        # checkpointed: per-chunk (Bb, H, Q, Q) decay/score matrices are
+        # recomputed in backward rather than saved for every chunk.
+        xc, dtc, dAc, Bc, Cc = inp            # (Bb,Q,...)
+        # intra-chunk (quadratic / "attention" form) ------------------------
+        Lmat = jnp.exp(_segsum(jnp.moveaxis(dAc, -1, 1)))        # (Bb,H,Q,Q)
+        # scores: C_i . B_j per group, broadcast over heads in group
+        CB = jnp.einsum("bqgn,bkgn->bgqk", Cc, Bc)               # (Bb,G,Q,Q)
+        CB = jnp.repeat(CB, R, axis=1)                           # (Bb,H,Q,Q)
+        M = CB * Lmat * jnp.moveaxis(dtc, -1, 1)[:, :, None, :]  # dt_j weight
+        y_diag = jnp.einsum("bhqk,bkhp->bqhp", M, xc)
+        # contribution of the carried state ---------------------------------
+        dA_cum = jnp.cumsum(dAc, axis=1)                         # (Bb,Q,H)
+        state_decay = jnp.exp(dA_cum)                            # decay from chunk start
+        Cr = jnp.repeat(Cc, R, axis=2)                           # (Bb,Q,H,N) via groups
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", Cr, h, state_decay)
+        # chunk state update --------------------------------------------------
+        total = dA_cum[:, -1, :]                                 # (Bb,H)
+        decay_to_end = jnp.exp(total[:, None, :] - dA_cum)       # (Bb,Q,H)
+        Br = jnp.repeat(Bc, R, axis=2)                           # (Bb,Q,H,N)
+        upd = jnp.einsum("bqhn,bqh,bqhp->bhpn", Br, decay_to_end * dtc, xc)
+        h_new = h * jnp.exp(total)[:, :, None, None] + upd
+        return h_new, y_diag + y_off
+
+    h_final, ys = jax.lax.scan(body, h0, xs)                     # ys (n,Bb,Q,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S_p, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(h, x, dt, A, B, C):
+    """Single-token recurrence. h: (Bb,H,P,N); x: (Bb,H,P); dt: (Bb,H);
+    B, C: (Bb,G,N). Returns (y (Bb,H,P), h_new)."""
+    G = B.shape[1]
+    H = x.shape[1]
+    R = H // G
+    f32 = jnp.float32
+    x32, dt32 = x.astype(f32), dt.astype(f32)
+    Br = jnp.repeat(B.astype(f32), R, axis=1)                    # (Bb,H,N)
+    Cr = jnp.repeat(C.astype(f32), R, axis=1)
+    decay = jnp.exp(dt32 * A.astype(f32)[None, :])               # (Bb,H)
+    h_new = (h * decay[:, :, None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt32, x32, Br))
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Cr)
+    return y.astype(x.dtype), h_new
+
+
+# --------------------------------------------------------------------------
+# full Mamba-2 mixer block
+# --------------------------------------------------------------------------
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    G, N, H = cfg.ssm_num_groups, cfg.ssm_state_size, cfg.ssm_num_heads
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * G * N + H), 0, dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_ch), 0, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, d), 0, dtype),
+    }
+
+
+def _causal_conv(xBC, w, b, tail=None):
+    """Depthwise causal conv. xBC: (Bb, S, ch); w: (W, ch). ``tail`` is the
+    previous segment's last W-1 pre-conv inputs (continuation across a
+    split point, e.g. prefix-state sharing); zeros when None."""
+    W = w.shape[0]
+    if tail is None:
+        pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([tail.astype(xBC.dtype), xBC], axis=1)
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],           # (W, 1, ch)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xBC.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di = cfg.ssm_d_inner
+    G, N, H = cfg.ssm_num_groups, cfg.ssm_state_size, cfg.ssm_num_heads
+    P = di // H
+    conv_ch = di + 2 * G * N
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt):
+    di = cfg.ssm_d_inner
+    G, N, H = cfg.ssm_num_groups, cfg.ssm_state_size, cfg.ssm_num_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * G * N]
+    dt = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, xBC, dt, di, G, N, H
+
+
+def ssm_mixer(params, cfg: ModelConfig, u, *, cache: Optional[dict] = None,
+              initial_state=None):
+    """Sequence forward. u: (Bb, S, d) -> (out, new_cache_or_None, final_state).
+
+    ``initial_state`` is either the bare SSD state (Bb, H, P, N) or a full
+    continuation dict {"state": ..., "conv": (Bb, W-1, ch) pre-conv tail}
+    (prefix-state sharing / exact segment continuation). When a dict is
+    given, the returned final_state is a dict of the same form."""
+    Bb, S, d = u.shape
+    init_conv = None
+    want_dict = isinstance(initial_state, dict)
+    if want_dict:
+        init_conv = initial_state.get("conv")
+        initial_state = initial_state["state"]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])
+    z, xBC, dt, di, G, N, H = _split_zxbcdt(cfg, zxbcdt)
+    P = di // H
+    xBC_pre = xBC
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                   tail=init_conv)
+                      .astype(jnp.float32)).astype(u.dtype)
+    x = xBC[..., :di].reshape(Bb, S, H, P)
+    Bm = xBC[..., di: di + G * N].reshape(Bb, S, G, N)
+    Cm = xBC[..., di + G * N:].reshape(Bb, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h_final = ssd(x, dt, A, Bm, Cm, cfg.ssm_chunk_size,
+                     initial_state=initial_state)
+    y = (y.astype(jnp.float32)
+         + params["D"][None, None, :, None] * x.astype(jnp.float32))
+    y = y.astype(u.dtype).reshape(Bb, S, di)
+    y = rmsnorm({"scale": params["gate_norm"]},
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    new_cache = None
+    if cache is not None or want_dict:
+        W = cfg.ssm_conv_width
+        # keep the last (W-1) pre-conv inputs for continuation. With an
+        # initial tail the effective stream is [tail, xBC_pre].
+        stream = (jnp.pad(xBC_pre, ((0, 0), (W - 1, 0), (0, 0)))
+                  if init_conv is None
+                  else jnp.concatenate([init_conv.astype(xBC_pre.dtype),
+                                        xBC_pre], axis=1))
+        tail = jax.lax.dynamic_slice_in_dim(
+            stream, stream.shape[1] - (W - 1), W - 1, axis=1)
+        new_cache = {"state": h_final, "conv": tail}
+    final = {"state": h_final, "conv": new_cache["conv"]} if want_dict else h_final
+    return out, (new_cache if cache is not None else None), final
+
+
+def ssm_mixer_step(params, cfg: ModelConfig, u, cache: dict):
+    """Single-token decode. u: (Bb, 1, d) -> (out (Bb,1,d), new_cache)."""
+    Bb = u.shape[0]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])[:, 0]
+    z, xBC, dt, di, G, N, H = _split_zxbcdt(cfg, zxbcdt)
+    P = di // H
+    W = cfg.ssm_conv_width
+    conv_in = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)
+    w = params["conv_w"].astype(jnp.float32)
+    xBC_c = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32), w)
+        + params["conv_b"].astype(jnp.float32)).astype(u.dtype)
+    x = xBC_c[..., :di].reshape(Bb, H, P)
+    Bm = xBC_c[..., di: di + G * N].reshape(Bb, G, N)
+    Cm = xBC_c[..., di + G * N:].reshape(Bb, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h_new = ssd_step(cache["state"], x, dt, A, Bm, Cm)
+    y = (y.astype(jnp.float32)
+         + params["D"][None, :, None] * x.astype(jnp.float32))
+    y = y.astype(u.dtype).reshape(Bb, di)
+    y = rmsnorm({"scale": params["gate_norm"]},
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"])[:, None, :]
+    return out, {"state": h_new, "conv": conv_in[:, 1:]}

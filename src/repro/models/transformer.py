@@ -1,0 +1,309 @@
+"""Model assembly: decoder-only LM (dense / MoE / SSM / hybrid), VLM variant
+(precomputed patch embeddings prepended) and encoder-decoder (Whisper).
+
+Layers are *stacked* (leading L axis on every leaf) and iterated with
+``jax.lax.scan`` so the compiled HLO size is independent of depth — required
+for 60-94-layer dry-run compiles and idiomatic for production TPU stacks.
+Heterogeneous leading layers (DeepSeek-V2's first-k-dense) run unstacked as a
+"prelude" before the scanned body.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention, init_attention, make_cache
+from repro.models.layers import (dtype_of, embed, init_embedding, init_mlp,
+                                 init_rmsnorm, logits_from_hidden, mlp,
+                                 rmsnorm)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.ssm import (init_ssm, make_ssm_cache, ssm_mixer,
+                              ssm_mixer_step)
+from repro.sharding.specs import constrain
+
+
+# ==========================================================================
+# block init
+# ==========================================================================
+
+def init_block(key, cfg: ModelConfig, *, moe: bool, dense_ff: int = 0,
+               cross: bool = False, causal: bool = True) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    ks = iter(jax.random.split(key, 8))
+    p: dict = {"ln1": init_rmsnorm(d, dt)}
+    if cfg.family == "ssm":
+        p["ssm"] = init_ssm(next(ks), cfg, dt)
+        return p
+    p["attn"] = init_attention(next(ks), cfg, dt)
+    if cfg.hybrid:
+        p["ssm"] = init_ssm(next(ks), cfg, dt)
+        p["attn_out_norm"] = init_rmsnorm(d, dt)
+        p["ssm_out_norm"] = init_rmsnorm(d, dt)
+    if cross:
+        p["ln_cross"] = init_rmsnorm(d, dt)
+        p["cross_attn"] = init_attention(next(ks), cfg, dt)
+    p["ln2"] = init_rmsnorm(d, dt)
+    if moe:
+        p["moe"] = init_moe(next(ks), cfg, dt)
+    else:
+        p["mlp"] = init_mlp(next(ks), d, dense_ff or cfg.d_ff, dt)
+    return p
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    k_embed, k_pre, k_body, k_enc = jax.random.split(key, 4)
+    params: dict = {
+        "embed": init_embedding(k_embed, cfg, dt),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+    }
+    n_pre = cfg.first_k_dense if cfg.is_moe else 0
+    if n_pre:
+        pre_keys = jax.random.split(k_pre, n_pre)
+        params["prelude"] = [
+            init_block(k, cfg, moe=False, dense_ff=cfg.dense_d_ff or cfg.d_ff)
+            for k in pre_keys]
+    n_body = cfg.num_layers - n_pre
+    body_keys = jax.random.split(k_body, n_body)
+    params["layers"] = jax.vmap(
+        lambda k: init_block(k, cfg, moe=cfg.is_moe,
+                             cross=cfg.is_encoder_decoder))(body_keys)
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(k_enc, cfg.num_encoder_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: init_block(k, cfg, moe=False, causal=False))(enc_keys)
+        params["enc_final_norm"] = init_rmsnorm(cfg.d_model, dt)
+    return params
+
+
+# ==========================================================================
+# block forward
+# ==========================================================================
+
+def block_forward(bp: dict, cfg: ModelConfig, x, positions, segments, *,
+                  cache: Optional[dict] = None, cache_offset=None,
+                  enc_out=None, enc_pos=None, enc_seg=None,
+                  initial_ssm_state=None):
+    """Returns (x_out, new_cache, aux_loss, final_ssm_state)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    final_state = None
+    B, S, _ = x.shape
+    decode = cache is not None and S == 1
+
+    if cfg.family == "ssm":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        if decode:
+            out, nc = ssm_mixer_step(bp["ssm"], cfg, h, cache["ssm"])
+        else:
+            out, nc, final_state = ssm_mixer(
+                bp["ssm"], cfg, h,
+                cache=cache["ssm"] if cache is not None else None,
+                initial_state=initial_ssm_state)
+        if nc is not None:
+            new_cache["ssm"] = nc
+        x = constrain(x + out, "batch", "seq", None)
+        return x, new_cache or None, aux, final_state
+
+    h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    attn_out, kv_nc = attention(
+        bp["attn"], cfg, h, positions, segments,
+        cache=None if cache is None else cache["kv"],
+        cache_offset=cache_offset)
+    if kv_nc is not None:
+        new_cache["kv"] = kv_nc
+
+    if cfg.hybrid:
+        if decode:
+            ssm_out, ssm_nc = ssm_mixer_step(bp["ssm"], cfg, h, cache["ssm"])
+        else:
+            ssm_out, ssm_nc, final_state = ssm_mixer(
+                bp["ssm"], cfg, h,
+                cache=cache["ssm"] if cache is not None else None,
+                initial_state=initial_ssm_state)
+        if ssm_nc is not None:
+            new_cache["ssm"] = ssm_nc
+        mixed = 0.5 * (rmsnorm(bp["attn_out_norm"], attn_out, cfg.norm_eps)
+                       + rmsnorm(bp["ssm_out_norm"], ssm_out, cfg.norm_eps))
+        x = x + mixed
+    else:
+        x = x + attn_out
+
+    if "cross_attn" in bp:
+        hc = rmsnorm(bp["ln_cross"], x, cfg.norm_eps)
+        x = x + _cross_attention(bp["cross_attn"], cfg, hc, enc_out)
+
+    h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if "moe" in bp:
+        ffn_out, aux = moe_ffn(bp["moe"], cfg, h2)
+    else:
+        ffn_out = mlp(bp["mlp"], h2)
+    x = x + ffn_out
+    x = constrain(x, "batch", "seq", None)
+    return x, new_cache or None, aux, final_state
+
+
+def _cross_attention(params, cfg: ModelConfig, xq, enc_out):
+    """Encoder-decoder cross attention (full, non-causal)."""
+    B, S, _ = xq.shape
+    Se = enc_out.shape[1]
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", xq, params["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", enc_out, params["wk"]).reshape(B, Se, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, params["wv"]).reshape(B, Se, Hkv, hd)
+    # non-causal: all kv positions visible -> kv_pos=0, q_pos=0, segs 0
+    zq = jnp.zeros((B, S), jnp.int32)
+    zk = jnp.zeros((B, Se), jnp.int32)
+    out = attn_mod.chunked_attention(q, k, v, zq, zk, zq, zk,
+                                     chunk_size=cfg.attn_chunk_size)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
+
+
+# ==========================================================================
+# whole-model forward
+# ==========================================================================
+
+def encode(params: dict, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings (stub
+    frontend carve-out)."""
+    B, Se, _ = enc_embeds.shape
+    x = enc_embeds
+    zpos = jnp.zeros((B, Se), jnp.int32)
+
+    def body(x, lp):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        out = _cross_attention(lp["attn"], cfg, h, h)  # self, non-causal
+        x = x + out
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h2), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def forward_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+                   positions=None, segments=None, vision_embeds=None,
+                   enc_embeds=None, enc_out=None, caches=None,
+                   cache_offset=None, initial_ssm_states=None):
+    """Token ids -> final hidden states.
+
+    Returns (hidden (B, S, d), new_caches, aux_loss, final_ssm_states)."""
+    B, S_tok = tokens.shape
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed(params["embed"], tokens, cdt)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(cdt), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if segments is None:
+        segments = jnp.zeros((B, S), jnp.int32)
+    x = constrain(x, "batch", "seq", None)
+
+    if cfg.is_encoder_decoder and enc_out is None:
+        # decode steps pass a precomputed ``enc_out`` (engines cache encoder
+        # states); prefill/train run the encoder here.
+        assert enc_embeds is not None, "encoder-decoder model needs enc_embeds"
+        enc_out = encode(params, cfg, enc_embeds)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # prelude (unstacked heterogeneous layers) -------------------------------
+    n_pre = len(params.get("prelude", ()))
+    pre_caches = caches.get("prelude") if caches else None
+    new_pre_caches = []
+    for i, bp in enumerate(params.get("prelude", ())):
+        x, nc, aux, _ = block_forward(
+            bp, cfg, x, positions, segments,
+            cache=None if pre_caches is None else jax.tree.map(
+                lambda a, i=i: a[i], pre_caches),
+            cache_offset=cache_offset, enc_out=enc_out)
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_pre_caches.append(nc)
+
+    # scanned body -------------------------------------------------------------
+    body_caches = caches.get("layers") if caches else None
+    new_body_caches, final_states = None, None
+
+    def maybe_remat(fn):
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    if body_caches is None and initial_ssm_states is None:
+        @maybe_remat
+        def body_plain(carry, lp):
+            x, aux_acc = carry
+            x, _, aux, _ = block_forward(lp, cfg, x, positions, segments,
+                                         enc_out=enc_out)
+            return (x, aux_acc + aux), None
+        (x, aux_total), _ = jax.lax.scan(body_plain, (x, aux_total),
+                                         params["layers"])
+    elif body_caches is not None:
+        @maybe_remat
+        def body_cached(carry, xs2):
+            x, aux_acc = carry
+            lp, lc = xs2
+            x, nc, aux, fin = block_forward(
+                lp, cfg, x, positions, segments, cache=lc,
+                cache_offset=cache_offset, enc_out=enc_out)
+            return (x, aux_acc + aux), (nc, fin)
+        (x, aux_total), (new_body_caches, final_states) = jax.lax.scan(
+            body_cached, (x, aux_total), (params["layers"], body_caches))
+    else:  # initial SSM states only (prefix-state sharing / continuation)
+        @maybe_remat
+        def body_init(carry, xs2):
+            x, aux_acc = carry
+            lp, init_st = xs2
+            x, _, aux, fin = block_forward(
+                lp, cfg, x, positions, segments, enc_out=enc_out,
+                initial_ssm_state=init_st)
+            return (x, aux_acc + aux), fin
+        (x, aux_total), final_states = jax.lax.scan(
+            body_init, (x, aux_total), (params["layers"], initial_ssm_states))
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"layers": new_body_caches}
+        if n_pre:
+            new_caches["prelude"] = jax.tree.map(
+                lambda *ls: jnp.stack(ls), *new_pre_caches) if new_pre_caches else None
+    return x, new_caches, aux_total, final_states
+
+
+def init_caches(params: dict, cfg: ModelConfig, batch: int, length: int) -> dict:
+    """Build per-layer decode caches, stacked over layers to match scan."""
+    dt = dtype_of(cfg.compute_dtype)
+    kv_len = min(length, cfg.sliding_window) if cfg.sliding_window else length
+
+    def one_layer(_):
+        c = {}
+        if cfg.family != "ssm":
+            c["kv"] = make_cache(cfg, batch, kv_len, dt)
+        if cfg.family == "ssm" or cfg.hybrid:
+            c["ssm"] = make_ssm_cache(cfg, batch, dt)
+        return c
+
+    n_pre = len(params.get("prelude", ()))
+    n_body = cfg.num_layers - n_pre
+    caches = {"layers": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_body,) + a.shape).copy(),
+        one_layer(None))}
+    if n_pre:
+        caches["prelude"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_pre,) + a.shape).copy(),
+            one_layer(None))
+    return caches
+
+
+def logits(params: dict, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    return logits_from_hidden(params["embed"], cfg, hidden)

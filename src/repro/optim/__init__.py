@@ -1,0 +1,4 @@
+from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.accumulate import GradAccumulator
+
+__all__ = ["AdamState", "adam_init", "adam_update", "GradAccumulator"]

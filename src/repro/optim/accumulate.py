@@ -1,0 +1,49 @@
+"""Micro-batch gradient accumulation (paper §3, Eq. 1).
+
+J_batch = (1/M) sum_i (1/m) sum_j (...) — the consumer accumulates
+micro-batch gradients as rollouts arrive from the queue and applies one
+parameter update per iteration. Commutativity of the finite sum is what
+makes completion-order consumption gradient-equivalent (Remark 1);
+``tests/test_onpolicy.py`` asserts this numerically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class GradAccumulator:
+    """Host-side accumulator: O <- O + grad(micro_batch), then mean."""
+
+    def __init__(self):
+        self._sum = None
+        self._weight = 0.0
+        self._count = 0
+
+    def add(self, grads, weight: float = 1.0) -> None:
+        """weight = number of samples in the micro-batch, so unequal
+        micro-batches still average to the exact full-batch mean."""
+        if self._sum is None:
+            self._sum = jax.tree.map(
+                lambda g: g.astype(jnp.float32) * weight, grads)
+        else:
+            self._sum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) * weight,
+                self._sum, grads)
+        self._weight += float(weight)
+        self._count += 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    def mean(self):
+        if self._sum is None:
+            raise ValueError("no gradients accumulated")
+        w = self._weight
+        return jax.tree.map(lambda a: a / w, self._sum)
+
+    def reset(self) -> None:
+        self._sum = None
+        self._weight = 0.0
+        self._count = 0

@@ -1,0 +1,19 @@
+"""LR schedules. The paper uses constant lr 1e-6 with 0 warmup (Table 7);
+warmup-cosine provided for general use."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

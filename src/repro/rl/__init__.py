@@ -1,0 +1,6 @@
+from repro.rl.grpo import grpo_loss, group_advantages, make_grad_step, make_train_step
+from repro.rl.reward import RuleBasedReward
+from repro.rl.rollout import Sampler
+
+__all__ = ["grpo_loss", "group_advantages", "make_grad_step",
+           "make_train_step", "RuleBasedReward", "Sampler"]

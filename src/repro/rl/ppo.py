@@ -1,0 +1,43 @@
+"""PPO variant — the framework is algorithm-agnostic (paper §2: compatible
+with any standard on-policy algorithm without staleness-aware variants).
+PPO here = GRPO machinery with externally supplied per-token advantages
+(e.g. from a value model / GAE) instead of group-standardised rewards."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.rl.grpo import MicroBatch, grpo_loss, trimodel_ref_old_logprobs
+
+
+def gae_advantages(rewards: jax.Array, values: jax.Array, gamma: float = 1.0,
+                   lam: float = 0.95) -> jax.Array:
+    """Generalised advantage estimation over a (T,) reward/value sequence."""
+    T = rewards.shape[0]
+
+    def body(carry, xs):
+        adv_next, v_next = carry
+        r, v = xs
+        delta = r + gamma * v_next - v
+        adv = delta + gamma * lam * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())),
+        (rewards[::-1], values[::-1]))
+    return advs[::-1]
+
+
+def make_ppo_grad_step(cfg: ModelConfig, rl: RLConfig):
+    @jax.jit
+    def grad_step(policy_params, old_params, ref_params, mb: MicroBatch):
+        logp_old, logp_ref = trimodel_ref_old_logprobs(
+            old_params, ref_params, cfg, mb)
+        logp_old = jax.lax.stop_gradient(logp_old)
+        logp_ref = jax.lax.stop_gradient(logp_ref)
+        (loss, metrics), grads = jax.value_and_grad(
+            grpo_loss, has_aux=True)(policy_params, cfg, rl, mb,
+                                     logp_old, logp_ref)
+        return grads, metrics
+    return grad_step

@@ -1,0 +1,118 @@
+"""Batched rollout sampler — the inference-engine compute core (the vLLM
+stand-in). One jitted program performs prefill + a lax.scan decode loop with
+temperature / top-p sampling and EOS masking; prompts are left-padded so all
+rows share the cache write index while keeping true per-row positions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import Tokenizer
+from repro.models import forward_hidden, init_caches
+from repro.models.layers import lm_head_weight
+
+
+class RolloutBatch(NamedTuple):
+    response_ids: jax.Array   # (B, max_new) int32, PAD after EOS
+    response_len: jax.Array   # (B,) int32 (includes the EOS token)
+
+
+def _sample_token(key, logits, temperature: float, top_p: float):
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1)           # first idx where cum >= p
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+class Sampler:
+    """generate(): (B, Lp) left-padded prompts -> (B, max_new) responses."""
+
+    def __init__(self, cfg: ModelConfig, max_prompt_len: int,
+                 max_new_tokens: int, temperature: float = 1.0,
+                 top_p: float = 1.0, eos_id: int = Tokenizer.EOS,
+                 pad_id: int = Tokenizer.PAD):
+        self.cfg = cfg
+        self.max_prompt_len = max_prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self.top_p = top_p
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self._gen = jax.jit(self._generate)
+
+    # -- host-side helpers ---------------------------------------------------
+    def pad_prompts(self, prompts: list) -> tuple:
+        """list of 1-D int arrays -> (B, Lp) left-padded + (B,) lengths."""
+        Lp = self.max_prompt_len
+        B = len(prompts)
+        out = np.full((B, Lp), self.pad_id, np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            p = np.asarray(p, np.int32)[-Lp:]
+            out[i, Lp - len(p):] = p
+            lens[i] = len(p)
+        return jnp.asarray(out), jnp.asarray(lens)
+
+    def generate(self, params, prompts: list, key) -> RolloutBatch:
+        toks, lens = self.pad_prompts(prompts)
+        return self._gen(params, toks, lens, key)
+
+    # -- jitted core ---------------------------------------------------------
+    def _generate(self, params, prompt_ids, prompt_lens, key) -> RolloutBatch:
+        cfg = self.cfg
+        B, Lp = prompt_ids.shape
+        T = self.max_new_tokens
+        W = lm_head_weight(params["embed"], cfg)
+
+        pad = Lp - prompt_lens[:, None]                           # (B,1)
+        ar = jnp.arange(Lp, dtype=jnp.int32)[None, :]
+        is_real = ar >= pad
+        positions = jnp.where(is_real, ar - pad, 0).astype(jnp.int32)
+        segments = jnp.where(is_real, 0, -1).astype(jnp.int32)
+
+        caches = init_caches(params, cfg, B, Lp + T)
+        h, caches, _, _ = forward_hidden(
+            params, cfg, prompt_ids, positions=positions, segments=segments,
+            caches=caches, cache_offset=0)
+        logits0 = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                             W.astype(jnp.float32))
+
+        def step(carry, xs):
+            caches, logits, done, pos, key = carry
+            t = xs
+            key, k_s = jax.random.split(key)
+            tok = _sample_token(k_s, logits, self.temperature, self.top_p)
+            tok = jnp.where(done, self.pad_id, tok)
+            emit = tok
+            done_next = done | (tok == self.eos_id)
+            h, caches, _, _ = forward_hidden(
+                params, cfg, tok[:, None],
+                positions=pos[:, None], segments=jnp.zeros((B, 1), jnp.int32),
+                caches=caches, cache_offset=Lp + t)
+            logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                                     W.astype(jnp.float32))
+            return (caches, logits_next, done_next, pos + 1, key), emit
+
+        init = (caches, logits0, jnp.zeros((B,), bool), prompt_lens, key)
+        _, toks = jax.lax.scan(step, init, jnp.arange(T, dtype=jnp.int32))
+        toks = jnp.moveaxis(toks, 0, 1)                           # (B, T)
+        # response length = index of first EOS + 1, else T
+        is_eos = toks == self.eos_id
+        has_eos = is_eos.any(axis=1)
+        first_eos = jnp.argmax(is_eos, axis=1)
+        lens = jnp.where(has_eos, first_eos + 1, T).astype(jnp.int32)
+        return RolloutBatch(response_ids=toks, response_len=lens)

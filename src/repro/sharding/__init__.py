@@ -1,0 +1,4 @@
+from repro.sharding.specs import (constrain, current_mesh, param_specs,
+                                  set_mesh, use_mesh)
+
+__all__ = ["constrain", "current_mesh", "param_specs", "set_mesh", "use_mesh"]

@@ -1,0 +1,205 @@
+"""Pallas kernel sweeps: shapes x dtypes x mask variants, interpret mode on
+CPU, assert_allclose against the pure-jnp oracles in repro.kernels.ref.
+
+Also checks the structural property that makes spa_attention the paper's
+K-fold win: the block map really drops the response_i x response_j tiles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import decode_attention_ref, spa_attention_ref
+from repro.kernels.spa_attention import block_map, spa_attention
+from repro.kernels.decode_attention import decode_attention
+
+INTERP = dict(interpret=True)
+
+
+def spa_layout(key, B, Lp, Lr, K, H, Hkv, D, dtype, pad_tail=0):
+    """Build a shared-prompt packed row: [prompt, r_1..r_K] + optional pad."""
+    S = Lp + K * Lr + pad_tail
+    pos = np.zeros((B, S), np.int32)
+    seg = np.full((B, S), -1, np.int32)
+    pos[:, :Lp] = np.arange(Lp)
+    seg[:, :Lp] = 0
+    off = Lp
+    for k in range(K):
+        pos[:, off:off + Lr] = np.arange(Lp, Lp + Lr)
+        seg[:, off:off + Lr] = k + 1
+        off += Lr
+    if pad_tail:
+        pos[:, off:] = 2 ** 30 - 1   # invalid-pad: masked by causal rule
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, D), dtype)
+    k = jax.random.normal(kk, (B, S, Hkv, D), dtype)
+    v = jax.random.normal(kv, (B, S, Hkv, D), dtype)
+    return q, k, v, jnp.asarray(pos), jnp.asarray(seg)
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Lp,Lr,K,H,Hkv,D,bq,bk",
+    [
+        (1, 32, 16, 2, 2, 2, 64, 16, 16),     # MHA, tiny tiles
+        (2, 40, 24, 3, 4, 2, 64, 32, 32),     # GQA 2:1, non-divisible -> pad
+        (1, 64, 32, 4, 8, 2, 128, 64, 64),    # GQA 4:1, wide head
+        (1, 17, 9, 2, 2, 1, 32, 16, 16),      # ragged lengths -> padding path
+    ])
+def test_spa_kernel_matches_ref(dtype, B, Lp, Lr, K, H, Hkv, D, bq, bk):
+    q, k, v, pos, seg = spa_layout(jax.random.PRNGKey(0), B, Lp, Lr, K,
+                                   H, Hkv, D, dtype)
+    got = spa_attention(q, k, v, pos, pos, seg, seg,
+                        block_q=bq, block_k=bk, **INTERP)
+    want = spa_attention_ref(q, k, v, pos, pos, seg, seg)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [8, 32, None])
+def test_spa_kernel_window(window):
+    q, k, v, pos, seg = spa_layout(jax.random.PRNGKey(1), 2, 32, 16, 2,
+                                   4, 2, 64, jnp.float32)
+    got = spa_attention(q, k, v, pos, pos, seg, seg, window=window,
+                        block_q=16, block_k=16, **INTERP)
+    want = spa_attention_ref(q, k, v, pos, pos, seg, seg, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_spa_kernel_with_padding_tail():
+    """Rows padded past the packed content (seg=-1, huge pos) must not leak
+    into real outputs."""
+    q, k, v, pos, seg = spa_layout(jax.random.PRNGKey(2), 2, 24, 8, 2,
+                                   2, 2, 32, jnp.float32, pad_tail=24)
+    got = spa_attention(q, k, v, pos, pos, seg, seg,
+                        block_q=16, block_k=16, **INTERP)
+    want = spa_attention_ref(q, k, v, pos, pos, seg, seg)
+    real = 24 + 2 * 8
+    np.testing.assert_allclose(np.asarray(got)[:, :real],
+                               np.asarray(want)[:, :real],
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_spa_equals_per_sample_attention():
+    """The packed SPA output at response k's rows equals standard causal
+    attention over [prompt; response_k] alone — the paper's exactness claim
+    at the kernel level."""
+    B, Lp, Lr, K, H, D = 1, 32, 16, 3, 2, 64
+    key = jax.random.PRNGKey(3)
+    q, k, v, pos, seg = spa_layout(key, B, Lp, Lr, K, H, H, D, jnp.float32)
+    packed = spa_attention(q, k, v, pos, pos, seg, seg,
+                           block_q=16, block_k=16, **INTERP)
+    for j in range(K):
+        sl = np.r_[0:Lp, Lp + j * Lr: Lp + (j + 1) * Lr]
+        qj, kj, vj = q[:, sl], k[:, sl], v[:, sl]
+        pj = pos[:, sl]
+        zj = jnp.zeros_like(pj)
+        want = spa_attention_ref(qj, kj, vj, pj, pj, zj, zj)  # plain causal
+        np.testing.assert_allclose(
+            np.asarray(packed[:, Lp + j * Lr: Lp + (j + 1) * Lr]),
+            np.asarray(want[:, Lp:]), atol=2e-5, rtol=2e-5)
+
+
+def test_block_map_sparsity_structure():
+    """Tiles fully inside response_i x response_j (i != j) must be dead, and
+    the live fraction must approach Eq. 5's rho for Lp >> Lr."""
+    B, Lp, Lr, K = 1, 256, 64, 4
+    S = Lp + K * Lr
+    pos = np.zeros((B, S), np.int32)
+    seg = np.zeros((B, S), np.int32)
+    pos[:, :Lp] = np.arange(Lp)
+    off = Lp
+    for k in range(K):
+        pos[:, off:off + Lr] = np.arange(Lp, Lp + Lr)
+        seg[:, off:off + Lr] = k + 1
+        off += Lr
+    bq = bk = 64
+    bm = np.asarray(block_map(jnp.asarray(pos), jnp.asarray(pos),
+                              jnp.asarray(seg), jnp.asarray(seg), bq, bk))
+    nq = S // bq
+    # response_i x response_j dead tiles: query tile in resp i, kv tile in
+    # resp j != i (both fully inside one response since Lr == tile size)
+    for i in range(K):
+        for j in range(K):
+            qt = (Lp + i * Lr) // bq
+            kt = (Lp + j * Lr) // bk
+            if i == j:
+                assert bm[0, qt, kt] == 1
+            else:
+                assert bm[0, qt, kt] == 0, (i, j)
+    # kv tiles in the shared prompt are live for all later query tiles
+    assert bm[0, nq - 1, 0] == 1
+    live_frac = bm.mean()
+    # dense causal would be ~0.56; SPA structure must prune well below it
+    dense_causal = np.tril(np.ones((nq, nq))).mean()
+    assert live_frac < dense_causal
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,L,H,Hkv,D,bL",
+    [
+        (2, 64, 4, 4, 64, 32),     # MHA
+        (2, 100, 8, 2, 64, 32),    # GQA 4:1, ragged L -> pad
+        (1, 256, 8, 1, 128, 64),   # MQA
+        (4, 33, 2, 2, 32, 16),     # tiny ragged
+    ])
+def test_decode_kernel_matches_ref(dtype, B, L, H, Hkv, D, bL):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, D), dtype)
+    k = jax.random.normal(kk, (B, L, Hkv, D), dtype)
+    v = jax.random.normal(kv, (B, L, Hkv, D), dtype)
+    kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    q_pos = jnp.full((B,), L, jnp.int32)
+    got = decode_attention(q, k, v, kv_pos, q_pos, block_l=bL, **INTERP)
+    want = decode_attention_ref(q, k, v, kv_pos, q_pos)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_decode_kernel_window_and_invalid_slots(window):
+    """Ring-buffer semantics: some slots carry INVALID pos (2**30) and the
+    window must exclude old positions."""
+    B, L, H, Hkv, D = 2, 96, 4, 2, 64
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, L, Hkv, D), jnp.float32)
+    v = jax.random.normal(kv, (B, L, Hkv, D), jnp.float32)
+    kv_pos = np.broadcast_to(np.arange(L, dtype=np.int32), (B, L)).copy()
+    kv_pos[:, 70:] = 2 ** 30    # unwritten ring slots
+    kv_pos = jnp.asarray(kv_pos)
+    q_pos = jnp.full((B,), 70, jnp.int32)
+    got = decode_attention(q, k, v, kv_pos, q_pos, window=window,
+                           block_l=32, **INTERP)
+    want = decode_attention_ref(q, k, v, kv_pos, q_pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_kernel_matches_spa_kernel_single_token():
+    """Cross-kernel consistency: decoding one token with decode_attention
+    equals running spa_attention with Sq=1."""
+    B, L, H, Hkv, D = 2, 64, 4, 2, 64
+    key = jax.random.PRNGKey(9)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, L, Hkv, D), jnp.float32)
+    v = jax.random.normal(kv, (B, L, Hkv, D), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    q_pos1 = jnp.full((B, 1), L, jnp.int32)
+    zq = jnp.zeros((B, 1), jnp.int32)
+    zk = jnp.zeros((B, L), jnp.int32)
+    a = spa_attention(q, k, v, q_pos1, kv_pos, zq, zk,
+                      block_q=16, block_k=16, **INTERP)
+    b = decode_attention(q[:, 0], k, v, kv_pos, q_pos1[:, 0],
+                         block_l=32, **INTERP)
+    np.testing.assert_allclose(np.asarray(a[:, 0]), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,225 @@
+"""On-policy correctness (paper §4.2.3).
+
+* Remark 1 — gradient permutation invariance: consuming the same rollout
+  groups in any order accumulates to the same mean gradient.
+* Proposition 1 — periodic weight consistency: every group consumed in
+  iteration t was generated under theta_t; sync and async schedulers produce
+  (numerically) the same parameter trajectory; the off-policy baseline
+  provably does NOT (staleness > 0 observed).
+* OnPolicyMonitor turns the proof obligation into a runtime assertion.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.core.onpolicy import OnPolicyMonitor, OnPolicyViolation
+from repro.core.queue import RolloutGroup, RolloutQueue
+from repro.launch.train import build_pipeline
+from repro.optim.accumulate import GradAccumulator
+from repro.rl.grpo import group_advantages
+
+
+def scripted_echo(prompts, key):
+    """Deterministic scripted inference: responds with tokens derived from
+    the prompt (same policy-version-independent output for every call), so
+    sync and async runs see byte-identical rollouts."""
+    from repro.rl.rollout import RolloutBatch
+    G = len(prompts)
+    T = 8
+    resp = np.zeros((G, T), np.int32)
+    lens = np.zeros((G,), np.int32)
+    seed = int(np.asarray(prompts[0]).sum()) % 1000
+    rng = np.random.RandomState(seed)
+    for g in range(G):
+        n = rng.randint(3, T)
+        resp[g, :n] = rng.randint(3, 200, size=(n,))
+        resp[g, n - 1] = 2  # EOS
+        lens[g] = n
+    return RolloutBatch(response_ids=jnp.asarray(resp),
+                        response_len=jnp.asarray(lens))
+
+
+def _mini_rl(mode: str, **kw) -> RLConfig:
+    return RLConfig(mode=mode, batch_prompts=3, group_size=4, micro_batch=2,
+                    num_inference_instances=2, max_prompt_len=24,
+                    max_response_len=8, learning_rate=1e-3, seed=0, **kw)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_config(get_config("llama3.2-3b"))
+
+
+def _run(cfg, mode: str, iterations: int = 3, **kw):
+    rl = _mini_rl(mode, **kw)
+    sched, parts = build_pipeline(cfg, rl, seed=0, scripted_fn=scripted_echo)
+    hist = sched.run(iterations)
+    return sched, parts, hist
+
+
+# =========================================================================
+# Remark 1: permutation invariance of the accumulated gradient
+# =========================================================================
+
+def test_grad_accumulator_permutation_invariance():
+    key = jax.random.PRNGKey(0)
+    grads = [jax.tree.map(lambda _: jax.random.normal(
+        jax.random.fold_in(key, i), (16, 16)), {"w": 0, "b": 0})
+        for i in range(6)]
+    weights = [1.0, 2.0, 1.0, 3.0, 1.0, 2.0]
+
+    def accumulate(order):
+        acc = GradAccumulator()
+        for i in order:
+            acc.add(grads[i], weights[i])
+        return acc.mean()
+
+    a = accumulate(range(6))
+    b = accumulate([5, 3, 1, 0, 4, 2])
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# =========================================================================
+# Proposition 1 end-to-end: sync == async parameter trajectory
+# =========================================================================
+
+def test_sync_async_same_params(cfg):
+    """The paper's central claim: periodic asynchrony changes only the
+    *consumption order*, so the parameter trajectory matches the synchronous
+    baseline (up to fp32 summation reordering)."""
+    s_sync, p_sync, _ = _run(cfg, "sync")
+    s_async, p_async, _ = _run(cfg, "async")
+    leaves_a = jax.tree.leaves(p_sync["tri"].policy)
+    leaves_b = jax.tree.leaves(p_async["tri"].policy)
+    for a, b in zip(leaves_a, leaves_b):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_async_strictly_onpolicy(cfg):
+    """Every consumed group carries the current weight version (staleness 0)."""
+    sched, _, hist = _run(cfg, "async")
+    assert all(s.max_staleness == 0 for s in hist)
+    assert sched.monitor.checked == 3 * 3  # iterations x batch_prompts
+
+
+def test_offpolicy_baseline_is_stale(cfg):
+    """The AReaL-like baseline must observe staleness > 0 — demonstrating
+    what periodic asynchrony avoids."""
+    sched, _, hist = _run(cfg, "async_offpolicy", staleness_eta=1)
+    assert max(s.max_staleness for s in hist) >= 1
+
+
+def test_old_policy_is_previous_iteration(cfg):
+    """Algorithm 1 lines 10-11 ordering: after iteration t the old-policy
+    weights equal the policy weights that generated iteration t's rollouts
+    (i.e. pre-update), not the post-update ones."""
+    rl = _mini_rl("async")
+    sched, parts, _ = (lambda s: (s[0], s[1], s[0].run(1)))(
+        build_pipeline(cfg, rl, seed=0, scripted_fn=scripted_echo))
+    tri = parts["tri"]
+    # after 1 iteration: old == theta_0 (the generator of batch 0),
+    # policy == theta_1 != old
+    assert tri.version == 1
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        tri.policy, tri.old)))
+    assert diff > 0
+
+
+# =========================================================================
+# OnPolicyMonitor unit behaviour
+# =========================================================================
+
+def _fake_group(version: int) -> RolloutGroup:
+    return RolloutGroup(uid=1, prompt_ids=np.zeros(4, np.int32),
+                        response_ids=np.zeros((2, 4), np.int32),
+                        response_len=np.ones(2, np.int32),
+                        rewards=np.zeros(2, np.float32),
+                        weight_version=version)
+
+
+def test_monitor_strict_raises_on_stale():
+    m = OnPolicyMonitor(strict=True)
+    m.check(_fake_group(3), 3)
+    with pytest.raises(OnPolicyViolation):
+        m.check(_fake_group(2), 3)
+
+
+def test_monitor_lenient_measures():
+    m = OnPolicyMonitor(strict=False)
+    m.check(_fake_group(1), 3)
+    assert m.max_staleness_seen == 2
+
+
+# =========================================================================
+# Queue semantics that Proposition 1's proof relies on
+# =========================================================================
+
+def test_queue_wait_empty_blocks_until_consumed():
+    q = RolloutQueue()
+    q.register_pending(2)
+    assert not q.wait_empty(timeout=0.05)
+    q.put(_fake_group(0))
+    q.put(_fake_group(0))
+    assert not q.wait_empty(timeout=0.05)   # enqueued but not consumed
+    q.get(); q.get()
+    assert q.wait_empty(timeout=0.05)
+
+
+def test_queue_completion_order_not_submission_order():
+    """The queue hands out groups in completion-time order — the async
+    scheduler's defining behaviour (Figure 3b)."""
+    q = RolloutQueue()
+    q.register_pending(3)
+    done = []
+
+    def produce(uid, delay):
+        import time
+        time.sleep(delay)
+        g = _fake_group(0)
+        g.uid = uid
+        q.put(g)
+
+    ts = [threading.Thread(target=produce, args=(i, d))
+          for i, d in enumerate([0.15, 0.01, 0.08])]
+    for t in ts:
+        t.start()
+    for _ in range(3):
+        done.append(q.get(timeout=2.0).uid)
+    for t in ts:
+        t.join()
+    assert done == [1, 2, 0]     # completion order, not submission order
+
+
+def test_queue_producer_error_propagates():
+    q = RolloutQueue()
+    q.register_pending(1)
+    q.put_error(RuntimeError("rollout worker died"))
+    with pytest.raises(RuntimeError, match="worker died"):
+        q.get(timeout=1.0)
+
+
+# =========================================================================
+# Group advantages (GRPO) sanity
+# =========================================================================
+
+def test_group_advantages_standardised():
+    r = jnp.asarray([1.0, 0.0, 0.0, 1.0])
+    a = np.asarray(group_advantages(r))
+    np.testing.assert_allclose(a.mean(), 0.0, atol=1e-6)
+    assert a[0] > 0 > a[1]
+
+
+def test_group_advantages_constant_rewards_are_zero():
+    a = np.asarray(group_advantages(jnp.ones(4)))
+    np.testing.assert_allclose(a, 0.0, atol=1e-3)

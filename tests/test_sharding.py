@@ -1,0 +1,50 @@
+"""Sharding-rule unit tests: profiles, divisibility fallbacks, cache specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import (LOGICAL_TO_MESH, current_profile_map,
+                                  profile_has, set_profile, spec_for)
+
+
+@pytest.fixture(autouse=True)
+def restore_profile():
+    yield
+    set_profile("baseline")
+
+
+def _mesh_stub():
+    """A Mesh-shaped stub: spec_for only reads axis_names and shape."""
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+    return M()
+
+
+def test_spec_resolves_divisible_dims():
+    m = _mesh_stub()
+    assert spec_for(m, (8, 16), ("batch", "model")) == P("data", "model")
+
+
+def test_spec_skips_indivisible_dims():
+    m = _mesh_stub()
+    # 6 % 4 != 0 -> batch dim unsharded rather than invalid
+    assert spec_for(m, (6, 16), ("batch", "model")) == P(None, "model")
+
+
+def test_profiles_switch_and_restore():
+    base = current_profile_map()
+    set_profile("dp2")
+    assert LOGICAL_TO_MESH["batch"] == ("pod", "data", "model")
+    assert not profile_has("seq")
+    set_profile("sp_heads")
+    assert profile_has("heads") and profile_has("ffn")
+    set_profile("baseline")
+    assert current_profile_map() == base
+
+
+def test_unknown_logical_axis_is_noop():
+    m = _mesh_stub()
+    # "heads" unmapped under baseline; "pod" absent from this mesh
+    assert spec_for(m, (8, 8), ("heads", None)) == P(None, None)

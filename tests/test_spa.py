@@ -1,0 +1,145 @@
+"""Shared-prompt attention equivalence (paper §4.3): packed-gradient ==
+sum of per-sample gradients, exactly (f32), plus the Eq. 5 reduction ratio."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.core.queue import RolloutGroup
+from repro.core.spa import pack_plain, pack_spa, spa_reduction_ratio
+from repro.models import init
+from repro.rl.grpo import MicroBatch, make_grad_step, group_advantages
+
+
+def _group(key, G=4, Lp=12, Lr=(5, 8, 3, 8)):
+    ks = np.random.RandomState(0)
+    prompt = ks.randint(3, 200, size=(Lp,)).astype(np.int32)
+    T = max(Lr)
+    resp = np.zeros((G, T), np.int32)
+    lens = np.zeros((G,), np.int32)
+    for g in range(G):
+        resp[g, : Lr[g]] = ks.randint(3, 200, size=(Lr[g],))
+        lens[g] = Lr[g]
+    rewards = np.asarray([1.0, 0.0, 0.0, 1.0], np.float32)
+    return RolloutGroup(uid=0, prompt_ids=prompt, response_ids=resp,
+                        response_len=lens, rewards=rewards, weight_version=0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    rl = RLConfig(kl_coef=0.02, group_size=4, max_prompt_len=16,
+                  max_response_len=8)
+    params = init(jax.random.PRNGKey(0), cfg)
+    return cfg, rl, params
+
+
+def test_spa_packing_layout():
+    g = _group(None)
+    adv = np.asarray(group_advantages(jnp.asarray(g.rewards)))
+    mb = pack_spa(g, adv, 16, 8, responses_per_row=4)
+    Lp = len(g.prompt_ids)
+    t, seg, pos = mb.tokens[0], mb.segments[0], mb.positions[0]
+    # shared prompt occupies [0, Lp-1) with segment 0
+    assert (seg[: Lp - 1] == 0).all()
+    assert (pos[: Lp - 1] == np.arange(Lp - 1)).all()
+    # each response slot starts with the last prompt token, restarts position
+    off = Lp - 1
+    for k in range(4):
+        assert t[off] == g.prompt_ids[-1]
+        assert pos[off] == Lp - 1
+        assert seg[off] == k + 1
+        off += 1 + 8
+    # per-sample loss weights sum to 1 for each response
+    w = mb.loss_mask[0]
+    for k in range(4):
+        lo = (Lp - 1) + k * 9
+        s = w[lo: lo + 9].sum()
+        np.testing.assert_allclose(s, 1.0, rtol=1e-5)
+
+
+def test_spa_gradient_equivalence(setup):
+    """grad(SPA-packed row) == grad(sum of per-sample rows) — the paper's
+    exactness claim, asserted at f32."""
+    cfg, rl, params = setup
+    g = _group(None)
+    adv = np.asarray(group_advantages(jnp.asarray(g.rewards)))
+    grad_step = make_grad_step(cfg, rl)
+
+    mb_plain = pack_plain([g], [adv], 16, 8)
+    grads_plain, m_plain = grad_step(params, params, params,
+                                     MicroBatch(*map(jnp.asarray, mb_plain[:-2]),
+                                                n_samples=mb_plain.n_samples))
+    mb_spa = pack_spa(g, adv, 16, 8, responses_per_row=4)
+    grads_spa, m_spa = grad_step(params, params, params,
+                                 MicroBatch(*map(jnp.asarray, mb_spa[:-2]),
+                                            n_samples=mb_spa.n_samples))
+    flat_p = jax.tree.leaves(grads_plain)
+    flat_s = jax.tree.leaves(grads_spa)
+    for a, b in zip(flat_p, flat_s):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+    np.testing.assert_allclose(float(m_plain["loss"]), float(m_spa["loss"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_spa_no_cross_response_leakage(setup):
+    """Perturbing response j's tokens must not change response i's logp."""
+    cfg, rl, params = setup
+    from repro.models import forward_hidden, token_logprobs
+    g = _group(None)
+    adv = np.asarray(group_advantages(jnp.asarray(g.rewards)))
+    mb = pack_spa(g, adv, 16, 8, responses_per_row=4)
+
+    def logps(tokens):
+        h, _, _, _ = forward_hidden(params, cfg, jnp.asarray(tokens),
+                                    positions=jnp.asarray(mb.positions),
+                                    segments=jnp.asarray(mb.segments))
+        return token_logprobs(params, cfg, h, jnp.asarray(mb.labels))
+
+    base = np.asarray(logps(mb.tokens))
+    Lp = len(g.prompt_ids)
+    # perturb the whole response-2 slot
+    t2 = mb.tokens.copy()
+    lo = (Lp - 1) + 1 * 9
+    t2[0, lo: lo + 9] = 7
+    pert = np.asarray(logps(t2))
+    # response 1 slot (segment 1) unchanged
+    s0 = slice(Lp - 1, Lp - 1 + 9)
+    np.testing.assert_allclose(base[0, s0], pert[0, s0], atol=1e-5)
+    # response 2 slot changed
+    assert np.abs(base[0, lo: lo + 9] - pert[0, lo: lo + 9]).max() > 1e-3
+
+
+@pytest.mark.parametrize("Lp,Lr,K", [(1024, 64, 16), (128, 128, 8),
+                                     (64, 512, 32)])
+def test_spa_reduction_ratio_eq5(Lp, Lr, K):
+    rho = spa_reduction_ratio(Lp, Lr, K)
+    expect = (Lp ** 2 + K * Lr * (Lp + Lr)) / (K * (Lp + Lr) ** 2)
+    np.testing.assert_allclose(rho, expect)
+    if Lp >= 16 * Lr:
+        assert rho < 2.0 / K + 0.2   # approaches 1/K for long prompts
+
+
+def test_spa_align_gradient_equivalence(setup):
+    """Beyond-paper spa_align=16 (tile-aligned slots, §Perf): padding slots
+    to the kernel tile must not change the gradients."""
+    cfg, rl, params = setup
+    g = _group(None)
+    adv = np.asarray(group_advantages(jnp.asarray(g.rewards)))
+    grad_step = make_grad_step(cfg, rl)
+
+    def grads_of(mb):
+        gr, _ = grad_step(params, params, params,
+                          MicroBatch(*map(jnp.asarray, mb[:-2]),
+                                     n_samples=mb.n_samples))
+        return gr
+
+    g_plain = grads_of(pack_spa(g, adv, 16, 8, responses_per_row=4))
+    g_align = grads_of(pack_spa(g, adv, 16, 8, responses_per_row=4,
+                                align=16))
+    for a, b in zip(jax.tree.leaves(g_plain), jax.tree.leaves(g_align)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
