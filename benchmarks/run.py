@@ -17,7 +17,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single table (table1..table5, roofline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: just the continuous-batching table "
+                         "(slot engine + pool-level paged-vs-group), "
+                         "skipping the slow training-side tables")
     args = ap.parse_args()
+    if args.smoke and args.only:
+        ap.error("--smoke picks its own table set; drop --only")
 
     from benchmarks import (table1_async, table2_trimodel, table3_spa,
                             table4_dp_baselines, table5_scaling,
@@ -30,6 +36,9 @@ def main() -> None:
         "table5": table5_scaling.main,
         "table6": table6_cbatch.main,   # beyond-paper: continuous batching
     }
+    if args.smoke:
+        tables = {"table6": table6_cbatch.main,
+                  "table6_pool": table6_cbatch.pool_mode}
     print("table,name,value,derived")
     failures = 0
     for name, fn in tables.items():
@@ -44,7 +53,7 @@ def main() -> None:
             traceback.print_exc()
         print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
 
-    if args.only in (None, "roofline"):
+    if not args.smoke and args.only in (None, "roofline"):
         from benchmarks import roofline
         rows = roofline.load("16x16")
         if rows:

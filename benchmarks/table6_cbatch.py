@@ -10,9 +10,17 @@ decode steps track the SUM of true lengths, not batches x max length.
 Both engines serve the same requests with the same weights; response lengths
 vary via per-request targets (in RL they vary via EOS); the fixed engine
 always pays max_new decode steps per batch, which is the paper's point.
+
+``--pool`` adds the end-to-end POOL-LEVEL comparison (DESIGN.md
+§Continuous-batching): concurrent GRPO groups submitted from worker threads
+— exactly what the temporary data generator does — through an
+InferenceInstance running (a) the group-at-a-time Sampler and (b) the
+token-level paged engine, reporting decode tokens/sec for both paths on
+token-identical output.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
@@ -83,5 +91,97 @@ def main() -> dict:
     return out
 
 
+def pool_mode(n_groups: int = 6, group_size: int = 4, workers: int = 4
+              ) -> dict:
+    """Pool-level decode throughput: the same concurrent group workload
+    through the group-at-a-time instance and the paged token-level
+    instance. Outputs are asserted token-identical, so the tokens/sec
+    numbers compare engines, not sampling luck."""
+    from repro.core.engine import InferenceInstance
+    from repro.core.paged import PagedGroupEngine
+
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    params = init(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(n_groups, seed=5)
+    keys = jax.random.split(jax.random.PRNGKey(3), n_groups)
+    sampler = Sampler(cfg, LP, T, temperature=1.0, eos_id=EOS)
+
+    def drive(inst):
+        """Submit every group from worker threads, generator-style."""
+        results = [None] * n_groups
+        lock = threading.Lock()
+        todo = list(range(n_groups))
+
+        def worker():
+            while True:
+                with lock:
+                    if not todo:
+                        return
+                    i = todo.pop(0)
+                results[i] = inst.generate_group(
+                    [prompts[i]] * group_size, keys[i])[0]
+
+        threads = [threading.Thread(target=worker) for _ in range(workers)]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        wall = time.perf_counter() - t0
+        toks = sum(int(np.asarray(r.response_len).sum()) for r in results)
+        return results, wall, toks
+
+    def make_paged():
+        eng = PagedGroupEngine(
+            cfg, num_slots=2 * group_size, page_size=8, num_pages=0,
+            max_prompt_len=LP, max_new_tokens=T, group_size=group_size,
+            temperature=1.0, eos_id=EOS)
+        inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
+        inst.sync_weights(params, 0)
+        return inst, eng
+
+    def make_group():
+        inst = InferenceInstance(0, cfg, sampler)
+        inst.sync_weights(params, 0)
+        return inst, None
+
+    out = {}
+    results = {}
+    for name, make in (("group", make_group), ("paged", make_paged)):
+        inst, eng = make()
+        drive(inst)                                   # jit warmup pass
+        if eng is not None:
+            eng.reset_stats()
+        inst.busy_time = 0.0
+        res, wall, toks = drive(inst)
+        results[name] = res
+        out[f"pool_{name}_wall"] = wall
+        out[f"pool_{name}_tokens"] = toks
+        out[f"pool_{name}_tok_s"] = toks / wall
+        extra = (f"{eng.decode_steps} decode steps (<= {2 * group_size} "
+                 f"wide), busy {inst.busy_time:.2f}s"
+                 if eng is not None else
+                 f"{n_groups * T} scan steps ({group_size} wide), "
+                 f"busy {inst.busy_time:.2f}s")
+        emit("table6", f"pool_{name}_decode_tok_s", f"{toks / wall:.1f}",
+             f"{n_groups} groups x{group_size}, {wall:.2f}s wall — {extra}")
+    for a, b in zip(results["group"], results["paged"]):
+        np.testing.assert_array_equal(np.asarray(a.response_ids),
+                                      np.asarray(b.response_ids))
+    emit("table6", "pool_paged_speedup",
+         f"{out['pool_paged_tok_s'] / out['pool_group_tok_s']:.2f}x",
+         "token-identical output (verified)")
+    save("table6_pool", out)
+    return out
+
+
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", action="store_true",
+                    help="also run the end-to-end pool-level engine "
+                         "comparison (group-at-a-time vs paged)")
+    args = ap.parse_args()
     main()
+    if args.pool:
+        pool_mode()

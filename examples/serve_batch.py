@@ -29,8 +29,13 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cbatch", type=int, default=0, metavar="SLOTS",
-                    help="serve through the continuous-batching engine "
-                         "with this many slots (0 = fixed-batch sampler)")
+                    help="serve through the dense-slot continuous-batching "
+                         "engine with this many slots (0 = fixed-batch "
+                         "sampler)")
+    ap.add_argument("--paged", type=int, default=0, metavar="SLOTS",
+                    help="serve through the token-level paged-KV engine "
+                         "with this many slots (shared page pool, slots "
+                         "freed at EOS — see DESIGN.md §Continuous-batching)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -42,6 +47,24 @@ def main() -> None:
     problems = ArithmeticTask(seed=args.seed).batch(args.num_requests)
     prompts = [np.asarray(tok.encode(p.prompt)[: args.max_prompt_len],
                           np.int32) for p in problems]
+
+    if args.paged and args.cbatch:
+        raise SystemExit("--paged and --cbatch are different engines; "
+                         "pick one")
+    if args.paged:
+        from repro.launch.serve import serve_paged
+        done, stats = serve_paged(
+            cfg, prompts, max_prompt_len=args.max_prompt_len,
+            max_new=args.max_new, num_slots=args.paged,
+            temperature=args.temperature, seed=args.seed)
+        print(f"{args.arch} (paged x{args.paged}): {len(done)} requests in "
+              f"completion order, {stats['generated_tokens']} tokens in "
+              f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
+              f"{stats['decode_steps']} decode steps)")
+        for c in done[:4]:
+            print(f"  req {c.request_id} finished at step {c.finish_step}: "
+                  f"{tok.decode(c.response_ids.tolist())!r}")
+        return
 
     if args.cbatch:
         import time

@@ -216,4 +216,15 @@ class RLConfig:
     mode: str = "async"                # sync | async | async_offpolicy
     staleness_eta: int = 1             # for the AReaL-like off-policy baseline
     num_inference_instances: int = 4   # train:rollout ratio (paper: 1:4)
+    # rollout decode engine (DESIGN.md §Continuous-batching):
+    #   "group" — one jitted group-at-a-time Sampler call per request;
+    #   "paged" — token-level continuous batching over a paged KV cache
+    #             with one physical prompt copy per GRPO group. Token-
+    #             identical to "group" under the same key; requires a
+    #             decoder-only GQA family and mode != async_offpolicy
+    #             (weight sync needs a quiescent engine).
+    rollout_engine: str = "group"
+    cbatch_slots: int = 8              # decode slots per paged instance
+    kv_page_size: int = 16             # tokens per KV page
+    kv_pages: int = 0                  # physical pages (0 = auto-size)
     seed: int = 0

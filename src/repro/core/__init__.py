@@ -5,10 +5,12 @@ Pipeline wiring (paper Figure 1):
                          |  RolloutQueue  |
     PeriodicAsyncScheduler (consumer: tri-model GRPO + accumulation)
 """
-from repro.core.cbatch import Completed, ContinuousBatchingSampler
+from repro.core.cbatch import (Completed, ContinuousBatchingSampler,
+                               SlotScheduler)
 from repro.core.engine import InferenceInstance, InferencePool
 from repro.core.generator import TemporaryDataGenerator
 from repro.core.onpolicy import OnPolicyMonitor, OnPolicyViolation
+from repro.core.paged import GroupHandle, PagedGroupEngine, PageAllocator
 from repro.core.prefix import (broadcast_states, prompt_states,
                                shared_prompt_logprobs, zero_ssm_states)
 from repro.core.queue import RolloutGroup, RolloutQueue
@@ -17,7 +19,8 @@ from repro.core.spa import pack_plain, pack_spa, spa_reduction_ratio
 from repro.core.trimodel import TriModelState
 
 __all__ = [
-    "Completed", "ContinuousBatchingSampler",
+    "Completed", "ContinuousBatchingSampler", "SlotScheduler",
+    "GroupHandle", "PagedGroupEngine", "PageAllocator",
     "InferenceInstance", "InferencePool", "TemporaryDataGenerator",
     "OnPolicyMonitor", "OnPolicyViolation", "RolloutGroup", "RolloutQueue",
     "IterationStats", "PeriodicAsyncScheduler", "pack_plain", "pack_spa",

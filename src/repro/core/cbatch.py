@@ -21,8 +21,9 @@ is exactly what the temporary data generator's queue consumes.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from functools import partial
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +41,74 @@ class Completed:
     request_id: int
     response_ids: np.ndarray     # (n,) int32, includes EOS if hit
     finish_step: int             # engine step at completion (completion order)
+
+
+class SlotScheduler:
+    """Admission/eviction bookkeeping for a fixed pool of decode slots —
+    the host-side policy every token-level engine here shares (this module's
+    ``ContinuousBatchingSampler`` and the paged-pool engine in
+    ``core/paged.py``).
+
+    Requests join a FIFO; each engine step fills free slots from the front
+    (an optional ``gate`` refuses admission while a resource — e.g. the KV
+    page freelist — is exhausted, without reordering the FIFO), and
+    completed requests leave their slot the step they finish, so the engine
+    emits in completion order, never submission order."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.slot_req: List[Optional[object]] = [None] * num_slots
+        self._pending: deque = deque()
+        self.step = 0
+
+    # -- queue state --------------------------------------------------------
+    def submit(self, req) -> None:
+        self._pending.append(req)
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)
+
+    def active_slots(self) -> List[int]:
+        return [s for s in range(self.num_slots)
+                if self.slot_req[s] is not None]
+
+    @property
+    def idle(self) -> bool:
+        return not self._pending and not any(
+            r is not None for r in self.slot_req)
+
+    # -- admission / eviction ----------------------------------------------
+    def admit(self, gate: Optional[Callable] = None,
+              limit: Optional[int] = None) -> List[tuple]:
+        """Fill free slots from the FIFO; returns [(slot, request), ...].
+        ``gate(req) -> bool`` may refuse the request at the FIFO's front,
+        which stops admission this step (strict FIFO, no overtaking).
+        ``limit`` caps admissions per call — engines whose gate depends on
+        resources consumed by admission itself (the paged engine's page
+        freelist) admit one at a time so the gate never reads stale state."""
+        out = []
+        for s in range(self.num_slots):
+            if limit is not None and len(out) >= limit:
+                break
+            if self.slot_req[s] is not None or not self._pending:
+                continue
+            if gate is not None and not gate(self._pending[0]):
+                break
+            req = self._pending.popleft()
+            self.slot_req[s] = req
+            out.append((s, req))
+        return out
+
+    def evict(self, slot: int):
+        """Free a slot (completion or preemption); returns its request."""
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        return req
+
+    def tick(self) -> int:
+        self.step += 1
+        return self.step
 
 
 class ContinuousBatchingSampler:
@@ -117,22 +186,18 @@ class ContinuousBatchingSampler:
         cfg, B = self.cfg, self.B
         limits = (max_new_per_request if max_new_per_request is not None
                   else [self.T] * len(prompts))
-        pending = list(enumerate(prompts))
+        sched = SlotScheduler(B)
+        for rid, p in enumerate(prompts):
+            sched.submit((rid, p))
         caches = init_caches(params, cfg, B, self.max_ctx)
         logits = jnp.zeros((B, cfg.vocab_size), jnp.float32)
         offsets = np.zeros((B,), np.int32)
-        active = np.zeros((B,), bool)
-        slot_req = [-1] * B
         slot_toks: List[list] = [[] for _ in range(B)]
         done: List[Completed] = []
-        step = 0
 
-        while pending or active.any():
+        while not sched.idle:
             # admit pending requests into free slots
-            for s in range(B):
-                if active[s] or not pending:
-                    continue
-                rid, p = pending.pop(0)
+            for s, (rid, p) in sched.admit():
                 p = np.asarray(p, np.int32)[: self.Lp]
                 row = np.full((1, self.Lp), self.pad_id, np.int32)
                 row[0, : len(p)] = p
@@ -141,27 +206,26 @@ class ContinuousBatchingSampler:
                     jnp.asarray([len(p)], jnp.int32), s)
                 logits = logits.at[s].set(lg)
                 offsets[s] = len(p)
-                active[s] = True
-                slot_req[s] = rid
                 slot_toks[s] = []
-            # one decode step for every slot
+            # one decode step for every slot — the scheduler's slot
+            # occupancy IS the decode mask
+            active = np.zeros((B,), bool)
+            active[sched.active_slots()] = True
             key, k = jax.random.split(key)
             tok, caches, logits, off_new = self._decode(
                 params, caches, logits, jnp.asarray(offsets),
                 jnp.asarray(active), k)
             tok = np.asarray(tok)
             offsets = np.array(off_new)  # writable copy
-            step += 1
-            for s in range(B):
-                if not active[s]:
-                    continue
+            step = sched.tick()
+            for s in list(sched.active_slots()):
+                rid = sched.slot_req[s][0]
                 slot_toks[s].append(int(tok[s]))
                 if (tok[s] == self.eos_id
-                        or len(slot_toks[s]) >= min(self.T,
-                                                    limits[slot_req[s]])):
+                        or len(slot_toks[s]) >= min(self.T, limits[rid])):
                     done.append(Completed(
-                        request_id=slot_req[s],
+                        request_id=rid,
                         response_ids=np.asarray(slot_toks[s], np.int32),
                         finish_step=step))
-                    active[s] = False
+                    sched.evict(s)
         return done

@@ -2,10 +2,19 @@
 iteration-boundary weight synchronisation (the decoupled deployment of
 paper §4.1 — 'vLLM for inference, Megatron for training').
 
-Two execution modes per instance:
-  * real   — the jitted Sampler actually generates tokens (JAX releases the
-             GIL during compute, so producer threads overlap with the
-             consumer's training compute);
+Three execution modes per instance:
+  * real / group  — the jitted Sampler generates a whole group at a time
+             (JAX releases the GIL during compute, so producer threads
+             overlap with the consumer's training compute);
+  * real / paged  — token-level continuous batching over a paged KV cache
+             (core/paged.py): concurrent group requests from the generator's
+             workers decode together one token per step, short rollouts
+             free their slots early, and the GRPO group's prompt is stored
+             once. Worker threads drive the engine convoy-style: whoever
+             waits on a group steps the engine under the instance lock, so
+             no dedicated decode thread exists and the engine goes quiet
+             exactly when no requests are in flight (weight sync stays an
+             iteration-boundary event — Proposition 1 intact);
   * simulated — the instance sleeps according to a latency model and returns
              scripted responses. This is the trainer's-eye view of a REMOTE
              inference deployment (inference on separate devices), and is
@@ -22,18 +31,23 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.paged import PagedGroupEngine
 from repro.rl.rollout import RolloutBatch, Sampler
 
 
 class InferenceInstance:
     def __init__(self, inst_id: int, cfg: ModelConfig, sampler: Optional[Sampler],
                  latency_fn: Optional[Callable] = None,
-                 scripted_fn: Optional[Callable] = None):
+                 scripted_fn: Optional[Callable] = None,
+                 paged_engine: Optional[PagedGroupEngine] = None):
         self.inst_id = inst_id
         self.cfg = cfg
         self.sampler = sampler
         self.latency_fn = latency_fn
         self.scripted_fn = scripted_fn
+        self.paged_engine = paged_engine
+        assert paged_engine is None or scripted_fn is None, \
+            "paged engine runs real decode; simulated instances script it"
         self._params = None
         self._version = -1
         self._lock = threading.Lock()  # one request in flight per instance
@@ -43,14 +57,19 @@ class InferenceInstance:
         # device_put models the trainer -> rollout-worker weight broadcast
         self._params = jax.tree.map(jax.device_put, params)
         self._version = version
+        if self.paged_engine is not None:
+            self.paged_engine.set_params(self._params)
 
     @property
     def version(self) -> int:
         return self._version
 
     def generate_group(self, prompts: List[np.ndarray], key) -> tuple:
-        """Returns (RolloutBatch, weight_version). Serialised per instance —
-        models single-instance occupancy / continuous batching slot limits."""
+        """Returns (RolloutBatch, weight_version)."""
+        if self.paged_engine is not None:
+            return self._generate_group_paged(prompts, key)
+        # group-at-a-time: serialised per instance — models single-instance
+        # occupancy / continuous batching slot limits.
         with self._lock:
             t0 = time.perf_counter()
             version = self._version
@@ -65,6 +84,30 @@ class InferenceInstance:
             self.busy_time += time.perf_counter() - t0
             return out, version
 
+    def _generate_group_paged(self, prompts: List[np.ndarray], key) -> tuple:
+        """Token-level path: submit the group, then help drive the shared
+        engine until it completes. Concurrent callers' groups share decode
+        steps — the engine lock serialises single steps, not whole groups."""
+        eng = self.paged_engine
+        assert len(prompts) == eng.G, \
+            f"group size {len(prompts)} != engine group_size {eng.G}"
+        # the paged engine stores ONE physical prompt per group — a GRPO
+        # group is G rollouts of the same prompt, so reject anything else
+        # rather than silently decoding G copies of prompts[0]
+        assert all(np.array_equal(p, prompts[0]) for p in prompts[1:]), \
+            "paged engine serves GRPO groups: all prompts in a group must " \
+            "be identical (heterogeneous requests go through separate groups)"
+        version = self._version
+        handle = eng.submit(prompts[0], key)
+        while not handle.done():
+            with self._lock:
+                if handle.done():
+                    break
+                t0 = time.perf_counter()
+                eng.step()
+                self.busy_time += time.perf_counter() - t0
+        return handle.result(), version
+
 
 class InferencePool:
     """Evenly distributes incoming prompt groups across instances
@@ -78,6 +121,12 @@ class InferencePool:
 
     def __len__(self) -> int:
         return len(self.instances)
+
+    @property
+    def token_level(self) -> bool:
+        """True when instances batch at token level (paged engines) — the
+        generator then benefits from more concurrent groups per instance."""
+        return any(i.paged_engine is not None for i in self.instances)
 
     def pick(self) -> InferenceInstance:
         with self._rr_lock:
@@ -95,3 +144,11 @@ class InferencePool:
     def reset_stats(self) -> None:
         for inst in self.instances:
             inst.busy_time = 0.0
+            if inst.paged_engine is not None:
+                inst.paged_engine.reset_stats()
+
+    @property
+    def busy_time(self) -> float:
+        """Aggregate producer busy-time across instances (the quantity
+        ``IterationStats.infer_time`` reports)."""
+        return sum(inst.busy_time for inst in self.instances)

@@ -28,7 +28,17 @@ class TemporaryDataGenerator:
         self.queue = queue
         self.reward_fn = reward_fn
         self.group_size = group_size
-        self.num_workers = num_workers or max(2, len(pool))
+        # Group-at-a-time instances serialise one request each, so one
+        # worker per instance saturates the pool. Token-level (paged)
+        # instances decode concurrent groups together — enough workers to
+        # fill every decode slot (ceil(slots/group) groups, +1 so a group
+        # is waiting when another drains) turn into deeper continuous
+        # batches, not lock contention.
+        def _workers_for(inst) -> int:
+            eng = inst.paged_engine
+            return 1 if eng is None else -(-eng.B // eng.G) + 1
+        per_inst = max(_workers_for(i) for i in pool.instances)
+        self.num_workers = num_workers or max(2, per_inst * len(pool))
         self._threads: list = []
 
     # ------------------------------------------------------------------

@@ -1,0 +1,416 @@
+"""Token-level paged continuous-batching decode engine for the rollout pool
+(DESIGN.md §Continuous-batching).
+
+The group-at-a-time path (``rl/rollout.py``) decodes ``max_new`` steps for
+every row of every group and serialises whole groups per instance; this
+engine decodes ONE token per step for a pool of slots that mixes rows from
+many GRPO groups, admitting pending rows the step a slot frees (the
+admission/eviction policy is ``core/cbatch.py``'s ``SlotScheduler``).
+
+The KV cache is paged (``models/attention.py make_paged_kv_cache``):
+
+  * one physical page pool per layer, stitched into logical sequences by a
+    per-slot page table — vLLM's block table, JAX-native with fixed shapes;
+  * a GRPO group's K rows list the SAME prompt pages, so the shared prompt
+    is stored once per group — the cache-level extension of SPA
+    (``core/spa.py``), which shares the prompt's *compute* in training while
+    this shares its *memory* (and prefill compute) in inference;
+  * pages are refcounted: response pages free when their row completes,
+    prompt pages when the whole group has (eviction = completion).
+
+Sampling is token-identical to the group-at-a-time ``Sampler`` under the
+same PRNG key — greedy and sampled (``rl/rollout.py stepwise_keys`` +
+``_sample_token_rows``); ``tests/test_paged_pool.py`` proves it. Page 0 is
+the null page (pos 2^30, masked everywhere), page 1 the trash page inactive
+slots write into.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cbatch import Completed, SlotScheduler
+from repro.data.tokenizer import Tokenizer
+from repro.models import forward_hidden, init_caches, init_paged_caches
+from repro.models.attention import INVALID_POS
+from repro.models.layers import lm_head_weight
+from repro.rl.rollout import RolloutBatch, _sample_token_rows, stepwise_keys
+
+NULL_PAGE = 0
+TRASH_PAGE = 1
+FIRST_PAGE = 2
+
+
+class PageAllocator:
+    """Host-side freelist + refcounts over the physical page pool.
+
+    Prompt pages are allocated with refcount G (one per group row) and
+    release once per completed row; response pages are single-owner."""
+
+    def __init__(self, num_pages: int):
+        assert num_pages > FIRST_PAGE, "page pool smaller than its reserves"
+        self._free = list(range(num_pages - 1, FIRST_PAGE - 1, -1))
+        self._ref: Dict[int, int] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int, refcount: int = 1) -> Optional[List[int]]:
+        if len(self._free) < n:
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = refcount
+        return pages
+
+    def release(self, pages: List[int]) -> None:
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+
+
+@dataclasses.dataclass
+class _Group:
+    gid: int
+    prompt: np.ndarray               # (Lp,) int32, already truncated
+    G: int
+    keys: np.ndarray                 # (max_new, 2) uint32 step keys
+    max_new: int
+    prompt_pages: Optional[List[int]] = None
+    prompt_logits: Optional[jax.Array] = None   # (V,) f32 last-prompt logits
+    done_rows: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    finish_step: int = 0
+
+
+@dataclasses.dataclass
+class _Row:
+    group: _Group
+    idx: int                         # row index within the group (PRNG row)
+    toks: list = dataclasses.field(default_factory=list)
+    pages: Optional[List[int]] = None
+
+
+class GroupHandle:
+    """Future for a submitted group; resolves to (RolloutBatch, finish_step)."""
+
+    def __init__(self, group: _Group):
+        self._group = group
+        self._event = threading.Event()
+        self._result: Optional[RolloutBatch] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> RolloutBatch:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"group {self._group.gid} not complete")
+        return self._result
+
+
+class PagedGroupEngine:
+    """Continuous-batching decode over a shared paged KV pool.
+
+    Thread-safe: ``submit`` registers a group's rows; any thread may drive
+    ``step`` (the inference-instance convoy in ``core/engine.py`` does), so
+    concurrently submitted groups batch together at token level."""
+
+    def __init__(self, cfg: ModelConfig, *, num_slots: int, page_size: int,
+                 num_pages: int, max_prompt_len: int, max_new_tokens: int,
+                 group_size: int, temperature: float = 1.0, top_p: float = 1.0,
+                 eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD):
+        if num_slots < 1 or page_size < 1:
+            raise ValueError(f"paged engine needs num_slots >= 1 and "
+                             f"page_size >= 1, got {num_slots}/{page_size}")
+        # fail at construction, not first weight sync (same rule
+        # init_paged_caches enforces)
+        assert cfg.family in ("dense", "moe") and not cfg.use_mla \
+            and not cfg.is_encoder_decoder and not cfg.vision_prefix_len, \
+            f"{cfg.name}: paged engine targets decoder-only GQA families " \
+            "(see DESIGN.md §Arch-applicability)"
+        assert cfg.sliding_window is None, \
+            "paged engine does not reclaim windowed pages yet (DESIGN.md " \
+            "§Known-issues)"
+        self.cfg = cfg
+        self.B = num_slots
+        self.page = page_size
+        self.Lp = max_prompt_len
+        self.T = max_new_tokens
+        self.G = group_size
+        self.temperature = temperature
+        self.top_p = top_p
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.n_prompt_pages = -(-max_prompt_len // page_size)
+        self.n_resp_pages = -(-max_new_tokens // page_size)
+        self.n_max = self.n_prompt_pages + self.n_resp_pages
+        if num_pages == 0:      # auto-size: two full groups resident
+            num_pages = FIRST_PAGE + 2 * (self.n_prompt_pages
+                                          + group_size * self.n_resp_pages)
+        self.P = num_pages
+        if FIRST_PAGE + self.n_prompt_pages + self.n_resp_pages > num_pages:
+            raise ValueError(
+                f"page pool too small: {num_pages} pages cannot hold one "
+                f"prompt ({self.n_prompt_pages}) + one response "
+                f"({self.n_resp_pages}) + {FIRST_PAGE} reserved")
+
+        self.params = None
+        self.caches = None           # built lazily at first set_params
+        self.logits = None           # (B, V) f32 per-slot next-token logits
+        self.alloc = PageAllocator(num_pages)
+        self.sched = SlotScheduler(num_slots)
+        self._ptab = np.zeros((num_slots, self.n_max), np.int32)  # NULL rows
+        self._mutex = threading.RLock()
+        self._next_gid = 0
+        self._handles: Dict[int, GroupHandle] = {}
+        self.decode_steps = 0
+        self.generated_tokens = 0
+
+        self._prefill = jax.jit(self._prefill_group, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
+        self._invalidate = jax.jit(self._invalidate_pages, donate_argnums=(0,))
+
+    # -- jitted cores -------------------------------------------------------
+
+    def _prefill_group(self, params, caches, row, length, dest_pages):
+        """Run the shared prompt ONCE (row: (1, Lp_pad) right-padded) and
+        splice its per-layer KV into the pool at ``dest_pages`` — one
+        physical prompt copy serves every row of the group. Returns
+        (caches, last-token logits (V,))."""
+        cfg = self.cfg
+        Lp_pad = self.n_prompt_pages * self.page
+        ar = jnp.arange(Lp_pad, dtype=jnp.int32)[None, :]
+        real = ar < length
+        positions = jnp.where(real, ar, 0).astype(jnp.int32)
+        segments = jnp.where(real, 0, -1).astype(jnp.int32)
+        tmp = init_caches(params, cfg, 1, Lp_pad)
+        h, tmp, _, _ = forward_hidden(params, cfg, row, positions=positions,
+                                      segments=segments, caches=tmp,
+                                      cache_offset=0)
+        W = lm_head_weight(params["embed"], cfg)
+        h_last = jnp.take_along_axis(
+            h, (length - 1)[None, :, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
+                            W.astype(jnp.float32))[0]
+        pos_write = jnp.where(real[0], ar[0], INVALID_POS).reshape(
+            self.n_prompt_pages, self.page)
+
+        new_caches = {}
+        for grp in caches:           # "layers" (+ "prelude" for first-k-dense)
+            pools, t = caches[grp]["kv"], tmp[grp]["kv"]
+            nL = pools["k_pages"].shape[0]
+            shp = (nL, self.n_prompt_pages, self.page) + t["k"].shape[-2:]
+            new_caches[grp] = {"kv": {
+                "k_pages": pools["k_pages"].at[:, dest_pages].set(
+                    t["k"][:, 0].reshape(shp)),
+                "v_pages": pools["v_pages"].at[:, dest_pages].set(
+                    t["v"][:, 0].reshape(shp)),
+                "pos_pages": pools["pos_pages"].at[:, dest_pages].set(
+                    jnp.broadcast_to(pos_write, (nL,) + pos_write.shape)),
+            }}
+        return new_caches, logits
+
+    def _decode_step(self, params, caches, logits, keys, rows, positions,
+                     wslot, ptab, active):
+        """One token for every slot: sample from the slot's current logits
+        with its row's own step key, then advance through the paged cache.
+        Inactive slots feed PAD at pos 2^30 and write into the trash page."""
+        cfg = self.cfg
+        tok = _sample_token_rows(keys, logits, rows, self.G,
+                                 self.temperature, self.top_p)
+        tok = jnp.where(active, tok, self.pad_id)
+        seg = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
+        h, caches, _, _ = forward_hidden(
+            params, cfg, tok[:, None], positions=positions[:, None],
+            segments=seg, caches=caches, cache_offset=wslot, page_table=ptab)
+        W = lm_head_weight(params["embed"], cfg)
+        logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                                 W.astype(jnp.float32))
+        return tok, caches, logits_next
+
+    def _invalidate_pages(self, caches, pages):
+        """Mark freshly allocated response pages invalid — they may hold a
+        previous sequence's stale (pos, kv) entries, which would otherwise
+        pass the causal mask."""
+        out = {}
+        for grp in caches:
+            pools = dict(caches[grp]["kv"])
+            pools["pos_pages"] = pools["pos_pages"].at[:, pages].set(
+                INVALID_POS)
+            out[grp] = {"kv": pools}
+        return out
+
+    # -- host API -----------------------------------------------------------
+
+    def set_params(self, params) -> None:
+        """Swap weights (iteration-boundary sync). Must be quiescent —
+        periodic asynchrony guarantees the queue is drained first."""
+        with self._mutex:
+            assert self.sched.idle, \
+                "weight sync while rollouts in flight breaks Proposition 1"
+            self.params = params
+            if self.caches is None:
+                self.caches = init_paged_caches(params, self.cfg, self.P,
+                                                self.page)
+                self.logits = jnp.zeros((self.B, self.cfg.vocab_size),
+                                        jnp.float32)
+
+    def submit(self, prompt, key, *, max_new: Optional[int] = None
+               ) -> GroupHandle:
+        """Register one GRPO group (G rollouts of one prompt). Returns a
+        handle; drive ``step`` until it resolves."""
+        assert self.params is not None, "set_params before submit"
+        p = np.asarray(prompt, np.int32)[-self.Lp:]   # Sampler keeps the tail
+        max_new = self.T if max_new is None else min(max_new, self.T)
+        keys = np.asarray(stepwise_keys(key, max_new))
+        with self._mutex:
+            g = _Group(gid=self._next_gid, prompt=p, G=self.G, keys=keys,
+                       max_new=max_new)
+            self._next_gid += 1
+            h = GroupHandle(g)
+            self._handles[g.gid] = h
+            for i in range(self.G):
+                self.sched.submit(_Row(group=g, idx=i))
+            return h
+
+    @property
+    def idle(self) -> bool:
+        with self._mutex:
+            return self.sched.idle
+
+    def reset_stats(self) -> None:
+        self.decode_steps = 0
+        self.generated_tokens = 0
+
+    # -- engine step --------------------------------------------------------
+
+    def _admission_gate(self, row: _Row) -> bool:
+        need = self.n_resp_pages
+        if row.group.prompt_pages is None:
+            need += -(-len(row.group.prompt) // self.page)
+        return self.alloc.num_free >= need
+
+    def _admit_row(self, slot: int, row: _Row) -> None:
+        g = row.group
+        if g.prompt_pages is None:
+            n_pp = -(-len(g.prompt) // self.page)
+            g.prompt_pages = self.alloc.alloc(n_pp, refcount=g.G)
+            assert g.prompt_pages is not None, "admission gate let a row in "\
+                "without pages for its prompt"
+            dest = np.full((self.n_prompt_pages,), TRASH_PAGE, np.int32)
+            dest[:n_pp] = g.prompt_pages
+            row_arr = np.full((1, self.n_prompt_pages * self.page),
+                              self.pad_id, np.int32)
+            row_arr[0, : len(g.prompt)] = g.prompt
+            self.caches, g.prompt_logits = self._prefill(
+                self.params, self.caches, jnp.asarray(row_arr),
+                jnp.asarray([len(g.prompt)], jnp.int32), jnp.asarray(dest))
+        row.pages = self.alloc.alloc(self.n_resp_pages)
+        assert row.pages is not None, "admission gate let a row in without "\
+            "pages for its response"
+        self.caches = self._invalidate(self.caches,
+                                       jnp.asarray(row.pages, jnp.int32))
+        tab = np.zeros((self.n_max,), np.int32)        # NULL padding
+        tab[: len(g.prompt_pages)] = g.prompt_pages
+        tab[len(g.prompt_pages): len(g.prompt_pages) + self.n_resp_pages] = \
+            row.pages
+        self._ptab[slot] = tab
+        self.logits = self.logits.at[slot].set(g.prompt_logits)
+        row.toks = []
+
+    def _finish_row(self, slot: int, row: _Row, step: int) -> None:
+        g = row.group
+        g.done_rows[row.idx] = np.asarray(row.toks, np.int32)
+        g.finish_step = step
+        self.alloc.release(row.pages)
+        self.alloc.release(g.prompt_pages)             # refcount G -> 0
+        self.sched.evict(slot)
+        self._ptab[slot] = 0
+        if len(g.done_rows) == g.G:
+            resp = np.full((g.G, self.T), self.pad_id, np.int32)
+            lens = np.zeros((g.G,), np.int32)
+            for i, r in g.done_rows.items():
+                resp[i, : len(r)] = r
+                lens[i] = len(r)
+            h = self._handles.pop(g.gid)
+            h._result = RolloutBatch(response_ids=jnp.asarray(resp),
+                                     response_len=jnp.asarray(lens))
+            h._event.set()
+
+    def step(self) -> bool:
+        """One admission pass + one decode step for every slot. Returns
+        False (and does nothing) when the engine is idle."""
+        with self._mutex:
+            # admit one row at a time: _admit_row consumes pages, and the
+            # gate must see the freelist as it actually is for the NEXT row
+            while True:
+                admitted = self.sched.admit(self._admission_gate, limit=1)
+                if not admitted:
+                    break
+                self._admit_row(*admitted[0])
+            act = self.sched.active_slots()
+            if not act:
+                return False
+            B = self.B
+            keys = np.zeros((B, 2), np.uint32)
+            rows = np.zeros((B,), np.int32)
+            pos = np.full((B,), INVALID_POS, np.int32)
+            wslot = np.full((B,), TRASH_PAGE * self.page, np.int32)
+            active = np.zeros((B,), bool)
+            for s in act:
+                row = self.sched.slot_req[s]
+                t = len(row.toks)
+                keys[s] = row.group.keys[t]
+                rows[s] = row.idx
+                pos[s] = len(row.group.prompt) + t
+                wslot[s] = (row.pages[t // self.page] * self.page
+                            + t % self.page)
+                active[s] = True
+            tok, self.caches, self.logits = self._decode(
+                self.params, self.caches, self.logits, jnp.asarray(keys),
+                jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(wslot),
+                jnp.asarray(self._ptab), jnp.asarray(active))
+            tok = np.asarray(tok)
+            step = self.sched.tick()
+            self.decode_steps += 1
+            self.generated_tokens += len(act)
+            for s in act:
+                row = self.sched.slot_req[s]
+                row.toks.append(int(tok[s]))
+                if (tok[s] == self.eos_id
+                        or len(row.toks) >= row.group.max_new):
+                    self._finish_row(s, row, step)
+            return True
+
+    # -- standalone serving -------------------------------------------------
+
+    def serve(self, params, prompts: List[np.ndarray], key
+              ) -> List[Completed]:
+        """Serve independent requests (engine built with group_size=1; each
+        prompt is its own group). Returns completions in completion order,
+        mirroring ``ContinuousBatchingSampler.run``."""
+        assert self.G == 1, "serve() treats each request as a 1-row group"
+        self.set_params(params)
+        keys = jax.random.split(key, len(prompts))
+        handles = [self.submit(p, k) for p, k in zip(prompts, keys)]
+        while self.step():
+            pass
+        done = []
+        for rid, h in enumerate(handles):
+            out = h.result(timeout=0)
+            n = int(np.asarray(out.response_len)[0])
+            done.append(Completed(
+                request_id=rid,
+                response_ids=np.asarray(out.response_ids)[0, :n],
+                finish_step=h._group.finish_step))
+        done.sort(key=lambda c: c.finish_step)
+        return done

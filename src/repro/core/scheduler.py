@@ -40,7 +40,7 @@ from repro.rl.grpo import (MicroBatch, group_advantages, make_apply_update,
 class IterationStats:
     iteration: int
     wall_time: float
-    infer_time: float
+    infer_time: float   # producer busy-time aggregated over pool instances
     train_time: float
     trained_tokens: int
     reward_mean: float
@@ -150,6 +150,7 @@ class PeriodicAsyncScheduler:
 
         for t in range(num_iterations):
             it_start = time.perf_counter()
+            busy0 = pool.busy_time
             acc = GradAccumulator()
             rewards_seen: List[float] = []
             trained_tokens = 0
@@ -200,7 +201,10 @@ class PeriodicAsyncScheduler:
             train_time = time.perf_counter() - train_t0
             stats = IterationStats(
                 iteration=t, wall_time=wall,
-                infer_time=wall - train_time if mode == "sync" else wall,
+                # producer busy-time delta over this iteration — in async
+                # modes the wall clock overlaps inference with training, so
+                # only the instances' own occupancy measures inference cost
+                infer_time=pool.busy_time - busy0,
                 train_time=train_time, trained_tokens=trained_tokens,
                 reward_mean=float(np.mean(rewards_seen)) if rewards_seen else 0.0,
                 tpspd=trained_tokens / wall / self.num_devices,

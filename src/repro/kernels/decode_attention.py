@@ -105,3 +105,29 @@ def decode_attention(q, k, v, kv_pos, q_pos, *,
         interpret=interpret,
     )(q_pos.reshape(B, 1), qr, k, v, kv_pos)
     return out.reshape(B, H, Dv)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_l", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, pos_pages, page_table, q_pos,
+                           *, scale: Optional[float] = None,
+                           window: Optional[int] = None,
+                           block_l: int = 256, interpret: bool = False):
+    """Flash decode over a paged KV pool (DESIGN.md §Continuous-batching).
+
+    q: (B, H, D); k_pages/v_pages: (P, page, Hkv, Dv); pos_pages: (P, page);
+    page_table: (B, n_max) page ids per row (null page 0 carries pos 2^30,
+    masked by the causal rule). The gather assembles each row's logical
+    context — one shared physical prompt copy per GRPO group — and the
+    blocked online-softmax kernel above consumes it unchanged.
+    """
+    B = q.shape[0]
+    P, page, Hkv, Dv = v_pages.shape
+    n_max = page_table.shape[1]
+    L = n_max * page
+    k = k_pages[page_table].reshape(B, L, Hkv, k_pages.shape[-1])
+    v = v_pages[page_table].reshape(B, L, Hkv, Dv)
+    kv_pos = pos_pages[page_table].reshape(B, L)
+    return decode_attention(q, k, v, kv_pos, q_pos, scale=scale,
+                            window=window, block_l=block_l,
+                            interpret=interpret)

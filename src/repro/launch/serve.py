@@ -1,10 +1,15 @@
 """Batched serving driver: the inference half of the decoupled deployment,
-runnable standalone (continuous-batching-style slot scheduler over the jitted
-prefill + decode steps).
+runnable standalone.
+
+Engines (DESIGN.md §Continuous-batching):
+  * fixed  — the jitted group-at-a-time Sampler (every row decodes max_new
+             steps; finished rows ride along as PAD);
+  * paged  — token-level continuous batching over the paged KV pool: slots
+             free at EOS and admit the next request the same step.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
-        --num-requests 8 --max-new 24
+        --num-requests 8 --max-new 24 [--engine paged --slots 4]
 """
 from __future__ import annotations
 
@@ -35,12 +40,43 @@ def serve_batch(cfg, prompts, *, max_prompt_len: int, max_new: int,
                  "tok_per_s": toks / wall}
 
 
+def serve_paged(cfg, prompts, *, max_prompt_len: int, max_new: int,
+                num_slots: int = 4, page_size: int = 16,
+                temperature: float = 0.7, seed: int = 0):
+    """Serve independent requests through the token-level paged engine
+    (each request is its own group of size 1); returns (completions in
+    completion order, stats)."""
+    from repro.core.paged import FIRST_PAGE, PagedGroupEngine
+    if num_slots < 1 or page_size < 1:
+        raise ValueError(f"serve_paged needs num_slots >= 1 and "
+                         f"page_size >= 1, got {num_slots}/{page_size}")
+    params = init(jax.random.PRNGKey(seed), cfg)
+    # enough pages for every slot to hold a full prompt + response
+    pages = FIRST_PAGE + num_slots * (-(-max_prompt_len // page_size)
+                                      + -(-max_new // page_size))
+    eng = PagedGroupEngine(cfg, num_slots=num_slots, page_size=page_size,
+                           num_pages=pages, max_prompt_len=max_prompt_len,
+                           max_new_tokens=max_new, group_size=1,
+                           temperature=temperature)
+    t0 = time.time()
+    done = eng.serve(params, prompts, jax.random.PRNGKey(seed + 1))
+    wall = time.time() - t0
+    toks = sum(len(c.response_ids) for c in done)
+    return done, {"wall_s": wall, "generated_tokens": toks,
+                  "tok_per_s": toks / wall,
+                  "decode_steps": eng.decode_steps}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b", choices=ARCH_IDS)
+    ap.add_argument("--engine", default="fixed", choices=["fixed", "paged"])
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--max-prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (paged engine)")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -50,6 +86,20 @@ def main() -> None:
     problems = task.batch(args.num_requests)
     prompts = [np.asarray(tok.encode(p.prompt)[: args.max_prompt_len],
                           np.int32) for p in problems]
+
+    if args.engine == "paged":
+        done, stats = serve_paged(
+            cfg, prompts, max_prompt_len=args.max_prompt_len,
+            max_new=args.max_new, num_slots=args.slots,
+            page_size=args.page_size, seed=args.seed)
+        print(f"{args.arch} (paged x{args.slots}): {len(done)} requests in "
+              f"completion order, {stats['generated_tokens']} tokens in "
+              f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
+              f"{stats['decode_steps']} decode steps)")
+        for c in done[:4]:
+            print(f"  req {c.request_id} finished at step {c.finish_step}: "
+                  f"{tok.decode(c.response_ids.tolist())!r}")
+        return
 
     out, stats = serve_batch(cfg, prompts, max_prompt_len=args.max_prompt_len,
                              max_new=args.max_new, seed=args.seed)

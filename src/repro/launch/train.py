@@ -37,7 +37,8 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
                    latency_fn=None, scripted_fn=None):
     """Returns (scheduler, components dict). With ``scripted_fn`` the
     inference instances run in simulated-latency mode (remote-service view);
-    otherwise they run the real jitted sampler."""
+    otherwise they run the real jitted sampler — group-at-a-time, or the
+    token-level paged engine when ``rl.rollout_engine == "paged"``."""
     tok = Tokenizer(cfg.vocab_size)
     task = ArithmeticTask(seed=seed, prompt_pad=prompt_pad)
     loader = PromptLoader(task, tok, rl.batch_prompts, rl.max_prompt_len)
@@ -47,8 +48,25 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
     if scripted_fn is None:
         sampler = Sampler(cfg, rl.max_prompt_len, rl.max_response_len,
                           temperature=rl.temperature, top_p=rl.top_p)
+
+    def paged_engine():
+        if rl.rollout_engine != "paged" or scripted_fn is not None:
+            return None
+        if rl.mode == "async_offpolicy":
+            raise ValueError(
+                "rollout_engine='paged' needs a quiescent engine at weight "
+                "sync; the off-policy baseline syncs mid-flight — use the "
+                "group engine (DESIGN.md §Continuous-batching)")
+        from repro.core.paged import PagedGroupEngine
+        return PagedGroupEngine(
+            cfg, num_slots=rl.cbatch_slots, page_size=rl.kv_page_size,
+            num_pages=rl.kv_pages, max_prompt_len=rl.max_prompt_len,
+            max_new_tokens=rl.max_response_len, group_size=rl.group_size,
+            temperature=rl.temperature, top_p=rl.top_p)
+
     instances = [InferenceInstance(i, cfg, sampler, latency_fn=latency_fn,
-                                   scripted_fn=scripted_fn)
+                                   scripted_fn=scripted_fn,
+                                   paged_engine=paged_engine())
                  for i in range(rl.num_inference_instances)]
     pool = InferencePool(instances)
     queue = RolloutQueue()
@@ -70,6 +88,13 @@ def main() -> None:
     ap.add_argument("--group-size", type=int, default=4)
     ap.add_argument("--micro-batch", type=int, default=2)
     ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--rollout-engine", default="group",
+                    choices=["group", "paged"],
+                    help="rollout decode path: group-at-a-time sampler or "
+                         "token-level paged continuous batching")
+    ap.add_argument("--cbatch-slots", type=int, default=8,
+                    help="decode slots per paged instance")
+    ap.add_argument("--kv-page-size", type=int, default=16)
     ap.add_argument("--max-prompt-len", type=int, default=48)
     ap.add_argument("--max-response-len", type=int, default=16)
     ap.add_argument("--prompt-pad", type=int, default=0)
@@ -97,7 +122,8 @@ def main() -> None:
         max_prompt_len=args.max_prompt_len,
         max_response_len=args.max_response_len,
         shared_prompt_attention=args.spa, spa_align=args.spa_align,
-        seed=args.seed)
+        rollout_engine=args.rollout_engine, cbatch_slots=args.cbatch_slots,
+        kv_page_size=args.kv_page_size, seed=args.seed)
 
     from repro.sharding.specs import set_profile
     set_profile(args.profile)

@@ -150,10 +150,73 @@ def make_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
     }
 
 
+def make_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype) -> dict:
+    """One physical page pool shared by every sequence on the engine
+    (DESIGN.md §Continuous-batching). Logical sequences are stitched
+    together by a per-slot page table; a GRPO group's rows list the same
+    prompt pages, so the shared prompt is stored once per group — the
+    cache-level counterpart of SPA's shared-prompt packing."""
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k_pages": jnp.zeros((num_pages, page_size, Hkv, hd), dtype),
+        "v_pages": jnp.zeros((num_pages, page_size, Hkv, hd), dtype),
+        "pos_pages": jnp.full((num_pages, page_size), INVALID_POS, jnp.int32),
+    }
+
+
+def _paged_decode(params, cfg: ModelConfig, q, k, v, positions, cache,
+                  cache_offset, page_table):
+    """Single-token decode against the paged pool.
+
+    cache_offset: (B,) flat slot index (page_id * page_size + slot) where
+    this step's k/v land — the engine points inactive rows at the trash
+    page. page_table: (B, n_max) page ids per row (null page 0 pads).
+    Returns (out (B,1,H,Dv), new_cache)."""
+    B, _, H, hd = q.shape
+    P, page, Hkv, _ = cache["k_pages"].shape
+    flat = lambda a: a.reshape((P * page,) + a.shape[2:])
+    idx = jnp.asarray(cache_offset)
+    new_cache = {
+        "k_pages": flat(cache["k_pages"]).at[idx].set(k[:, 0]).reshape(
+            cache["k_pages"].shape),
+        "v_pages": flat(cache["v_pages"]).at[idx].set(v[:, 0]).reshape(
+            cache["v_pages"].shape),
+        "pos_pages": flat(cache["pos_pages"]).at[idx].set(
+            positions[:, 0]).reshape(cache["pos_pages"].shape),
+    }
+    if cfg.use_pallas_attention:
+        # flash-decode Pallas kernel over the page pool (§Perf): the kernel
+        # wrapper owns the page-table gather; causal masking comes from kv
+        # pos (invalid slots carry 2^30).
+        from repro.kernels.ops import paged_decode_attention as _flash_paged
+        out = _flash_paged(q[:, 0], new_cache["k_pages"],
+                           new_cache["v_pages"], new_cache["pos_pages"],
+                           page_table, positions[:, 0],
+                           window=cfg.sliding_window)[:, None]
+        return out, new_cache
+    # pure-JAX path: gather each row's logical context,
+    # (B, n_max, page, ...) -> (B, L, ...), then single-pass decode
+    n_max = page_table.shape[1]
+    L = n_max * page
+    kk = new_cache["k_pages"][page_table].reshape(B, L, Hkv, hd)
+    vv = new_cache["v_pages"][page_table].reshape(B, L, Hkv, hd)
+    kp = new_cache["pos_pages"][page_table].reshape(B, L)
+    zeros = jnp.zeros((B, 1), jnp.int32)
+    out = chunked_attention(q, kk, vv, positions, kp, zeros,
+                            jnp.zeros((B, L), jnp.int32),
+                            window=cfg.sliding_window,
+                            chunk_size=cfg.attn_chunk_size)
+    return out, new_cache
+
+
 def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
-                  cache: Optional[dict] = None, cache_offset=None):
+                  cache: Optional[dict] = None, cache_offset=None,
+                  page_table=None):
     """x: (B, S, d). Training/prefill when cache is None or being filled;
-    decode when S == 1 and cache holds history.
+    decode when S == 1 and cache holds history. A paged cache (leaves
+    ``k_pages``/``v_pages``/``pos_pages`` + a ``page_table``) routes decode
+    through the shared page pool instead of per-row contiguous caches.
 
     Returns (out, new_cache)."""
     B, S, d = x.shape
@@ -170,6 +233,13 @@ def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
     k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
+    if cache is not None and "k_pages" in cache:
+        assert S == 1, "paged KV cache is a decode-only path"
+        out, new_cache = _paged_decode(params, cfg, q, k, v, positions,
+                                       cache, cache_offset, page_table)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
+                         params["wo"])
+        return out, new_cache
     if cache is None:
         kk, vv, kp, ks = k, v, positions, segments
     else:
@@ -300,7 +370,8 @@ def _mla_qckv(params, cfg: ModelConfig, x, positions):
 
 
 def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
-                  cache: Optional[dict] = None, cache_offset=None):
+                  cache: Optional[dict] = None, cache_offset=None,
+                  page_table=None):
     """Expanded path for train/prefill; absorbed path for decode (S == 1):
     scores and values live in the (rank + rope) latent space so the KV cache
     stores only ckv + shared rope key — the MLA memory win."""
@@ -308,6 +379,8 @@ def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
     H = cfg.num_heads
     nd, rd, vd, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
                      cfg.v_head_dim, cfg.kv_lora_rank)
+    assert page_table is None, \
+        "paged KV cache targets GQA; MLA decode keeps per-row latent caches"
     q_nope, q_rope, ckv, kr = _mla_qckv(params, cfg, x, positions)
     scale = (nd + rd) ** -0.5
 

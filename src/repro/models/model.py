@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.layers import dtype_of, lm_head_weight
 from repro.models.transformer import (forward_hidden, init_caches, init_model,
-                                      logits)
+                                      init_paged_caches, logits)
 
 
 def init(key, cfg: ModelConfig) -> dict:
@@ -97,4 +97,4 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, **kw):
 
 
 __all__ = ["init", "forward", "forward_hidden", "token_logprobs",
-           "init_caches", "logits"]
+           "init_caches", "init_paged_caches", "logits"]

@@ -89,7 +89,7 @@ def init_model(key, cfg: ModelConfig) -> dict:
 
 def block_forward(bp: dict, cfg: ModelConfig, x, positions, segments, *,
                   cache: Optional[dict] = None, cache_offset=None,
-                  enc_out=None, enc_pos=None, enc_seg=None,
+                  page_table=None, enc_out=None, enc_pos=None, enc_seg=None,
                   initial_ssm_state=None):
     """Returns (x_out, new_cache, aux_loss, final_ssm_state)."""
     aux = jnp.zeros((), jnp.float32)
@@ -116,7 +116,7 @@ def block_forward(bp: dict, cfg: ModelConfig, x, positions, segments, *,
     attn_out, kv_nc = attention(
         bp["attn"], cfg, h, positions, segments,
         cache=None if cache is None else cache["kv"],
-        cache_offset=cache_offset)
+        cache_offset=cache_offset, page_table=page_table)
     if kv_nc is not None:
         new_cache["kv"] = kv_nc
 
@@ -193,7 +193,8 @@ def encode(params: dict, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
 def forward_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
                    positions=None, segments=None, vision_embeds=None,
                    enc_embeds=None, enc_out=None, caches=None,
-                   cache_offset=None, initial_ssm_states=None):
+                   cache_offset=None, page_table=None,
+                   initial_ssm_states=None):
     """Token ids -> final hidden states.
 
     Returns (hidden (B, S, d), new_caches, aux_loss, final_ssm_states)."""
@@ -226,7 +227,8 @@ def forward_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
             bp, cfg, x, positions, segments,
             cache=None if pre_caches is None else jax.tree.map(
                 lambda a, i=i: a[i], pre_caches),
-            cache_offset=cache_offset, enc_out=enc_out)
+            cache_offset=cache_offset, page_table=page_table,
+            enc_out=enc_out)
         aux_total = aux_total + aux
         if nc is not None:
             new_pre_caches.append(nc)
@@ -254,7 +256,8 @@ def forward_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
             lp, lc = xs2
             x, nc, aux, fin = block_forward(
                 lp, cfg, x, positions, segments, cache=lc,
-                cache_offset=cache_offset, enc_out=enc_out)
+                cache_offset=cache_offset, page_table=page_table,
+                enc_out=enc_out)
             return (x, aux_acc + aux), (nc, fin)
         (x, aux_total), (new_body_caches, final_states) = jax.lax.scan(
             body_cached, (x, aux_total), (params["layers"], body_caches))
@@ -302,6 +305,28 @@ def init_caches(params: dict, cfg: ModelConfig, batch: int, length: int) -> dict
         caches["prelude"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_pre,) + a.shape).copy(),
             one_layer(None))
+    return caches
+
+
+def init_paged_caches(params: dict, cfg: ModelConfig, num_pages: int,
+                      page_size: int) -> dict:
+    """Per-layer paged KV pools (stacked over layers to match the body scan;
+    the page table is shared across layers — every layer uses the same
+    logical-to-physical page mapping, as in vLLM's block tables)."""
+    assert cfg.family in ("dense", "moe") and not cfg.use_mla \
+        and not cfg.is_encoder_decoder and not cfg.vision_prefix_len, \
+        f"{cfg.name}: paged KV cache targets decoder-only GQA families " \
+        "(see DESIGN.md §Arch-applicability)"
+    dt = dtype_of(cfg.compute_dtype)
+    from repro.models.attention import make_paged_kv_cache
+    one = {"kv": make_paged_kv_cache(cfg, num_pages, page_size, dt)}
+    n_pre = len(params.get("prelude", ()))
+    n_body = cfg.num_layers - n_pre
+    caches = {"layers": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_body,) + a.shape).copy(), one)}
+    if n_pre:
+        caches["prelude"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_pre,) + a.shape).copy(), one)
     return caches
 
 

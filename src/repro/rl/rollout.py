@@ -23,10 +23,8 @@ class RolloutBatch(NamedTuple):
     response_len: jax.Array   # (B,) int32 (includes the EOS token)
 
 
-def _sample_token(key, logits, temperature: float, top_p: float):
-    logits = logits.astype(jnp.float32)
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def _filter_logits(logits, temperature: float, top_p: float):
+    """Temperature + nucleus filtering (row-independent, f32 in/out)."""
     logits = logits / temperature
     if top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
@@ -35,7 +33,57 @@ def _sample_token(key, logits, temperature: float, top_p: float):
         cutoff_idx = jnp.sum(cum < top_p, axis=-1)           # first idx where cum >= p
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return logits
+
+
+def _sample_token(key, logits, temperature: float, top_p: float):
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _filter_logits(logits, temperature, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def _sample_token_rows(keys, logits, rows, group_size: int,
+                       temperature: float, top_p: float):
+    """Row-exact replica of ``_sample_token`` for token-level engines.
+
+    Slot b holds row ``rows[b]`` of some (group_size, V) group batch whose
+    step key is ``keys[b]``; it must draw the very token the batched
+    ``_sample_token(keys[b], group_logits)`` would give that row.
+    ``categorical(key, lg)`` is ``argmax(gumbel(key, lg.shape) + lg)``, and
+    the nucleus filter is row-independent, so drawing the full group's
+    gumbel field and picking this row reproduces the draw bit-for-bit.
+
+    keys: (B, 2) raw uint32 step keys; logits: (B, V); rows: (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _filter_logits(logits, temperature, top_p)
+    V = logits.shape[-1]
+
+    def one(k, lg, r):
+        noise = jax.random.gumbel(k, (group_size, V), jnp.float32)[r]
+        return jnp.argmax(noise + lg, axis=-1)
+
+    return jax.vmap(one)(keys, logits, rows).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def stepwise_keys(key, num_steps: int):
+    """The per-step sampling keys ``Sampler._generate``'s scan threads:
+    step t uses the second half of the t-th split of the carried key.
+    Returns (num_steps, 2) so a token-level engine can consume the same
+    key schedule out of lock-step (rows admitted at different engine
+    steps still index by their OWN decode step t)."""
+
+    def body(k, _):
+        k, ks = jax.random.split(k)
+        return k, ks
+
+    _, ks = jax.lax.scan(body, key, None, length=num_steps)
+    return ks
 
 
 class Sampler:

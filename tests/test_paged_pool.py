@@ -1,0 +1,304 @@
+"""Token-level paged continuous batching: pool-level decode must be
+token-identical to the group-at-a-time path under a fixed PRNG key
+(greedy AND sampled), with mid-batch admission/eviction, shared prompt
+pages refcounted back to the freelist, and the periodic-asynchrony
+contract (zero staleness in async mode) intact.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.core.cbatch import SlotScheduler
+from repro.core.engine import InferenceInstance, InferencePool
+from repro.core.generator import TemporaryDataGenerator
+from repro.core.paged import FIRST_PAGE, PagedGroupEngine
+from repro.core.queue import RolloutQueue
+from repro.data.tasks import ArithmeticTask
+from repro.data.tokenizer import Tokenizer
+from repro.launch.train import build_pipeline
+from repro.models import init
+from repro.rl.rollout import Sampler
+
+G, T, LP = 4, 8, 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    params = init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, **kw):
+    base = dict(num_slots=3, page_size=4, num_pages=0, max_prompt_len=LP,
+                max_new_tokens=T, group_size=G)
+    base.update(kw)
+    return PagedGroupEngine(cfg, **base)
+
+
+def _assert_group_identical(paged_out, ref_out):
+    pr, pl = np.asarray(paged_out.response_ids), np.asarray(paged_out.response_len)
+    rr, rl = np.asarray(ref_out.response_ids), np.asarray(ref_out.response_len)
+    np.testing.assert_array_equal(pl, rl)
+    for i in range(rr.shape[0]):
+        np.testing.assert_array_equal(pr[i, : pl[i]], rr[i, : rl[i]])
+
+
+# =========================================================================
+# the tentpole contract: token-identical to the group-at-a-time Sampler
+# =========================================================================
+
+@pytest.mark.parametrize("temperature,top_p", [(0.0, 1.0), (1.0, 1.0),
+                                               (1.0, 0.9)])
+def test_token_identical_to_group_path(setup, temperature, top_p):
+    """Greedy, sampled, and nucleus-sampled decode must reproduce the
+    Sampler's tokens exactly under the same key — slots < group size, so
+    rows of one group are admitted at different engine steps and still
+    consume their own step keys."""
+    cfg, params = setup
+    prompt = np.asarray([1, 9, 4, 7, 3], np.int32)
+    key = jax.random.PRNGKey(5)
+    ref = Sampler(cfg, LP, T, temperature=temperature, top_p=top_p)
+    eng = _engine(cfg, temperature=temperature, top_p=top_p)
+    eng.set_params(params)
+    h = eng.submit(prompt, key)
+    while eng.step():
+        pass
+    _assert_group_identical(h.result(1), ref.generate(params, [prompt] * G, key))
+
+
+def test_mixed_length_mid_batch_admission_eviction(setup):
+    """Three groups with different prompt lengths on 3 slots (12 rows total)
+    force slots to be evicted and re-admitted mid-batch; every group must
+    still be token-identical to its own Sampler call, and every page must
+    return to the freelist."""
+    cfg, params = setup
+    prompts = [np.asarray([1, 9, 4], np.int32),
+               np.asarray([1, 5, 6, 7, 8, 9, 10, 11, 12, 13], np.int32),
+               np.asarray([1, 2, 3, 4, 5, 6], np.int32)]
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    eng = _engine(cfg, temperature=1.0)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    handles = [eng.submit(p, k) for p, k in zip(prompts, keys)]
+    while eng.step():
+        pass
+    ref = Sampler(cfg, LP, T, temperature=1.0)
+    for p, k, h in zip(prompts, keys, handles):
+        _assert_group_identical(h.result(1), ref.generate(params, [p] * G, k))
+    # slots were reused across groups: 12 rows never fit 3 slots at once
+    assert eng.decode_steps > T
+    assert eng.alloc.num_free == free0 and eng.idle
+
+
+def test_short_rows_free_slots_before_stragglers(setup):
+    """A greedy group where some rows hit EOS early must release those
+    slots while the longest row keeps decoding — generated tokens then
+    track true lengths, not group_size x max_new."""
+    cfg, params = setup
+    rng = np.random.RandomState(3)
+    eng = _engine(cfg, num_slots=G, temperature=1.0)
+    eng.set_params(params)
+    h = eng.submit(rng.randint(3, 250, size=(7,)).astype(np.int32),
+                   jax.random.PRNGKey(4))
+    while eng.step():
+        pass
+    lens = np.asarray(h.result(1).response_len)
+    assert eng.generated_tokens == int(lens.sum())
+    if lens.min() < lens.max():        # rows staggered (the common case)
+        assert eng.generated_tokens < G * T
+
+
+# =========================================================================
+# pool level: concurrent groups batch together; pipeline stays on-policy
+# =========================================================================
+
+def test_concurrent_groups_share_decode_steps(setup):
+    """Two groups submitted from two threads through one instance must
+    decode together: total engine steps stay well below the sum of the
+    groups' serial step counts."""
+    cfg, params = setup
+    eng = _engine(cfg, num_slots=2 * G, temperature=0.0)
+    sampler = Sampler(cfg, LP, T, temperature=0.0)
+    inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
+    inst.sync_weights(params, version=3)
+    prompts = [np.asarray([1, 9, 4, 7], np.int32),
+               np.asarray([1, 2, 8, 5, 6], np.int32)]
+    keys = jax.random.split(jax.random.PRNGKey(7), 2)
+    results = [None, None]
+
+    def worker(i):
+        results[i] = inst.generate_group([prompts[i]] * G, keys[i])
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i in range(2):
+        out, version = results[i]
+        assert version == 3
+        _assert_group_identical(out, sampler.generate(params,
+                                                      [prompts[i]] * G,
+                                                      keys[i]))
+    assert eng.idle
+
+
+def test_generator_paged_pool_matches_group_pool(setup):
+    """End-to-end producer equivalence: the TemporaryDataGenerator feeding a
+    paged pool must enqueue the same rollouts (per uid) as the group pool
+    under the same base key — completion order may differ, content may not."""
+    cfg, params = setup
+    tok = Tokenizer(cfg.vocab_size)
+    task = ArithmeticTask(seed=0)
+    problems = task.batch(3)
+    batch = [(p, np.asarray(tok.encode(p.prompt)[:LP], np.int32))
+             for p in problems]
+    reward = lambda resp, ans: 0.0
+    base_key = jax.random.PRNGKey(9)
+
+    def produce(paged: bool):
+        sampler = Sampler(cfg, LP, T, temperature=1.0)
+        eng = _engine(cfg, num_slots=4, temperature=1.0) if paged else None
+        inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
+        inst.sync_weights(params, version=0)
+        queue = RolloutQueue()
+        gen = TemporaryDataGenerator(InferencePool([inst]), queue, reward, G)
+        gen.submit_batch(batch, base_key, 0)
+        gen.join()
+        groups = [queue.get() for _ in range(len(batch))]
+        return {g.uid: g for g in groups}
+
+    by_uid_group = produce(paged=False)
+    by_uid_paged = produce(paged=True)
+    assert set(by_uid_group) == set(by_uid_paged)
+    for uid in by_uid_group:
+        a, b = by_uid_group[uid], by_uid_paged[uid]
+        np.testing.assert_array_equal(np.asarray(a.response_len),
+                                      np.asarray(b.response_len))
+        np.testing.assert_array_equal(np.asarray(a.response_ids),
+                                      np.asarray(b.response_ids))
+
+
+def test_pipeline_async_paged_zero_staleness(setup):
+    """Periodic-asynchrony contract with the token-level engine: weight
+    sync only at iteration boundaries, OnPolicyMonitor sees staleness 0."""
+    cfg, _ = setup
+    rl = RLConfig(mode="async", batch_prompts=2, group_size=3, micro_batch=3,
+                  num_inference_instances=1, max_prompt_len=24,
+                  max_response_len=6, learning_rate=1e-3,
+                  rollout_engine="paged", cbatch_slots=4, kv_page_size=8)
+    sched, parts = build_pipeline(cfg, rl)
+    hist = sched.run(2)
+    assert len(hist) == 2
+    for s in hist:
+        assert s.trained_tokens > 0
+        assert s.max_staleness == 0
+        assert s.infer_time > 0
+    assert parts["queue"].outstanding == 0
+    for inst in parts["pool"].instances:
+        assert inst.paged_engine.idle
+
+
+def test_paged_rejects_offpolicy_mode(setup):
+    cfg, _ = setup
+    rl = RLConfig(mode="async_offpolicy", rollout_engine="paged",
+                  batch_prompts=2, group_size=2)
+    with pytest.raises(ValueError, match="quiescent"):
+        build_pipeline(cfg, rl)
+
+
+# =========================================================================
+# scheduler + allocator units
+# =========================================================================
+
+def test_slot_scheduler_fifo_and_gate():
+    sched = SlotScheduler(2)
+    for r in "abcd":
+        sched.submit(r)
+    assert [(s, r) for s, r in sched.admit()] == [(0, "a"), (1, "b")]
+    assert sched.admit() == []                     # no free slots
+    assert sched.evict(0) == "a"
+    # gate refuses the FIFO front -> nothing admitted (no overtaking)
+    assert sched.admit(gate=lambda r: False) == []
+    assert sched.admit() == [(0, "c")]
+    sched.evict(0), sched.evict(1)
+    assert sched.admit() == [(0, "d")]
+    sched.evict(0)
+    assert sched.idle
+
+
+def test_engine_rejects_undersized_page_pool(setup):
+    cfg, _ = setup
+    with pytest.raises(ValueError, match="page pool too small"):
+        PagedGroupEngine(cfg, num_slots=2, page_size=4,
+                         num_pages=FIRST_PAGE + 1, max_prompt_len=LP,
+                         max_new_tokens=T, group_size=2)
+
+
+def test_page_gate_backpressure_tight_pool(setup):
+    """Many slots, page pool sized for barely more than one group: the
+    admission gate must apply backpressure (rows wait for pages, the engine
+    keeps stepping) instead of over-admitting against a stale freelist.
+    Output must still be token-identical per group."""
+    cfg, params = setup
+    # one group needs 2 prompt pages + 4 rows x 2 resp pages = 10;
+    # give 13 usable pages so a second group's prompt can load but not all
+    # of its rows — rows trickle in as pages free
+    eng = PagedGroupEngine(cfg, num_slots=8, page_size=4,
+                           num_pages=FIRST_PAGE + 13, max_prompt_len=LP,
+                           max_new_tokens=T, group_size=G, temperature=1.0)
+    eng.set_params(params)
+    prompts = [np.asarray([1, 9, 4, 7, 2], np.int32),
+               np.asarray([1, 5, 6, 7, 8, 9], np.int32),
+               np.asarray([1, 2, 3], np.int32)]
+    keys = jax.random.split(jax.random.PRNGKey(21), 3)
+    handles = [eng.submit(p, k) for p, k in zip(prompts, keys)]
+    while eng.step():
+        pass
+    ref = Sampler(cfg, LP, T, temperature=1.0)
+    for p, k, h in zip(prompts, keys, handles):
+        _assert_group_identical(h.result(1), ref.generate(params, [p] * G, k))
+    assert eng.alloc.num_free == 13 and eng.idle
+
+
+def test_paged_engine_rejects_heterogeneous_group(setup):
+    cfg, params = setup
+    eng = _engine(cfg)
+    sampler = Sampler(cfg, LP, T)
+    inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
+    inst.sync_weights(params, version=0)
+    prompts = [np.asarray([1, 2, 3], np.int32)] * (G - 1) + \
+              [np.asarray([1, 2, 4], np.int32)]
+    with pytest.raises(AssertionError, match="identical"):
+        inst.generate_group(prompts, jax.random.PRNGKey(0))
+
+
+def test_paged_decode_attention_kernel_matches_gather(setup):
+    """The paged flash-decode wrapper (page-table gather inside the kernel
+    module) must agree with the plain kernel on pre-gathered pages."""
+    from repro.kernels.decode_attention import (decode_attention,
+                                               paged_decode_attention)
+    rng = np.random.RandomState(0)
+    B, H, Hkv, D, P, page, n_max = 2, 4, 2, 8, 6, 4, 3
+    q = jnp.asarray(rng.randn(B, H, D), jnp.float32)
+    k_pages = jnp.asarray(rng.randn(P, page, Hkv, D), jnp.float32)
+    v_pages = jnp.asarray(rng.randn(P, page, Hkv, D), jnp.float32)
+    pos_pages = jnp.asarray(
+        rng.randint(0, 10, size=(P, page)), jnp.int32)
+    pos_pages = pos_pages.at[0].set(2 ** 30)          # null page masked
+    table = jnp.asarray([[1, 2, 0], [3, 4, 5]], jnp.int32)
+    q_pos = jnp.asarray([7, 9], jnp.int32)
+    out = paged_decode_attention(q, k_pages, v_pages, pos_pages, table,
+                                 q_pos, block_l=4, interpret=True)
+    L = n_max * page
+    ref = decode_attention(
+        q, k_pages[table].reshape(B, L, Hkv, D),
+        v_pages[table].reshape(B, L, Hkv, D),
+        pos_pages[table].reshape(B, L), q_pos, block_l=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)

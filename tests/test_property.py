@@ -14,6 +14,11 @@ Covered invariants:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# the container has no `hypothesis` wheel baked in — skip cleanly instead
+# of failing collection (tier-1 runs with -x)
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.queue import RolloutGroup
