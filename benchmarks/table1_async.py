@@ -53,6 +53,10 @@ def run_mode(mode: str, iterations: int = 3, batch: int = 16,
     wall = time.perf_counter() - t0
     tokens = sum(s.trained_tokens for s in hist)
     infer_busy = sum(i.busy_time for i in parts["pool"].instances)
+    # consumer BUSY-time (scheduler accumulates around grad steps and the
+    # boundary update only) — in async mode the consumer also spends wall
+    # time blocked on queue.get(), which must NOT count as training cost
+    # or the async/sync comparison conflates the two stages
     train_time = sum(s.train_time for s in hist)
     return {"tpspd": tokens / wall, "wall": wall, "tokens": tokens,
             "infer_busy": infer_busy, "train_time": train_time,
@@ -63,7 +67,8 @@ def main(timeline: bool = False) -> dict:
     sync = run_mode("sync")
     async_ = run_mode("async")
     speedup = async_["tpspd"] / sync["tpspd"]
-    # Eq. 4 bound from the measured stage times of the sync run
+    # Eq. 4 bound from the measured stage times of the sync run: in sync
+    # mode the stages are serial, so wall - consumer-busy IS inference
     t_i = sync["wall"] - sync["train_time"]
     t_t = sync["train_time"]
     bound = (t_i + t_t) / max(t_i, t_t)

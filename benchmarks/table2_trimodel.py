@@ -9,6 +9,10 @@ Measured here (CPU, reduced model, REAL jitted programs):
   * fused:    one jitted program, old+ref via stacked-vmap + policy forward
               (the shape the dry-run lowers)
   * separate: three sequential jitted forwards (the colocated baseline)
+  * capture on/off: the rollout-time logprob capture
+    (DESIGN.md §Tri-model-capture) deletes the old-policy half of the
+    no-grad pass — measured as stacked old+ref vs single ref forward, and
+    as the full grad micro-step with captured vs recomputed old-logprobs
 and the decoupled-vs-colocated step-time model that generates Table 2's
 resource-economy argument.
 """
@@ -22,7 +26,9 @@ from benchmarks.common import emit, save, timeit
 from repro.configs import get_config, reduced_config
 from repro.configs.base import RLConfig
 from repro.models import forward_hidden, init, token_logprobs
-from repro.rl.grpo import MicroBatch, trimodel_ref_old_logprobs
+from repro.rl.grpo import (MicroBatch, make_grad_step,
+                           make_grad_step_captured,
+                           trimodel_ref_old_logprobs)
 
 
 def _mb(cfg, B=4, S=64):
@@ -65,6 +71,32 @@ def main() -> dict:
          "(one scheduled program, shared layout, no per-model resource "
          "allocation) — single-core CPU wall time may not show it")
 
+    # --- rollout-time logprob capture (DESIGN.md §Tri-model-capture) ----
+    # capture OFF: the no-grad pass is the stacked old+ref vmap (t_fused);
+    # capture ON:  the behavior logprobs ride the micro-batch and the
+    #              no-grad pass is ONE ref forward (t_single).
+    emit("table2", "capture_off_nograd_ms", f"{t_fused * 1e3:.1f}",
+         "stacked old+ref vmap per micro-step")
+    emit("table2", "capture_on_nograd_ms", f"{t_single * 1e3:.1f}",
+         "single ref forward — old-policy logprobs captured at rollout")
+    emit("table2", "capture_nograd_saving", f"{t_fused / t_single:.2f}x",
+         "no-grad forward shrink per micro-step")
+    # full grad micro-step, both paths (policy fwd+bwd dominates; the
+    # delta IS the deleted old-policy forward)
+    rl = RLConfig(max_prompt_len=16, max_response_len=48)
+    gs_off = make_grad_step(cfg, rl)
+    gs_on = make_grad_step_captured(cfg, rl)
+    mb_cap = mb._replace(logp_behavior=-jnp.ones_like(mb.loss_mask))
+    t_step_off = timeit(gs_off, params, params, params, mb)
+    t_step_on = timeit(gs_on, params, params, params, mb_cap)
+    emit("table2", "capture_off_grad_step_ms", f"{t_step_off * 1e3:.1f}",
+         "policy fwd+bwd + stacked old+ref no-grad")
+    emit("table2", "capture_on_grad_step_ms", f"{t_step_on * 1e3:.1f}",
+         "policy fwd+bwd + single ref no-grad")
+    emit("table2", "capture_grad_step_speedup",
+         f"{t_step_off / t_step_on:.2f}x",
+         "upper bound 1.5x when fwd:bwd is 1:2 and forwards dominate")
+
     # --- deployment step-time model (Table 2's resource-economy axis) ---
     # decoupled SYNC  (paper Eq. 2): step = I/n_inf + T/n_train
     # decoupled ASYNC (paper Eq. 3): step = max(I/n_inf, T/n_train)
@@ -91,6 +123,9 @@ def main() -> dict:
          f"best ratio {best_async[0]}:1, async/sync speedup "
          f"{best_sync[1] / best_async[1]:.2f}x (Eq. 4 bound 2.0)")
     out = {"fused_s": t_fused, "separate_s": t_separate,
+           "capture_off_nograd_s": t_fused, "capture_on_nograd_s": t_single,
+           "capture_off_grad_step_s": t_step_off,
+           "capture_on_grad_step_s": t_step_on,
            "ideal_step": ideal, "sync_step": best_sync[1],
            "async_step": best_async[1],
            "async_ratio": best_async[0]}

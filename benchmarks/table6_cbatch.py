@@ -52,7 +52,10 @@ def main() -> dict:
     rng = np.random.RandomState(1)
     targets = rng.randint(4, T + 1, size=N_REQ).tolist()
 
-    fixed = Sampler(cfg, LP, T, temperature=1.0, eos_id=EOS)
+    # serving-side decode comparison: no trainer consumes logprobs, and the
+    # slot engine does not capture — keep the baseline unburdened too
+    fixed = Sampler(cfg, LP, T, temperature=1.0, eos_id=EOS,
+                    capture_logprobs=False)
     cb = ContinuousBatchingSampler(cfg, num_slots=SLOTS, max_prompt_len=LP,
                                    max_new_tokens=T, temperature=1.0,
                                    eos_id=EOS)
@@ -104,7 +107,10 @@ def pool_mode(n_groups: int = 6, group_size: int = 4, workers: int = 4
     params = init(jax.random.PRNGKey(0), cfg)
     prompts = _prompts(n_groups, seed=5)
     keys = jax.random.split(jax.random.PRNGKey(3), n_groups)
-    sampler = Sampler(cfg, LP, T, temperature=1.0, eos_id=EOS)
+    # decode-throughput comparison: capture off on BOTH engines so the
+    # numbers match the serving regime (the RL pipeline captures on both)
+    sampler = Sampler(cfg, LP, T, temperature=1.0, eos_id=EOS,
+                      capture_logprobs=False)
 
     def drive(inst):
         """Submit every group from worker threads, generator-style."""
@@ -135,7 +141,7 @@ def pool_mode(n_groups: int = 6, group_size: int = 4, workers: int = 4
         eng = PagedGroupEngine(
             cfg, num_slots=2 * group_size, page_size=8, num_pages=0,
             max_prompt_len=LP, max_new_tokens=T, group_size=group_size,
-            temperature=1.0, eos_id=EOS)
+            temperature=1.0, eos_id=EOS, capture_logprobs=False)
         inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
         inst.sync_weights(params, 0)
         return inst, eng

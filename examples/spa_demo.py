@@ -24,7 +24,7 @@ from repro.core.queue import RolloutGroup
 from repro.core.spa import pack_plain, pack_spa, spa_reduction_ratio
 from repro.kernels.spa_attention import block_map
 from repro.models import init
-from repro.rl.grpo import MicroBatch, make_grad_step, group_advantages
+from repro.rl.grpo import jaxify, make_grad_step, group_advantages
 
 
 def make_group(Lp: int, Lr: int, K: int, seed: int = 0) -> RolloutGroup:
@@ -61,11 +61,9 @@ def main() -> None:
     rl = RLConfig(max_prompt_len=Lp, max_response_len=Lr, group_size=K)
     params = init(jax.random.PRNGKey(0), cfg)
     grad_step = make_grad_step(cfg, rl)
-    as_mb = lambda m: MicroBatch(*map(jnp.asarray, m[:-2]),
-                                 n_samples=m.n_samples)
-    g_spa, _ = grad_step(params, params, params, as_mb(mb))
+    g_spa, _ = grad_step(params, params, params, jaxify(mb))
     g_plain, _ = grad_step(params, params, params,
-                           as_mb(pack_plain([group], [adv], Lp, Lr)))
+                           jaxify(pack_plain([group], [adv], Lp, Lr)))
     err = max(float(jnp.abs(a - b).max()) for a, b in
               zip(jax.tree.leaves(g_spa), jax.tree.leaves(g_plain)))
     print(f"max |grad_SPA - grad_plain| = {err:.2e}  "

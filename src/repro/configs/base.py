@@ -227,4 +227,17 @@ class RLConfig:
     cbatch_slots: int = 8              # decode slots per paged instance
     kv_page_size: int = 16             # tokens per KV page
     kv_pages: int = 0                  # physical pages (0 = auto-size)
+    # Capture per-token logprobs of the sampled ids at rollout time
+    # (DESIGN.md §Tri-model-capture). Under Proposition 1 the rollout
+    # weights ARE the old-policy weights, so the captured values replace
+    # the trainer's old-policy recompute: the tri-model's no-grad pass
+    # shrinks from stacked old+ref to a single ref forward. In
+    # async_offpolicy mode the captured values are evaluated under the
+    # BEHAVIOR weights instead of the current old weights, removing the
+    # old~behavior weights approximation from the importance ratio (both
+    # paths use raw-distribution logprobs; sampling-time temperature/top-p
+    # filtering sits outside the ratio convention either way). Rollouts
+    # without captured values (simulated/scripted instances) fall back to
+    # the recompute path per micro-batch.
+    capture_logprobs: bool = True
     seed: int = 0

@@ -10,6 +10,7 @@ algorithm.
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional
 
@@ -57,13 +58,16 @@ class TemporaryDataGenerator:
                 out, version = self.pool.generate_group(prompts, key)
                 resp = np.asarray(out.response_ids)
                 lens = np.asarray(out.response_len)
+                lps = getattr(out, "response_logprobs", None)
+                lps = None if lps is None else np.asarray(lps, np.float32)
                 rewards = np.asarray(
                     [self.reward_fn(resp[g, : lens[g]], problem.answer)
                      for g in range(self.group_size)], np.float32)
                 self.queue.put(RolloutGroup(
                     uid=problem.uid, prompt_ids=np.asarray(prompt_ids, np.int32),
                     response_ids=resp, response_len=lens, rewards=rewards,
-                    weight_version=version, answer=problem.answer))
+                    weight_version=version, response_logprobs=lps,
+                    answer=problem.answer))
             except BaseException as exc:  # surface in the consumer, no deadlock
                 self.queue.put_error(exc)
                 raise
@@ -73,13 +77,25 @@ class TemporaryDataGenerator:
                 futures = [ex.submit(produce_one, item, k)
                            for item, k in zip(batch, keys)]
                 for f in futures:
-                    f.result()  # surface exceptions
+                    # wait without re-raising: produce_one already forwarded
+                    # the failure to the consumer via put_error, and a dying
+                    # daemon thread would only trip the unraisable hook
+                    f.exception()
 
         th = threading.Thread(target=run, daemon=True)
         self._threads.append(th)
         th.start()
 
-    def join(self, timeout: Optional[float] = None) -> None:
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Wait for outstanding producer threads. Returns True when every
+        thread has drained, False on timeout with producers still alive —
+        mirroring ``RolloutQueue.wait_empty`` so callers can tell "drained"
+        from "hung producer". ``timeout`` is one overall deadline shared by
+        all threads, not per-thread. Still-alive threads stay tracked for
+        the next call."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         for th in self._threads:
-            th.join(timeout=timeout)
+            th.join(timeout=None if deadline is None
+                    else max(0.0, deadline - time.monotonic()))
         self._threads = [t for t in self._threads if t.is_alive()]
+        return not self._threads

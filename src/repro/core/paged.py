@@ -41,7 +41,8 @@ from repro.data.tokenizer import Tokenizer
 from repro.models import forward_hidden, init_caches, init_paged_caches
 from repro.models.attention import INVALID_POS
 from repro.models.layers import lm_head_weight
-from repro.rl.rollout import RolloutBatch, _sample_token_rows, stepwise_keys
+from repro.rl.rollout import (RolloutBatch, _sample_token_rows,
+                              sampled_token_logprob, stepwise_keys)
 
 NULL_PAGE = 0
 TRASH_PAGE = 1
@@ -89,6 +90,7 @@ class _Group:
     prompt_pages: Optional[List[int]] = None
     prompt_logits: Optional[jax.Array] = None   # (V,) f32 last-prompt logits
     done_rows: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    done_lps: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     finish_step: int = 0
 
 
@@ -97,6 +99,7 @@ class _Row:
     group: _Group
     idx: int                         # row index within the group (PRNG row)
     toks: list = dataclasses.field(default_factory=list)
+    lps: list = dataclasses.field(default_factory=list)
     pages: Optional[List[int]] = None
 
 
@@ -127,7 +130,8 @@ class PagedGroupEngine:
     def __init__(self, cfg: ModelConfig, *, num_slots: int, page_size: int,
                  num_pages: int, max_prompt_len: int, max_new_tokens: int,
                  group_size: int, temperature: float = 1.0, top_p: float = 1.0,
-                 eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD):
+                 eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD,
+                 capture_logprobs: bool = True):
         if num_slots < 1 or page_size < 1:
             raise ValueError(f"paged engine needs num_slots >= 1 and "
                              f"page_size >= 1, got {num_slots}/{page_size}")
@@ -150,6 +154,7 @@ class PagedGroupEngine:
         self.top_p = top_p
         self.eos_id = eos_id
         self.pad_id = pad_id
+        self.capture_logprobs = capture_logprobs
         self.n_prompt_pages = -(-max_prompt_len // page_size)
         self.n_resp_pages = -(-max_new_tokens // page_size)
         self.n_max = self.n_prompt_pages + self.n_resp_pages
@@ -223,11 +228,17 @@ class PagedGroupEngine:
                      wslot, ptab, active):
         """One token for every slot: sample from the slot's current logits
         with its row's own step key, then advance through the paged cache.
-        Inactive slots feed PAD at pos 2^30 and write into the trash page."""
+        Inactive slots feed PAD at pos 2^30 and write into the trash page.
+        With capture enabled, also returns log p(sampled id) under the raw
+        distribution — the rollout-time behavior logprob
+        (DESIGN.md §Tri-model-capture); disabled engines skip both the
+        log-softmax and the extra device->host transfer."""
         cfg = self.cfg
         tok = _sample_token_rows(keys, logits, rows, self.G,
                                  self.temperature, self.top_p)
         tok = jnp.where(active, tok, self.pad_id)
+        lp = (jnp.where(active, sampled_token_logprob(logits, tok), 0.0)
+              if self.capture_logprobs else None)
         seg = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
         h, caches, _, _ = forward_hidden(
             params, cfg, tok[:, None], positions=positions[:, None],
@@ -235,7 +246,7 @@ class PagedGroupEngine:
         W = lm_head_weight(params["embed"], cfg)
         logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
                                  W.astype(jnp.float32))
-        return tok, caches, logits_next
+        return tok, lp, caches, logits_next
 
     def _invalidate_pages(self, caches, pages):
         """Mark freshly allocated response pages invalid — they may hold a
@@ -326,10 +337,13 @@ class PagedGroupEngine:
         self._ptab[slot] = tab
         self.logits = self.logits.at[slot].set(g.prompt_logits)
         row.toks = []
+        row.lps = []
 
     def _finish_row(self, slot: int, row: _Row, step: int) -> None:
         g = row.group
         g.done_rows[row.idx] = np.asarray(row.toks, np.int32)
+        if self.capture_logprobs:
+            g.done_lps[row.idx] = np.asarray(row.lps, np.float32)
         g.finish_step = step
         self.alloc.release(row.pages)
         self.alloc.release(g.prompt_pages)             # refcount G -> 0
@@ -338,12 +352,18 @@ class PagedGroupEngine:
         if len(g.done_rows) == g.G:
             resp = np.full((g.G, self.T), self.pad_id, np.int32)
             lens = np.zeros((g.G,), np.int32)
+            lps = np.zeros((g.G, self.T), np.float32)
             for i, r in g.done_rows.items():
                 resp[i, : len(r)] = r
                 lens[i] = len(r)
+                if self.capture_logprobs:
+                    lps[i, : len(r)] = g.done_lps[i]
             h = self._handles.pop(g.gid)
-            h._result = RolloutBatch(response_ids=jnp.asarray(resp),
-                                     response_len=jnp.asarray(lens))
+            h._result = RolloutBatch(
+                response_ids=jnp.asarray(resp),
+                response_len=jnp.asarray(lens),
+                response_logprobs=(jnp.asarray(lps)
+                                   if self.capture_logprobs else None))
             h._event.set()
 
     def step(self) -> bool:
@@ -375,17 +395,21 @@ class PagedGroupEngine:
                 wslot[s] = (row.pages[t // self.page] * self.page
                             + t % self.page)
                 active[s] = True
-            tok, self.caches, self.logits = self._decode(
+            tok, lp, self.caches, self.logits = self._decode(
                 self.params, self.caches, self.logits, jnp.asarray(keys),
                 jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(wslot),
                 jnp.asarray(self._ptab), jnp.asarray(active))
-            tok = np.asarray(tok)
+            # one host transfer for the step's outputs (lp is None when
+            # capture is off) — this sync sits in the per-token hot loop
+            tok, lp = jax.device_get((tok, lp))
             step = self.sched.tick()
             self.decode_steps += 1
             self.generated_tokens += len(act)
             for s in act:
                 row = self.sched.slot_req[s]
                 row.toks.append(int(tok[s]))
+                if self.capture_logprobs:
+                    row.lps.append(float(lp[s]))
                 if (tok[s] == self.eos_id
                         or len(row.toks) >= row.group.max_new):
                     self._finish_row(s, row, step)

@@ -23,6 +23,11 @@ class RolloutGroup:
     response_len: np.ndarray       # (G,) int32
     rewards: np.ndarray            # (G,) float32
     weight_version: int            # policy iteration t that generated this
+    # (G, T) float32 rollout-captured log p(sampled id) under the raw model
+    # distribution — the behavior/old-policy logprobs the trainer would
+    # otherwise recompute (DESIGN.md §Tri-model-capture). None when the
+    # producing instance does not capture (scripted/simulated).
+    response_logprobs: Optional[np.ndarray] = None
     answer: Optional[int] = None
     meta: Optional[dict] = None
 

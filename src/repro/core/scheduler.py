@@ -33,7 +33,7 @@ from repro.core.spa import PAD, pack_plain, pack_spa
 from repro.core.trimodel import TriModelState
 from repro.optim.accumulate import GradAccumulator
 from repro.rl.grpo import (MicroBatch, group_advantages, make_apply_update,
-                           make_grad_step)
+                           make_grad_step, make_grad_step_captured)
 
 
 @dataclasses.dataclass
@@ -41,6 +41,10 @@ class IterationStats:
     iteration: int
     wall_time: float
     infer_time: float   # producer busy-time aggregated over pool instances
+    # consumer BUSY-time: grad micro-steps + the iteration-boundary update
+    # only. Time the consumer spends blocked on queue.get() waiting for the
+    # producer is excluded — that wait is precisely what the async/sync
+    # TPSPD comparison must not fold into training cost.
     train_time: float
     trained_tokens: int
     reward_mean: float
@@ -67,6 +71,8 @@ def _pad_rows(mb: MicroBatch, m: int) -> MicroBatch:
         loss_mask=np.concatenate([mb.loss_mask, z_f]),
         advantages=np.concatenate([mb.advantages, z_f]),
         n_samples=mb.n_samples,
+        logp_behavior=(None if mb.logp_behavior is None
+                       else np.concatenate([mb.logp_behavior, z_f])),
     )
 
 
@@ -82,11 +88,30 @@ class PeriodicAsyncScheduler:
         self.loader = loader
         self.num_devices = num_devices
         self.grad_step = make_grad_step(cfg, rl)
+        self.grad_step_captured = make_grad_step_captured(cfg, rl)
+        # micro-step accounting: captured = ratio from rollout-time behavior
+        # logprobs (single ref no-grad forward); recomputed = stacked
+        # old+ref tri-model forward (capture off, or rollouts without
+        # captured logprobs, e.g. scripted/simulated instances)
+        self.captured_micro_steps = 0
+        self.recomputed_micro_steps = 0
         self.apply_update = make_apply_update(cfg, rl)
         self.monitor = OnPolicyMonitor(strict=(rl.mode != "async_offpolicy"))
         self.history: List[IterationStats] = []
-        self._batches = None
-        self._next_batch_idx = 0
+        # submitted-but-unconsumed batches carried across run() calls — the
+        # async_offpolicy producer runs up to eta iterations ahead, so a
+        # run() boundary is NOT a drained pipeline; re-fetching and
+        # re-submitting from scratch would double-submit and train leftover
+        # groups against mismatched counts.
+        self._inflight: List = []
+        self._key = None
+        self._train_busy = 0.0
+        # set when a run() unwound mid-iteration: gradients were half-
+        # accumulated and the failed iteration's groups are partially
+        # consumed, so re-entering run() cannot resume soundly — it would
+        # deadlock on wait_empty (strict modes) or train shifted batch
+        # boundaries (off-policy). Subsequent run() calls refuse loudly.
+        self._failed = False
 
     # ------------------------------------------------------------------
     def _micro_batches(self, group: RolloutGroup):
@@ -105,111 +130,184 @@ class PeriodicAsyncScheduler:
             mb = pack_spa(group, adv, rl.max_prompt_len, rl.max_response_len,
                           responses_per_row=rl.group_size,
                           align=rl.spa_align)
+            if not rl.capture_logprobs:
+                mb = mb._replace(logp_behavior=None)
             yield _pad_rows(mb, mb.tokens.shape[0]), float(mb.n_samples)
         else:
             mb = pack_plain([group], [adv], rl.max_prompt_len,
                             rl.max_response_len)
+            if not rl.capture_logprobs:
+                mb = mb._replace(logp_behavior=None)
             m = rl.micro_batch
             rows = mb.tokens.shape[0]
             for lo in range(0, rows, m):
                 hi = min(lo + m, rows)
-                sub = MicroBatch(*(a[lo:hi] for a in mb[:-2]),
-                                 n_samples=np.float32(hi - lo))
+                sub = MicroBatch(
+                    tokens=mb.tokens[lo:hi], labels=mb.labels[lo:hi],
+                    positions=mb.positions[lo:hi],
+                    segments=mb.segments[lo:hi],
+                    loss_mask=mb.loss_mask[lo:hi],
+                    advantages=mb.advantages[lo:hi],
+                    n_samples=np.float32(hi - lo),
+                    logp_behavior=(None if mb.logp_behavior is None
+                                   else mb.logp_behavior[lo:hi]))
                 yield _pad_rows(sub, m), float(hi - lo)
 
     def _train_group(self, group: RolloutGroup, acc: GradAccumulator) -> int:
+        """Consumer busy work for one group — timed into ``_train_busy``
+        (the quantity ``IterationStats.train_time`` reports)."""
         tokens = 0
+        t0 = time.perf_counter()
         for mb, weight in self._micro_batches(group):
-            grads, metrics = self.grad_step(self.tri.policy, self.tri.old,
-                                            self.tri.ref, mb)
+            if mb.logp_behavior is not None:
+                self.captured_micro_steps += 1
+                step = self.grad_step_captured
+            else:
+                self.recomputed_micro_steps += 1
+                step = self.grad_step
+            grads, metrics = step(self.tri.policy, self.tri.old,
+                                  self.tri.ref, mb)
             jax.block_until_ready(jax.tree.leaves(grads)[0])
             acc.add(grads, weight)
             tokens += int((np.asarray(mb.tokens) != PAD).sum())
+        self._train_busy += time.perf_counter() - t0
         return tokens
 
     def _finish_iteration(self, acc: GradAccumulator) -> None:
-        self.tri.refresh_old()                       # line 10
+        t0 = time.perf_counter()
         new_params, new_opt, _ = self.apply_update(
             self.tri.policy, self.tri.opt, acc.mean())
         jax.block_until_ready(jax.tree.leaves(new_params)[0])
         self.tri.apply_update(new_params, new_opt)   # line 11
+        self._train_busy += time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     def run(self, num_iterations: int, *, key=None) -> List[IterationStats]:
         """Run ``num_iterations`` and return THEIR stats (self.history keeps
-        the full cumulative record across calls)."""
+        the full cumulative record across calls).
+
+        Safe to call repeatedly: in ``async_offpolicy`` mode up to
+        ``staleness_eta`` submitted-but-unconsumed batches from the previous
+        call are still in flight at a run() boundary — they carry over in
+        ``self._inflight`` and are consumed FIRST, and only the shortfall is
+        fetched from the loader (no double-submit).
+
+        NOT safe to call again after a previous run() raised mid-iteration:
+        the pipeline state is unrecoverable by re-entry (half-accumulated
+        gradients, partially consumed batches) and this method refuses with
+        a RuntimeError instead of deadlocking or double-submitting —
+        rebuild the pipeline to recover."""
+        if self._failed:
+            raise RuntimeError(
+                "scheduler state is inconsistent: a previous run() raised "
+                "mid-iteration (groups from the failed iteration may still "
+                "be queued and gradients were discarded half-accumulated). "
+                "Rebuild the pipeline instead of retrying run().")
         start = len(self.history)
-        key = jax.random.PRNGKey(self.rl.seed + start) if key is None else key
-        batches = self.loader.batches(num_iterations +
-                                      (self.rl.staleness_eta
-                                       if self.rl.mode == "async_offpolicy" else 0))
-        batches = list(batches)
+        if key is None:
+            key = (self._key if self._key is not None
+                   else jax.random.PRNGKey(self.rl.seed))
         mode = self.rl.mode
         pool = self.generator.pool
-        next_submit = 0
+        eta = self.rl.staleness_eta if mode == "async_offpolicy" else 0
+        # consume-order batch list: in-flight leftovers first, then exactly
+        # enough fresh batches for this call's consumption + eta lookahead
+        need = num_iterations + eta - len(self._inflight)
+        batches = self._inflight + list(self.loader.batches(max(need, 0)))
+        next_submit = len(self._inflight)
+        consumed_upto = 0   # first batch index NOT fully consumed yet
 
-        for t in range(num_iterations):
-            it_start = time.perf_counter()
-            busy0 = pool.busy_time
-            acc = GradAccumulator()
-            rewards_seen: List[float] = []
-            trained_tokens = 0
-            self.monitor.max_staleness_seen = 0
+        try:
+            for t in range(num_iterations):
+                it_start = time.perf_counter()
+                busy0 = pool.busy_time
+                self._train_busy = 0.0
+                acc = GradAccumulator()
+                rewards_seen: List[float] = []
+                trained_tokens = 0
+                self.monitor.max_staleness_seen = 0
 
-            if mode in ("sync", "async"):
-                # Algorithm 1 line 3: wait until Q empty, then sync weights
-                self.queue.wait_empty()
-                pool.sync_weights(self.tri.policy, self.tri.version)
-                key, k_t = jax.random.split(key)
-                self.generator.submit_batch(batches[t], k_t, self.tri.version)
-                next_submit = t + 1
-                n_expect = len(batches[t])
-                if mode == "sync":
-                    self.generator.join()            # full-batch barrier
-                train_t0 = time.perf_counter()
-                groups = []
-                for _ in range(n_expect):
-                    groups.append(self.queue.get())
-                    if mode == "async":
-                        g = groups[-1]
-                        self.monitor.check(g, self.tri.version)
-                        rewards_seen.extend(g.rewards.tolist())
-                        trained_tokens += self._train_group(g, acc)
-                if mode == "sync":
-                    groups.sort(key=lambda g: g.uid)  # original prompt order
-                    for g in groups:
-                        self.monitor.check(g, self.tri.version)
-                        rewards_seen.extend(g.rewards.tolist())
-                        trained_tokens += self._train_group(g, acc)
-            else:  # async_offpolicy (AReaL-like, staleness <= eta)
-                pool.sync_weights(self.tri.policy, self.tri.version)
-                while (next_submit <= t + self.rl.staleness_eta
-                       and next_submit < len(batches)):
+                if mode in ("sync", "async"):
+                    # Algorithm 1 line 3: wait until Q empty, sync weights
+                    self.queue.wait_empty()
+                    pool.sync_weights(self.tri.policy, self.tri.version)
+                    # Algorithm 1 line 10 at the BOUNDARY, before training:
+                    # old <- policy == the weights just synced to the pool,
+                    # so old-policy weights equal rollout weights at
+                    # consumption (Proposition 1's equality — refreshing at
+                    # iteration END left old one optimizer step stale
+                    # during iteration t's grad steps; see DESIGN.md
+                    # §Tri-model-capture)
+                    self.tri.refresh_old()
                     key, k_t = jax.random.split(key)
-                    self.generator.submit_batch(batches[next_submit], k_t,
+                    self.generator.submit_batch(batches[t], k_t,
                                                 self.tri.version)
-                    next_submit += 1
-                train_t0 = time.perf_counter()
-                for _ in range(len(batches[t])):
-                    g = self.queue.get()
-                    self.monitor.check(g, self.tri.version)
-                    rewards_seen.extend(g.rewards.tolist())
-                    trained_tokens += self._train_group(g, acc)
+                    next_submit = t + 1
+                    n_expect = len(batches[t])
+                    if mode == "sync":
+                        self.generator.join()        # full-batch barrier
+                    groups = []
+                    for _ in range(n_expect):
+                        groups.append(self.queue.get())
+                        if mode == "async":
+                            g = groups[-1]
+                            self.monitor.check(g, self.tri.version)
+                            rewards_seen.extend(g.rewards.tolist())
+                            trained_tokens += self._train_group(g, acc)
+                    if mode == "sync":
+                        groups.sort(key=lambda g: g.uid)  # prompt order
+                        for g in groups:
+                            self.monitor.check(g, self.tri.version)
+                            rewards_seen.extend(g.rewards.tolist())
+                            trained_tokens += self._train_group(g, acc)
+                else:  # async_offpolicy (AReaL-like, staleness <= eta)
+                    pool.sync_weights(self.tri.policy, self.tri.version)
+                    self.tri.refresh_old()           # line 10 at boundary
+                    while (next_submit <= t + eta
+                           and next_submit < len(batches)):
+                        key, k_t = jax.random.split(key)
+                        self.generator.submit_batch(batches[next_submit],
+                                                    k_t, self.tri.version)
+                        next_submit += 1
+                    for _ in range(len(batches[t])):
+                        g = self.queue.get()
+                        self.monitor.check(g, self.tri.version)
+                        rewards_seen.extend(g.rewards.tolist())
+                        trained_tokens += self._train_group(g, acc)
 
-            self._finish_iteration(acc)
-            wall = time.perf_counter() - it_start
-            train_time = time.perf_counter() - train_t0
-            stats = IterationStats(
-                iteration=t, wall_time=wall,
-                # producer busy-time delta over this iteration — in async
-                # modes the wall clock overlaps inference with training, so
-                # only the instances' own occupancy measures inference cost
-                infer_time=pool.busy_time - busy0,
-                train_time=train_time, trained_tokens=trained_tokens,
-                reward_mean=float(np.mean(rewards_seen)) if rewards_seen else 0.0,
-                tpspd=trained_tokens / wall / self.num_devices,
-                max_staleness=self.monitor.max_staleness_seen,
-                metrics={})
-            self.history.append(stats)
+                self._finish_iteration(acc)
+                wall = time.perf_counter() - it_start
+                stats = IterationStats(
+                    iteration=start + t, wall_time=wall,
+                    # producer busy-time delta over this iteration — in
+                    # async modes the wall clock overlaps inference with
+                    # training, so only the instances' own occupancy
+                    # measures inference cost
+                    infer_time=pool.busy_time - busy0,
+                    # consumer busy-time only (grad steps + boundary
+                    # update) — NOT wall-since-first-get, which in async
+                    # mode counts time spent blocked on the producer
+                    # inside queue.get()
+                    train_time=self._train_busy,
+                    trained_tokens=trained_tokens,
+                    reward_mean=(float(np.mean(rewards_seen))
+                                 if rewards_seen else 0.0),
+                    tpspd=trained_tokens / wall / self.num_devices,
+                    max_staleness=self.monitor.max_staleness_seen,
+                    metrics={})
+                self.history.append(stats)
+                consumed_upto = t + 1
+        except BaseException:
+            # mid-iteration unwind (producer put_error surfaced by
+            # queue.get, staleness assert, ...): the pipeline cannot be
+            # resumed by another run() — poison re-entry (see __init__)
+            self._failed = True
+            raise
+        finally:
+            # record submitted-but-unconsumed batches: on the happy path
+            # this is the eta-lookahead tail the next call consumes first;
+            # after an error it is diagnostic only (run() refuses re-entry)
+            self._inflight = batches[consumed_upto:next_submit]
+            self._key = key
         self.generator.join()
         return self.history[start:]

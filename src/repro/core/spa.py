@@ -18,6 +18,11 @@ packed gradients equal the sum of per-sample gradients exactly
 
 Per-token loss weights are 1/len(sample) so the packed loss reproduces
 GRPO's per-sample token-mean regardless of how samples share rows.
+
+Both packers also scatter rollout-captured ``response_logprobs`` (when the
+group carries them) onto the label positions, producing
+``MicroBatch.logp_behavior`` — the old-policy/behavior logprobs the grad
+step consumes instead of recomputing (DESIGN.md §Tri-model-capture).
 """
 from __future__ import annotations
 
@@ -39,8 +44,15 @@ def _np(x):
 
 def pack_plain(groups: Sequence[RolloutGroup], advantages: Sequence[np.ndarray],
                max_prompt_len: int, max_response_len: int) -> MicroBatch:
-    """One row per (prompt, response) sample — standard (non-SPA) layout."""
+    """One row per (prompt, response) sample — standard (non-SPA) layout.
+
+    When every group carries rollout-captured ``response_logprobs``, they are
+    scattered onto the label positions (the position predicting r[j] gets
+    log p(r[j])) and the micro-batch gains ``logp_behavior`` — the trainer
+    then skips the old-policy recompute (DESIGN.md §Tri-model-capture)."""
     rows_t, rows_y, rows_p, rows_s, rows_w, rows_a = [], [], [], [], [], []
+    rows_lb = []
+    capture = all(g.response_logprobs is not None for g in groups)
     S = max_prompt_len + max_response_len
     for g, adv in zip(groups, advantages):
         p = _np(g.prompt_ids)[:max_prompt_len]
@@ -62,12 +74,18 @@ def pack_plain(groups: Sequence[RolloutGroup], advantages: Sequence[np.ndarray],
             a = np.full((S,), float(adv[j]), np.float32)
             rows_t.append(toks); rows_y.append(labels); rows_p.append(pos)
             rows_s.append(seg); rows_w.append(w); rows_a.append(a)
+            if capture:
+                lb = np.zeros((S,), np.float32)
+                lb[Lp - 1: Lp + lr - 1] = \
+                    _np(g.response_logprobs)[j, :lr]  # same positions as w
+                rows_lb.append(lb)
     n = len(rows_t)
     return MicroBatch(
         tokens=np.stack(rows_t), labels=np.stack(rows_y),
         positions=np.stack(rows_p), segments=np.stack(rows_s),
         loss_mask=np.stack(rows_w), advantages=np.stack(rows_a),
         n_samples=np.float32(n),
+        logp_behavior=np.stack(rows_lb) if capture else None,
     )
 
 
@@ -88,12 +106,13 @@ def pack_spa(group: RolloutGroup, advantages: np.ndarray,
     p = _np(group.prompt_ids)[:max_prompt_len]
     Lp = len(p)
     G = group.response_ids.shape[0]
+    capture = group.response_logprobs is not None
     up = lambda n: n if align <= 0 else -(-n // align) * align
     prompt_block = up(Lp - 1)
     stride = up(1 + max_response_len)
     S = prompt_block + K * stride
     n_rows = math.ceil(G / K)
-    rows = dict(t=[], y=[], pos=[], seg=[], w=[], a=[])
+    rows = dict(t=[], y=[], pos=[], seg=[], w=[], a=[], lb=[])
     n_samples = 0
     PAD_POS = 2 ** 30 - 1
     for row_i in range(n_rows):
@@ -103,6 +122,7 @@ def pack_spa(group: RolloutGroup, advantages: np.ndarray,
         seg = np.full((S,), -1, np.int32)
         w = np.zeros((S,), np.float32)
         a = np.zeros((S,), np.float32)
+        lb = np.zeros((S,), np.float32)
         toks[:Lp - 1] = p[:-1]
         pos[:Lp - 1] = np.arange(Lp - 1)
         seg[:Lp - 1] = 0
@@ -121,15 +141,19 @@ def pack_spa(group: RolloutGroup, advantages: np.ndarray,
             labels[off: off + lr] = r                # predict r[0..lr-1]
             w[off: off + lr] = 1.0 / lr
             a[off: off + 1 + lr] = float(advantages[j])
+            if capture:                              # same positions as w
+                lb[off: off + lr] = _np(group.response_logprobs)[j, :lr]
             n_samples += 1
             off += stride                            # fixed stride per slot
         rows["t"].append(toks); rows["y"].append(labels); rows["pos"].append(pos)
         rows["seg"].append(seg); rows["w"].append(w); rows["a"].append(a)
+        rows["lb"].append(lb)
     return MicroBatch(
         tokens=np.stack(rows["t"]), labels=np.stack(rows["y"]),
         positions=np.stack(rows["pos"]), segments=np.stack(rows["seg"]),
         loss_mask=np.stack(rows["w"]), advantages=np.stack(rows["a"]),
         n_samples=np.float32(n_samples),
+        logp_behavior=np.stack(rows["lb"]) if capture else None,
     )
 
 

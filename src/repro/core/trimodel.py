@@ -2,9 +2,14 @@
 
 Policy, old-policy and reference parameters share one layout (identical
 pytrees, identical shardings). ``refresh_old`` implements Algorithm 1
-line 10 — the current policy weights move to the old policy *before* the
-optimizer update is applied, so the old policy always reflects the
-distribution that generated the current batch's rollouts.
+line 10; the scheduler invokes it at the ITERATION BOUNDARY — right after
+syncing the (pre-update) policy weights to the rollout pool and before any
+grad step — so during iteration t the old policy holds exactly the weights
+generating (strict modes: and consumed with) iteration t's rollouts.
+Proposition 1's "rollout weights == old-policy weights at consumption" is
+then an identity the tri-model enforces, not just asserts; refreshing at
+iteration END instead would leave old one optimizer step stale while
+iteration t trains (see DESIGN.md §Tri-model-capture).
 """
 from __future__ import annotations
 
@@ -31,7 +36,8 @@ class TriModelState:
                    opt=adam_init(params), version=0)
 
     def refresh_old(self) -> None:
-        """Algorithm 1 line 10: old <- policy (pre-update)."""
+        """Algorithm 1 line 10: old <- policy (pre-update). Called at the
+        iteration boundary, after the pool weight sync (see module doc)."""
         self.old = self.policy
 
     def apply_update(self, new_params, new_opt) -> None:

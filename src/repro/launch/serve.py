@@ -30,7 +30,9 @@ def serve_batch(cfg, prompts, *, max_prompt_len: int, max_new: int,
                 temperature: float = 0.7, seed: int = 0):
     """Serve a batch of requests; returns (responses, stats)."""
     params = init(jax.random.PRNGKey(seed), cfg)
-    sampler = Sampler(cfg, max_prompt_len, max_new, temperature=temperature)
+    # serving has no trainer consuming behavior logprobs — skip capture
+    sampler = Sampler(cfg, max_prompt_len, max_new, temperature=temperature,
+                      capture_logprobs=False)
     t0 = time.time()
     out = sampler.generate(params, prompts, jax.random.PRNGKey(seed + 1))
     jax.block_until_ready(out.response_ids)
@@ -57,7 +59,8 @@ def serve_paged(cfg, prompts, *, max_prompt_len: int, max_new: int,
     eng = PagedGroupEngine(cfg, num_slots=num_slots, page_size=page_size,
                            num_pages=pages, max_prompt_len=max_prompt_len,
                            max_new_tokens=max_new, group_size=1,
-                           temperature=temperature)
+                           temperature=temperature,
+                           capture_logprobs=False)   # serving: no consumer
     t0 = time.time()
     done = eng.serve(params, prompts, jax.random.PRNGKey(seed + 1))
     wall = time.time() - t0

@@ -47,7 +47,8 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
     sampler = None
     if scripted_fn is None:
         sampler = Sampler(cfg, rl.max_prompt_len, rl.max_response_len,
-                          temperature=rl.temperature, top_p=rl.top_p)
+                          temperature=rl.temperature, top_p=rl.top_p,
+                          capture_logprobs=rl.capture_logprobs)
 
     def paged_engine():
         if rl.rollout_engine != "paged" or scripted_fn is not None:
@@ -62,7 +63,8 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
             cfg, num_slots=rl.cbatch_slots, page_size=rl.kv_page_size,
             num_pages=rl.kv_pages, max_prompt_len=rl.max_prompt_len,
             max_new_tokens=rl.max_response_len, group_size=rl.group_size,
-            temperature=rl.temperature, top_p=rl.top_p)
+            temperature=rl.temperature, top_p=rl.top_p,
+            capture_logprobs=rl.capture_logprobs)
 
     instances = [InferenceInstance(i, cfg, sampler, latency_fn=latency_fn,
                                    scripted_fn=scripted_fn,
@@ -98,6 +100,11 @@ def main() -> None:
     ap.add_argument("--max-prompt-len", type=int, default=48)
     ap.add_argument("--max-response-len", type=int, default=16)
     ap.add_argument("--prompt-pad", type=int, default=0)
+    ap.add_argument("--no-capture-logprobs", action="store_true",
+                    help="disable rollout-time logprob capture — the trainer "
+                         "recomputes old-policy logprobs via the stacked "
+                         "old+ref tri-model forward (DESIGN.md "
+                         "§Tri-model-capture)")
     ap.add_argument("--spa", action="store_true",
                     help="enable shared-prompt attention packing")
     ap.add_argument("--spa-align", type=int, default=0,
@@ -123,7 +130,8 @@ def main() -> None:
         max_response_len=args.max_response_len,
         shared_prompt_attention=args.spa, spa_align=args.spa_align,
         rollout_engine=args.rollout_engine, cbatch_slots=args.cbatch_slots,
-        kv_page_size=args.kv_page_size, seed=args.seed)
+        kv_page_size=args.kv_page_size,
+        capture_logprobs=not args.no_capture_logprobs, seed=args.seed)
 
     from repro.sharding.specs import set_profile
     set_profile(args.profile)

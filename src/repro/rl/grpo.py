@@ -13,7 +13,7 @@ Loss (PPO-clip + k3 KL penalty, paper Eq. 1 / Table 8):
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,17 @@ class MicroBatch(NamedTuple):
     advantages: jax.Array    # (m, S) f32 — group-normalised, broadcast per token
     n_samples: jax.Array = 1.0  # scalar f32 — number of packed samples
     extras: dict = {}        # modality-frontend stubs: vision_embeds / enc_embeds
+    # (m, S) f32 rollout-captured behavior logprobs scattered onto label
+    # positions (0 elsewhere), or None when the rollouts carried no capture
+    # — see DESIGN.md §Tri-model-capture. Under Proposition 1 these ARE the
+    # old-policy logprobs, so the grad step can skip the old recompute.
+    logp_behavior: Optional[jax.Array] = None
+
+
+def jaxify(mb: MicroBatch) -> MicroBatch:
+    """Host-packed (numpy) micro-batch -> device arrays; ``None`` fields
+    (absent captured logprobs) and empty extras pass through untouched."""
+    return jax.tree.map(jnp.asarray, mb)
 
 
 def group_advantages(rewards: jax.Array, eps: float = 1e-4) -> jax.Array:
@@ -104,6 +115,34 @@ def make_grad_step(cfg: ModelConfig, rl: RLConfig):
         (loss, metrics), grads = jax.value_and_grad(
             grpo_loss, has_aux=True)(policy_params, cfg, rl, mb,
                                      logp_old, logp_ref)
+        return grads, metrics
+
+    return grad_step
+
+
+def make_grad_step_captured(cfg: ModelConfig, rl: RLConfig):
+    """Capture-path grad step (DESIGN.md §Tri-model-capture): the ratio's
+    denominator is ``mb.logp_behavior`` — the logprobs the inference engine
+    evaluated while sampling — so the no-grad pass shrinks from the stacked
+    old+ref vmap to a SINGLE reference forward (~1/3 of the tri-model's
+    training forward FLOPs deleted). Same signature as ``make_grad_step``
+    so the scheduler can dispatch per micro-batch; ``old_params`` is
+    accepted and unused. In strict on-policy modes the captured values
+    equal the old-policy recompute up to fp reduction order; in
+    ``async_offpolicy`` they are evaluated under the BEHAVIOR weights
+    (the weights that actually sampled the rollout) rather than the
+    current old weights, removing the old~behavior weights approximation.
+    Both paths use raw-distribution logprobs — rollout temperature/top-p
+    filtering sits outside the ratio convention either way."""
+
+    @jax.jit
+    def grad_step(policy_params, old_params, ref_params, mb: MicroBatch):
+        del old_params                   # behavior logprobs ride the batch
+        logp_ref, _ = _model_logprobs(ref_params, cfg, mb)
+        logp_ref = jax.lax.stop_gradient(logp_ref)
+        (loss, metrics), grads = jax.value_and_grad(
+            grpo_loss, has_aux=True)(policy_params, cfg, rl, mb,
+                                     mb.logp_behavior, logp_ref)
         return grads, metrics
 
     return grad_step

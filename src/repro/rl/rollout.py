@@ -6,7 +6,7 @@ rows share the cache write index while keeping true per-row positions.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +21,11 @@ from repro.models.layers import lm_head_weight
 class RolloutBatch(NamedTuple):
     response_ids: jax.Array   # (B, max_new) int32, PAD after EOS
     response_len: jax.Array   # (B,) int32 (includes the EOS token)
+    # (B, max_new) f32 log p(sampled id | context) under the UNFILTERED
+    # model distribution (no temperature / top-p), captured from the logits
+    # already in hand at each decode step; 0 past response_len. None when
+    # capture is disabled (DESIGN.md §Tri-model-capture).
+    response_logprobs: Optional[jax.Array] = None
 
 
 def _filter_logits(logits, temperature: float, top_p: float):
@@ -42,6 +47,16 @@ def _sample_token(key, logits, temperature: float, top_p: float):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = _filter_logits(logits, temperature, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sampled_token_logprob(logits, tok):
+    """log p(tok) under the RAW next-token distribution (no temperature /
+    top-p filtering) — exactly the per-token quantity the trainer's
+    old-policy forward recomputes via ``models.token_logprobs``, captured
+    here for free while the step's logits are in hand
+    (DESIGN.md §Tri-model-capture). logits: (B, V); tok: (B,) int32."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
 
 
 def _sample_token_rows(keys, logits, rows, group_size: int,
@@ -92,7 +107,7 @@ class Sampler:
     def __init__(self, cfg: ModelConfig, max_prompt_len: int,
                  max_new_tokens: int, temperature: float = 1.0,
                  top_p: float = 1.0, eos_id: int = Tokenizer.EOS,
-                 pad_id: int = Tokenizer.PAD):
+                 pad_id: int = Tokenizer.PAD, capture_logprobs: bool = True):
         self.cfg = cfg
         self.max_prompt_len = max_prompt_len
         self.max_new_tokens = max_new_tokens
@@ -100,6 +115,7 @@ class Sampler:
         self.top_p = top_p
         self.eos_id = eos_id
         self.pad_id = pad_id
+        self.capture_logprobs = capture_logprobs
         self._gen = jax.jit(self._generate)
 
     # -- host-side helpers ---------------------------------------------------
@@ -145,7 +161,11 @@ class Sampler:
             key, k_s = jax.random.split(key)
             tok = _sample_token(k_s, logits, self.temperature, self.top_p)
             tok = jnp.where(done, self.pad_id, tok)
-            emit = tok
+            if self.capture_logprobs:
+                lp = jnp.where(done, 0.0, sampled_token_logprob(logits, tok))
+                emit = (tok, lp)
+            else:
+                emit = tok
             done_next = done | (tok == self.eos_id)
             h, caches, _, _ = forward_hidden(
                 params, cfg, tok[:, None],
@@ -156,11 +176,17 @@ class Sampler:
             return (caches, logits_next, done_next, pos + 1, key), emit
 
         init = (caches, logits0, jnp.zeros((B,), bool), prompt_lens, key)
-        _, toks = jax.lax.scan(step, init, jnp.arange(T, dtype=jnp.int32))
+        _, emitted = jax.lax.scan(step, init, jnp.arange(T, dtype=jnp.int32))
+        if self.capture_logprobs:
+            toks, lps = emitted
+            lps = jnp.moveaxis(lps, 0, 1)                         # (B, T)
+        else:
+            toks, lps = emitted, None
         toks = jnp.moveaxis(toks, 0, 1)                           # (B, T)
         # response length = index of first EOS + 1, else T
         is_eos = toks == self.eos_id
         has_eos = is_eos.any(axis=1)
         first_eos = jnp.argmax(is_eos, axis=1)
         lens = jnp.where(has_eos, first_eos + 1, T).astype(jnp.int32)
-        return RolloutBatch(response_ids=toks, response_len=lens)
+        return RolloutBatch(response_ids=toks, response_len=lens,
+                            response_logprobs=lps)

@@ -10,7 +10,7 @@ from repro.configs.base import RLConfig
 from repro.core.queue import RolloutGroup
 from repro.core.spa import pack_plain, pack_spa, spa_reduction_ratio
 from repro.models import init
-from repro.rl.grpo import MicroBatch, make_grad_step, group_advantages
+from repro.rl.grpo import jaxify, make_grad_step, group_advantages
 
 
 def _group(key, G=4, Lp=12, Lr=(5, 8, 3, 8)):
@@ -69,13 +69,9 @@ def test_spa_gradient_equivalence(setup):
     grad_step = make_grad_step(cfg, rl)
 
     mb_plain = pack_plain([g], [adv], 16, 8)
-    grads_plain, m_plain = grad_step(params, params, params,
-                                     MicroBatch(*map(jnp.asarray, mb_plain[:-2]),
-                                                n_samples=mb_plain.n_samples))
+    grads_plain, m_plain = grad_step(params, params, params, jaxify(mb_plain))
     mb_spa = pack_spa(g, adv, 16, 8, responses_per_row=4)
-    grads_spa, m_spa = grad_step(params, params, params,
-                                 MicroBatch(*map(jnp.asarray, mb_spa[:-2]),
-                                            n_samples=mb_spa.n_samples))
+    grads_spa, m_spa = grad_step(params, params, params, jaxify(mb_spa))
     flat_p = jax.tree.leaves(grads_plain)
     flat_s = jax.tree.leaves(grads_spa)
     for a, b in zip(flat_p, flat_s):
@@ -132,9 +128,7 @@ def test_spa_align_gradient_equivalence(setup):
     grad_step = make_grad_step(cfg, rl)
 
     def grads_of(mb):
-        gr, _ = grad_step(params, params, params,
-                          MicroBatch(*map(jnp.asarray, mb[:-2]),
-                                     n_samples=mb.n_samples))
+        gr, _ = grad_step(params, params, params, jaxify(mb))
         return gr
 
     g_plain = grads_of(pack_spa(g, adv, 16, 8, responses_per_row=4))
