@@ -98,21 +98,35 @@ def pool_mode(n_groups: int = 6, group_size: int = 4, workers: int = 4
               ) -> dict:
     """Pool-level decode throughput: the same concurrent group workload
     through the group-at-a-time instance and the paged token-level
-    instance. Outputs are asserted token-identical, so the tokens/sec
-    numbers compare engines, not sampling luck."""
+    instance, across the CacheBackend families the paged pool serves
+    (DESIGN.md §Cache-backends) — GQA K/V pages, MLA latent pages, and a
+    sliding-window config with out-of-window page reclamation. Outputs are
+    asserted token-identical per variant, so the tokens/sec numbers compare
+    engines, not sampling luck; page accounting (per-token cache bytes,
+    peak resident pages, reclaimed pages) rides alongside."""
+    import dataclasses
+
     from repro.core.engine import InferenceInstance
     from repro.core.paged import PagedGroupEngine
+    from repro.models.attention import cache_streams
 
-    cfg = reduced_config(get_config("llama3.2-3b"))
-    params = init(jax.random.PRNGKey(0), cfg)
-    prompts = _prompts(n_groups, seed=5)
-    keys = jax.random.split(jax.random.PRNGKey(3), n_groups)
-    # decode-throughput comparison: capture off on BOTH engines so the
-    # numbers match the serving regime (the RL pipeline captures on both)
-    sampler = Sampler(cfg, LP, T, temperature=1.0, eos_id=EOS,
-                      capture_logprobs=False)
+    # The MLA variant benchmarks LATENT paging, so the MoE half of
+    # deepseek-v2 is disabled: near-boundary expert-routing flips under
+    # different prefill batch shapes amplify fp noise into O(0.1) logit
+    # shifts (DESIGN.md §Continuous-batching caveat), which would make the
+    # token-identity assertion below measure router tie luck, not engines.
+    mla_dense = dataclasses.replace(
+        reduced_config(get_config("deepseek-v2-lite-16b")),
+        num_experts=0, num_experts_per_tok=0, num_shared_experts=0,
+        first_k_dense=0, dense_d_ff=0, moe_d_ff=0)
+    variants = {
+        "gqa": reduced_config(get_config("llama3.2-3b")),
+        "mla": mla_dense,
+        "swa": dataclasses.replace(reduced_config(get_config("llama3.2-3b")),
+                                   sliding_window=8),
+    }
 
-    def drive(inst):
+    def drive(inst, prompts, keys):
         """Submit every group from worker threads, generator-style."""
         results = [None] * n_groups
         lock = threading.Lock()
@@ -137,46 +151,83 @@ def pool_mode(n_groups: int = 6, group_size: int = 4, workers: int = 4
         toks = sum(int(np.asarray(r.response_len).sum()) for r in results)
         return results, wall, toks
 
-    def make_paged():
-        eng = PagedGroupEngine(
-            cfg, num_slots=2 * group_size, page_size=8, num_pages=0,
-            max_prompt_len=LP, max_new_tokens=T, group_size=group_size,
-            temperature=1.0, eos_id=EOS, capture_logprobs=False)
-        inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
-        inst.sync_weights(params, 0)
-        return inst, eng
-
-    def make_group():
-        inst = InferenceInstance(0, cfg, sampler)
-        inst.sync_weights(params, 0)
-        return inst, None
-
     out = {}
-    results = {}
-    for name, make in (("group", make_group), ("paged", make_paged)):
-        inst, eng = make()
-        drive(inst)                                   # jit warmup pass
-        if eng is not None:
-            eng.reset_stats()
-        inst.busy_time = 0.0
-        res, wall, toks = drive(inst)
-        results[name] = res
-        out[f"pool_{name}_wall"] = wall
-        out[f"pool_{name}_tokens"] = toks
-        out[f"pool_{name}_tok_s"] = toks / wall
-        extra = (f"{eng.decode_steps} decode steps (<= {2 * group_size} "
-                 f"wide), busy {inst.busy_time:.2f}s"
-                 if eng is not None else
-                 f"{n_groups * T} scan steps ({group_size} wide), "
-                 f"busy {inst.busy_time:.2f}s")
-        emit("table6", f"pool_{name}_decode_tok_s", f"{toks / wall:.1f}",
-             f"{n_groups} groups x{group_size}, {wall:.2f}s wall — {extra}")
-    for a, b in zip(results["group"], results["paged"]):
-        np.testing.assert_array_equal(np.asarray(a.response_ids),
-                                      np.asarray(b.response_ids))
-    emit("table6", "pool_paged_speedup",
-         f"{out['pool_paged_tok_s'] / out['pool_group_tok_s']:.2f}x",
-         "token-identical output (verified)")
+    for vname, cfg in variants.items():
+        params = init(jax.random.PRNGKey(0), cfg)
+        prompts = _prompts(n_groups, seed=5)
+        keys = jax.random.split(jax.random.PRNGKey(3), n_groups)
+        # decode-throughput comparison: capture off on BOTH engines so the
+        # numbers match the serving regime (the RL pipeline captures on both)
+        sampler = Sampler(cfg, LP, T, temperature=1.0, eos_id=EOS,
+                          capture_logprobs=False)
+        # per-token cache footprint: what one page slot stores per layer
+        tok_vals = sum(int(np.prod(shp)) for _, shp in cache_streams(cfg))
+        out[f"{vname}_cache_bytes_per_token"] = 4 * tok_vals   # f32 reduced
+
+        def make_paged():
+            eng = PagedGroupEngine(
+                cfg, num_slots=2 * group_size, page_size=8, num_pages=0,
+                max_prompt_len=LP, max_new_tokens=T, group_size=group_size,
+                temperature=1.0, eos_id=EOS, capture_logprobs=False)
+            inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
+            inst.sync_weights(params, 0)
+            return inst, eng
+
+        def make_group():
+            inst = InferenceInstance(0, cfg, sampler)
+            inst.sync_weights(params, 0)
+            return inst, None
+
+        results = {}
+        for name, make in (("group", make_group), ("paged", make_paged)):
+            inst, eng = make()
+            drive(inst, prompts, keys)                # jit warmup pass
+            if eng is not None:
+                eng.reset_stats()
+            inst.busy_time = 0.0
+            res, wall, toks = drive(inst, prompts, keys)
+            results[name] = res
+            out[f"{vname}_pool_{name}_wall"] = wall
+            out[f"{vname}_pool_{name}_tokens"] = toks
+            out[f"{vname}_pool_{name}_tok_s"] = toks / wall
+            if eng is not None:
+                out[f"{vname}_pool_peak_pages"] = eng.peak_pages_used
+                out[f"{vname}_pool_reclaimed_pages"] = eng.reclaimed_pages
+                extra = (f"{eng.decode_steps} decode steps "
+                         f"(<= {2 * group_size} wide), peak "
+                         f"{eng.peak_pages_used} pages, "
+                         f"{eng.reclaimed_pages} reclaimed, "
+                         f"busy {inst.busy_time:.2f}s")
+            else:
+                extra = (f"{n_groups * T} scan steps ({group_size} wide), "
+                         f"busy {inst.busy_time:.2f}s")
+            emit("table6", f"{vname}_pool_{name}_decode_tok_s",
+                 f"{toks / wall:.1f}",
+                 f"{n_groups} groups x{group_size}, {wall:.2f}s wall — "
+                 f"{extra}")
+        for a, b in zip(results["group"], results["paged"]):
+            np.testing.assert_array_equal(np.asarray(a.response_ids),
+                                          np.asarray(b.response_ids))
+        emit("table6", f"{vname}_pool_paged_speedup",
+             f"{out[f'{vname}_pool_paged_tok_s'] / out[f'{vname}_pool_group_tok_s']:.2f}x",
+             "token-identical output (verified)")
+
+    # the MLA latent-page win: latent rows vs the per-head K/V the expanded
+    # path would cache (H * (nd + rd) keys + H * vd values per token)
+    mla = variants["mla"]
+    expanded = mla.num_heads * (mla.qk_nope_head_dim + mla.qk_rope_head_dim
+                                + mla.v_head_dim)
+    latent = mla.kv_lora_rank + mla.qk_rope_head_dim
+    out["mla_latent_compression"] = expanded / latent
+    emit("table6", "mla_latent_page_compression",
+         f"{expanded / latent:.1f}x",
+         f"{latent} latent values/token vs {expanded} expanded per-head")
+    if variants["swa"].sliding_window:
+        emit("table6", "swa_reclaimed_pages",
+             out["swa_pool_reclaimed_pages"],
+             f"window {variants['swa'].sliding_window}: out-of-window pages "
+             f"returned to the freelist mid-decode "
+             f"(peak {out['swa_pool_peak_pages']} resident)")
     save("table6_pool", out)
     return out
 

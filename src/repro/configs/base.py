@@ -181,6 +181,60 @@ class ModelConfig:
         return int(full - all_experts + active)
 
 
+# ---------------------------------------------------------------------
+# Engine x family validation matrix (DESIGN.md §Known-issues, README
+# support matrix). Every decode-engine construction site consults this
+# instead of hand-rolling family asserts, so the exclusion list lives in
+# exactly one place and each remaining exclusion is architectural.
+# ---------------------------------------------------------------------
+
+ROLLOUT_ENGINES = ("group", "cbatch", "paged")
+
+
+def engine_support(cfg: ModelConfig, engine: str) -> Tuple[bool, str]:
+    """(supported, reason) for running ``cfg`` on a decode engine:
+
+    * ``group``  — the group-at-a-time Sampler (reference semantics);
+    * ``cbatch`` — the dense-slot continuous-batching engine;
+    * ``paged``  — the token-level paged pool (GQA K/V pages or MLA
+      latent pages; sliding-window configs reclaim out-of-window pages).
+    """
+    if engine not in ROLLOUT_ENGINES:
+        raise KeyError(f"unknown engine {engine!r}; known: {ROLLOUT_ENGINES}")
+    if engine == "group":
+        return True, "reference decode path for every family"
+    if cfg.is_encoder_decoder:
+        return False, ("decoder context is bounded (max_target_positions) "
+                       "and decode is dominated by cross-attention over a "
+                       "fixed encoder memory — served via the group path")
+    if cfg.vision_prefix_len:
+        return False, ("the vision prefix is a per-request dense prefix "
+                       "embedding, not token KV — served via the group path")
+    if engine == "cbatch":
+        return True, "fixed slot pool over one contiguous cache"
+    # paged
+    if cfg.family == "ssm" or cfg.hybrid:
+        return False, ("O(1) recurrent state: there is no per-token KV to "
+                       "page; prefix-state sharing (core/prefix.py) is the "
+                       "prompt-sharing analogue")
+    kind = "MLA latent (ckv, kr) rows" if cfg.use_mla else "per-head K/V rows"
+    win = ("; out-of-window pages are reclaimed to the freelist"
+           if cfg.sliding_window is not None else "")
+    return True, f"pages hold {kind}{win}"
+
+
+def engine_support_matrix(cfg: ModelConfig) -> dict:
+    """{engine: (supported, reason)} for one config."""
+    return {e: engine_support(cfg, e) for e in ROLLOUT_ENGINES}
+
+
+def require_engine_support(cfg: ModelConfig, engine: str) -> None:
+    ok, reason = engine_support(cfg, engine)
+    if not ok:
+        raise ValueError(f"{cfg.name}: rollout engine {engine!r} is not "
+                         f"applicable — {reason} (DESIGN.md §Known-issues)")
+
+
 @dataclasses.dataclass(frozen=True)
 class InputShape:
     name: str

@@ -116,8 +116,8 @@ class ContinuousBatchingSampler:
                  max_prompt_len: int, max_new_tokens: int,
                  temperature: float = 1.0, top_p: float = 1.0,
                  eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD):
-        assert not cfg.is_encoder_decoder and not cfg.vision_prefix_len, \
-            "continuous batching engine targets decoder-only LMs"
+        from repro.configs.base import require_engine_support
+        require_engine_support(cfg, "cbatch")
         self.cfg = cfg
         self.B = num_slots
         self.Lp = max_prompt_len

@@ -1,5 +1,5 @@
 """Token-level paged continuous-batching decode engine for the rollout pool
-(DESIGN.md §Continuous-batching).
+(DESIGN.md §Continuous-batching, §Cache-backends).
 
 The group-at-a-time path (``rl/rollout.py``) decodes ``max_new`` steps for
 every row of every group and serialises whole groups per instance; this
@@ -7,16 +7,30 @@ engine decodes ONE token per step for a pool of slots that mixes rows from
 many GRPO groups, admitting pending rows the step a slot frees (the
 admission/eviction policy is ``core/cbatch.py``'s ``SlotScheduler``).
 
-The KV cache is paged (``models/attention.py make_paged_kv_cache``):
+The KV cache is paged (``models/attention.py PagedCacheBackend``):
 
   * one physical page pool per layer, stitched into logical sequences by a
     per-slot page table — vLLM's block table, JAX-native with fixed shapes;
+  * pages hold whatever the family caches per token (``cache_streams``):
+    per-head K/V rows for GQA, compressed ``(ckv, kr)`` latent rows for MLA
+    — absorbed MLA decode gathers latent pages directly;
   * a GRPO group's K rows list the SAME prompt pages, so the shared prompt
     is stored once per group — the cache-level extension of SPA
     (``core/spa.py``), which shares the prompt's *compute* in training while
     this shares its *memory* (and prefill compute) in inference;
   * pages are refcounted: response pages free when their row completes,
-    prompt pages when the whole group has (eviction = completion).
+    prompt pages when the whole group has (eviction = completion);
+  * response pages are allocated LAZILY, one page ahead of the write
+    cursor, against a per-row page *credit* reserved at admission — the
+    admission gate reads ``free - outstanding_credit``, so a row that is
+    admitted can always take its next page (no mid-decode stall, no
+    deadlock);
+  * sliding-window configs RECLAIM out-of-window pages: once every live
+    query position of a row has slid past a page's last token
+    (``q_pos - last_pos >= window``) the page leaves the row's table and
+    its reference returns to the freelist (refcount-aware for shared
+    prompt pages — a page another row still sees stays resident). A 500k
+    decode therefore occupies O(window) pages per row, not O(context).
 
 Sampling is token-identical to the group-at-a-time ``Sampler`` under the
 same PRNG key — greedy and sampled (``rl/rollout.py stepwise_keys`` +
@@ -27,19 +41,19 @@ slots write into.
 from __future__ import annotations
 
 import dataclasses
-import math
 import threading
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, require_engine_support
 from repro.core.cbatch import Completed, SlotScheduler
 from repro.data.tokenizer import Tokenizer
 from repro.models import forward_hidden, init_caches, init_paged_caches
-from repro.models.attention import INVALID_POS
+from repro.models.attention import INVALID_POS, cache_streams
 from repro.models.layers import lm_head_weight
 from repro.rl.rollout import (RolloutBatch, _sample_token_rows,
                               sampled_token_logprob, stepwise_keys)
@@ -53,12 +67,14 @@ class PageAllocator:
     """Host-side freelist + refcounts over the physical page pool.
 
     Prompt pages are allocated with refcount G (one per group row) and
-    release once per completed row; response pages are single-owner."""
+    release once per row (at completion, or earlier when the row's window
+    slides past the page); response pages are single-owner."""
 
     def __init__(self, num_pages: int):
         assert num_pages > FIRST_PAGE, "page pool smaller than its reserves"
         self._free = list(range(num_pages - 1, FIRST_PAGE - 1, -1))
         self._ref: Dict[int, int] = {}
+        self.min_free = len(self._free)      # high-water occupancy marker
 
     @property
     def num_free(self) -> int:
@@ -70,14 +86,21 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._ref[p] = refcount
+        self.min_free = min(self.min_free, len(self._free))
         return pages
 
-    def release(self, pages: List[int]) -> None:
+    def release(self, pages: List[int]) -> int:
+        """Drop one reference per page; returns how many pages actually
+        went back to the freelist (a shared prompt page frees only when
+        its last reference drops)."""
+        freed = 0
         for p in pages:
             self._ref[p] -= 1
             if self._ref[p] == 0:
                 del self._ref[p]
                 self._free.append(p)
+                freed += 1
+        return freed
 
 
 @dataclasses.dataclass
@@ -87,7 +110,8 @@ class _Group:
     G: int
     keys: np.ndarray                 # (max_new, 2) uint32 step keys
     max_new: int
-    prompt_pages: Optional[List[int]] = None
+    prompt_pages: Optional[List[int]] = None    # LIVE pages (window-visible)
+    prompt_last: Optional[List[int]] = None     # last token pos per live page
     prompt_logits: Optional[jax.Array] = None   # (V,) f32 last-prompt logits
     done_rows: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     done_lps: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
@@ -100,7 +124,10 @@ class _Row:
     idx: int                         # row index within the group (PRNG row)
     toks: list = dataclasses.field(default_factory=list)
     lps: list = dataclasses.field(default_factory=list)
-    pages: Optional[List[int]] = None
+    pages: list = dataclasses.field(default_factory=list)  # resp page k -> id
+    credit: int = 0                  # future page allocations reserved
+    # live pages in logical order: (last_pos, table_idx, page_id, is_prompt)
+    live: deque = dataclasses.field(default_factory=deque)
 
 
 class GroupHandle:
@@ -121,7 +148,7 @@ class GroupHandle:
 
 
 class PagedGroupEngine:
-    """Continuous-batching decode over a shared paged KV pool.
+    """Continuous-batching decode over a shared paged KV/latent pool.
 
     Thread-safe: ``submit`` registers a group's rows; any thread may drive
     ``step`` (the inference-instance convoy in ``core/engine.py`` does), so
@@ -135,21 +162,16 @@ class PagedGroupEngine:
         if num_slots < 1 or page_size < 1:
             raise ValueError(f"paged engine needs num_slots >= 1 and "
                              f"page_size >= 1, got {num_slots}/{page_size}")
-        # fail at construction, not first weight sync (same rule
-        # init_paged_caches enforces)
-        assert cfg.family in ("dense", "moe") and not cfg.use_mla \
-            and not cfg.is_encoder_decoder and not cfg.vision_prefix_len, \
-            f"{cfg.name}: paged engine targets decoder-only GQA families " \
-            "(see DESIGN.md §Arch-applicability)"
-        assert cfg.sliding_window is None, \
-            "paged engine does not reclaim windowed pages yet (DESIGN.md " \
-            "§Known-issues)"
+        # fail at construction, not first weight sync (same matrix
+        # init_paged_caches enforces — configs/base.py engine_support)
+        require_engine_support(cfg, "paged")
         self.cfg = cfg
         self.B = num_slots
         self.page = page_size
         self.Lp = max_prompt_len
         self.T = max_new_tokens
         self.G = group_size
+        self.window = cfg.sliding_window
         self.temperature = temperature
         self.top_p = top_p
         self.eos_id = eos_id
@@ -158,15 +180,18 @@ class PagedGroupEngine:
         self.n_prompt_pages = -(-max_prompt_len // page_size)
         self.n_resp_pages = -(-max_new_tokens // page_size)
         self.n_max = self.n_prompt_pages + self.n_resp_pages
+        j0_max, _ = self._prompt_page_range(max_prompt_len)
+        live_pp_max = self.n_prompt_pages - j0_max
         if num_pages == 0:      # auto-size: two full groups resident
-            num_pages = FIRST_PAGE + 2 * (self.n_prompt_pages
-                                          + group_size * self.n_resp_pages)
+            num_pages = FIRST_PAGE + 2 * (live_pp_max
+                                          + group_size
+                                          * self._row_budget(max_new_tokens))
         self.P = num_pages
-        if FIRST_PAGE + self.n_prompt_pages + self.n_resp_pages > num_pages:
+        if FIRST_PAGE + live_pp_max + 1 > num_pages:
             raise ValueError(
                 f"page pool too small: {num_pages} pages cannot hold one "
-                f"prompt ({self.n_prompt_pages}) + one response "
-                f"({self.n_resp_pages}) + {FIRST_PAGE} reserved")
+                f"max-length prompt ({live_pp_max} window-visible pages) + "
+                f"one response page + {FIRST_PAGE} reserved")
 
         self.params = None
         self.caches = None           # built lazily at first set_params
@@ -177,27 +202,58 @@ class PagedGroupEngine:
         self._mutex = threading.RLock()
         self._next_gid = 0
         self._handles: Dict[int, GroupHandle] = {}
+        self._outstanding = 0        # sum of row credits; free >= this always
         self.decode_steps = 0
         self.generated_tokens = 0
+        self.reclaimed_pages = 0
 
         self._prefill = jax.jit(self._prefill_group, donate_argnums=(1,))
         self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
         self._invalidate = jax.jit(self._invalidate_pages, donate_argnums=(0,))
 
+    # -- page geometry ------------------------------------------------------
+
+    def _n_total(self, max_new: int) -> int:
+        """Response pages a row writes over its whole decode."""
+        return -(-max_new // self.page)
+
+    def _row_budget(self, max_new: int) -> int:
+        """Worst-case SIMULTANEOUSLY-resident response pages for one row —
+        the page credit the admission gate reserves. Without a window every
+        written page stays (budget = all of them); with one, reclamation
+        each step bounds the live span to `window` positions, which straddle
+        at most window//page + 2 pages (+1 slack for the step's new page)."""
+        n = self._n_total(max_new)
+        if self.window is None:
+            return n
+        return min(n, self.window // self.page + 3)
+
+    def _prompt_page_range(self, plen: int):
+        """(j0, n_pp): prompt pages j0..n_pp-1 are window-visible to at
+        least the first response query (q_pos = plen); pages before j0 are
+        dead on arrival and never allocated."""
+        n_pp = -(-plen // self.page) if plen else 0
+        j0 = 0 if self.window is None else max(0, (plen - self.window)
+                                               // self.page)
+        return j0, n_pp
+
     # -- jitted cores -------------------------------------------------------
 
     def _prefill_group(self, params, caches, row, length, dest_pages):
         """Run the shared prompt ONCE (row: (1, Lp_pad) right-padded) and
-        splice its per-layer KV into the pool at ``dest_pages`` — one
-        physical prompt copy serves every row of the group. Returns
-        (caches, last-token logits (V,))."""
+        splice its per-layer cache streams into the pool at ``dest_pages``
+        — one physical prompt copy serves every row of the group. Returns
+        (caches, last-token logits (V,)). The temporary prefill cache is
+        full-length even for sliding-window configs (``ring=False``) so
+        every prompt token is addressable for the splice; dead out-of-window
+        pages land in the trash slot of ``dest_pages``."""
         cfg = self.cfg
         Lp_pad = self.n_prompt_pages * self.page
         ar = jnp.arange(Lp_pad, dtype=jnp.int32)[None, :]
         real = ar < length
         positions = jnp.where(real, ar, 0).astype(jnp.int32)
         segments = jnp.where(real, 0, -1).astype(jnp.int32)
-        tmp = init_caches(params, cfg, 1, Lp_pad)
+        tmp = init_caches(params, cfg, 1, Lp_pad, ring=False)
         h, tmp, _, _ = forward_hidden(params, cfg, row, positions=positions,
                                       segments=segments, caches=tmp,
                                       cache_offset=0)
@@ -209,19 +265,20 @@ class PagedGroupEngine:
         pos_write = jnp.where(real[0], ar[0], INVALID_POS).reshape(
             self.n_prompt_pages, self.page)
 
+        streams = cache_streams(cfg)
         new_caches = {}
         for grp in caches:           # "layers" (+ "prelude" for first-k-dense)
             pools, t = caches[grp]["kv"], tmp[grp]["kv"]
-            nL = pools["k_pages"].shape[0]
-            shp = (nL, self.n_prompt_pages, self.page) + t["k"].shape[-2:]
-            new_caches[grp] = {"kv": {
-                "k_pages": pools["k_pages"].at[:, dest_pages].set(
-                    t["k"][:, 0].reshape(shp)),
-                "v_pages": pools["v_pages"].at[:, dest_pages].set(
-                    t["v"][:, 0].reshape(shp)),
-                "pos_pages": pools["pos_pages"].at[:, dest_pages].set(
-                    jnp.broadcast_to(pos_write, (nL,) + pos_write.shape)),
-            }}
+            nL = pools["pos_pages"].shape[0]
+            new = {}
+            for name, shp in streams:
+                arr = t[name][:, 0]          # (nL, Lp_pad, *shp)
+                new[name + "_pages"] = pools[name + "_pages"].at[
+                    :, dest_pages].set(arr.reshape(
+                        (nL, self.n_prompt_pages, self.page) + shp))
+            new["pos_pages"] = pools["pos_pages"].at[:, dest_pages].set(
+                jnp.broadcast_to(pos_write, (nL,) + pos_write.shape))
+            new_caches[grp] = {"kv": new}
         return new_caches, logits
 
     def _decode_step(self, params, caches, logits, keys, rows, positions,
@@ -278,10 +335,22 @@ class PagedGroupEngine:
     def submit(self, prompt, key, *, max_new: Optional[int] = None
                ) -> GroupHandle:
         """Register one GRPO group (G rollouts of one prompt). Returns a
-        handle; drive ``step`` until it resolves."""
+        handle; drive ``step`` until it resolves. Raises immediately when
+        the group could never be admitted — a prompt whose window-visible
+        pages plus one row's page budget exceed what the pool can EVER free
+        would otherwise sit in the admission queue forever."""
         assert self.params is not None, "set_params before submit"
         p = np.asarray(prompt, np.int32)[-self.Lp:]   # Sampler keeps the tail
         max_new = self.T if max_new is None else min(max_new, self.T)
+        j0, n_pp = self._prompt_page_range(len(p))
+        need = (n_pp - j0) + self._row_budget(max_new)
+        avail = self.P - FIRST_PAGE
+        if need > avail:
+            raise ValueError(
+                f"group can never be admitted: prompt of {len(p)} tokens "
+                f"needs {n_pp - j0} pages + {self._row_budget(max_new)} "
+                f"response pages per row = {need}, but the pool only ever "
+                f"frees {avail} of its {self.P} pages")
         keys = np.asarray(stepwise_keys(key, max_new))
         with self._mutex:
             g = _Group(gid=self._next_gid, prompt=p, G=self.G, keys=keys,
@@ -298,46 +367,101 @@ class PagedGroupEngine:
         with self._mutex:
             return self.sched.idle
 
+    @property
+    def peak_pages_used(self) -> int:
+        """High-water physical page occupancy (excludes the reserves)."""
+        return (self.P - FIRST_PAGE) - self.alloc.min_free
+
     def reset_stats(self) -> None:
         self.decode_steps = 0
         self.generated_tokens = 0
+        self.reclaimed_pages = 0
+        self.alloc.min_free = self.alloc.num_free
 
     # -- engine step --------------------------------------------------------
 
     def _admission_gate(self, row: _Row) -> bool:
-        need = self.n_resp_pages
+        """The freelist must cover this row's worst-case resident pages ON
+        TOP of every admitted row's outstanding credit — credits make lazy
+        allocation deadlock-free (an admitted row can always take its next
+        page), so the gate reads free - outstanding, not raw free."""
+        need = self._row_budget(row.group.max_new)
         if row.group.prompt_pages is None:
-            need += -(-len(row.group.prompt) // self.page)
-        return self.alloc.num_free >= need
+            j0, n_pp = self._prompt_page_range(len(row.group.prompt))
+            need += n_pp - j0
+        return self.alloc.num_free - self._outstanding >= need
 
     def _admit_row(self, slot: int, row: _Row) -> None:
         g = row.group
         if g.prompt_pages is None:
-            n_pp = -(-len(g.prompt) // self.page)
-            g.prompt_pages = self.alloc.alloc(n_pp, refcount=g.G)
-            assert g.prompt_pages is not None, "admission gate let a row in "\
-                "without pages for its prompt"
+            j0, n_pp = self._prompt_page_range(len(g.prompt))
+            g.prompt_pages = self.alloc.alloc(n_pp - j0, refcount=g.G)
+            assert g.prompt_pages is not None, "admission gate let a row " \
+                "in without pages for its prompt"
+            g.prompt_last = [min((j + 1) * self.page, len(g.prompt)) - 1
+                             for j in range(j0, n_pp)]
             dest = np.full((self.n_prompt_pages,), TRASH_PAGE, np.int32)
-            dest[:n_pp] = g.prompt_pages
+            dest[j0:n_pp] = g.prompt_pages
             row_arr = np.full((1, self.n_prompt_pages * self.page),
                               self.pad_id, np.int32)
             row_arr[0, : len(g.prompt)] = g.prompt
             self.caches, g.prompt_logits = self._prefill(
                 self.params, self.caches, jnp.asarray(row_arr),
                 jnp.asarray([len(g.prompt)], jnp.int32), jnp.asarray(dest))
-        row.pages = self.alloc.alloc(self.n_resp_pages)
-        assert row.pages is not None, "admission gate let a row in without "\
-            "pages for its response"
-        self.caches = self._invalidate(self.caches,
-                                       jnp.asarray(row.pages, jnp.int32))
+        row.pages = []
+        row.credit = self._row_budget(g.max_new)
+        self._outstanding += row.credit
+        row.live = deque((last, i, pid, True) for i, (last, pid)
+                         in enumerate(zip(g.prompt_last, g.prompt_pages)))
         tab = np.zeros((self.n_max,), np.int32)        # NULL padding
         tab[: len(g.prompt_pages)] = g.prompt_pages
-        tab[len(g.prompt_pages): len(g.prompt_pages) + self.n_resp_pages] = \
-            row.pages
         self._ptab[slot] = tab
         self.logits = self.logits.at[slot].set(g.prompt_logits)
         row.toks = []
         row.lps = []
+
+    def _alloc_resp_page(self, slot: int, row: _Row, k: int) -> int:
+        """Lazily take response page k (the write cursor just crossed a
+        page boundary) out of the row's reserved credit; returns the page
+        id (the step batches all fresh pages into ONE invalidation call)."""
+        g = row.group
+        assert row.credit > 0, "page-credit invariant violated: row admitted "\
+            "without enough budget for its next page"
+        pages = self.alloc.alloc(1)
+        assert pages is not None, "freelist below outstanding credit"
+        row.credit -= 1
+        self._outstanding -= 1
+        pid = pages[0]
+        row.pages.append(pid)
+        ti = len(g.prompt_pages) + k
+        self._ptab[slot, ti] = pid
+        row.live.append((len(g.prompt) + (k + 1) * self.page - 1, ti, pid,
+                         False))
+        if len(row.pages) == self._n_total(g.max_new):
+            # last page this row will ever write: return unused credit
+            self._outstanding -= row.credit
+            row.credit = 0
+        return pid
+
+    def _reclaim_row(self, slot: int, row: _Row, q_pos: int) -> None:
+        """Sliding-window page reclamation: positions only grow, so once
+        ``q_pos - last_pos >= window`` no present or future query of this
+        row can see the page — drop it from the row's table and release the
+        row's reference (a prompt page shared with rows that can still see
+        it stays resident via its refcount)."""
+        w = self.window
+        n_total = self._n_total(row.group.max_new)
+        while row.live and q_pos - row.live[0][0] >= w:
+            _, ti, pid, is_prompt = row.live.popleft()
+            self._ptab[slot, ti] = NULL_PAGE
+            # count pages actually returned to the freelist — a shared
+            # prompt page frees once, not once per row that drops it
+            self.reclaimed_pages += self.alloc.release([pid])
+            if not is_prompt and len(row.pages) < n_total:
+                # the freed page re-arms this row's credit: resident +
+                # credit stays equal to the admission-time budget
+                row.credit += 1
+                self._outstanding += 1
 
     def _finish_row(self, slot: int, row: _Row, step: int) -> None:
         g = row.group
@@ -345,8 +469,11 @@ class PagedGroupEngine:
         if self.capture_logprobs:
             g.done_lps[row.idx] = np.asarray(row.lps, np.float32)
         g.finish_step = step
-        self.alloc.release(row.pages)
-        self.alloc.release(g.prompt_pages)             # refcount G -> 0
+        for _, _, pid, _ in row.live:   # resident resp pages + prompt refs
+            self.alloc.release([pid])
+        row.live.clear()
+        self._outstanding -= row.credit
+        row.credit = 0
         self.sched.evict(slot)
         self._ptab[slot] = 0
         if len(g.done_rows) == g.G:
@@ -386,15 +513,30 @@ class PagedGroupEngine:
             pos = np.full((B,), INVALID_POS, np.int32)
             wslot = np.full((B,), TRASH_PAGE * self.page, np.int32)
             active = np.zeros((B,), bool)
+            fresh = np.full((B,), TRASH_PAGE, np.int32)   # pages to wipe
+            n_fresh = 0
             for s in act:
                 row = self.sched.slot_req[s]
                 t = len(row.toks)
+                q_pos = len(row.group.prompt) + t
+                if self.window is not None:
+                    self._reclaim_row(s, row, q_pos)
+                k = t // self.page
+                if k == len(row.pages):       # crossed a page boundary
+                    fresh[n_fresh] = self._alloc_resp_page(s, row, k)
+                    n_fresh += 1
                 keys[s] = row.group.keys[t]
                 rows[s] = row.idx
-                pos[s] = len(row.group.prompt) + t
-                wslot[s] = (row.pages[t // self.page] * self.page
-                            + t % self.page)
+                pos[s] = q_pos
+                wslot[s] = row.pages[k] * self.page + t % self.page
                 active[s] = True
+            if n_fresh:
+                # one fixed-shape (B,) invalidation for every page freshly
+                # allocated this step (trash-page padding keeps the jit
+                # cache warm) — stale (pos, kv) from a previous occupant
+                # would otherwise pass the causal mask
+                self.caches = self._invalidate(self.caches,
+                                               jnp.asarray(fresh))
             tok, lp, self.caches, self.logits = self._decode(
                 self.params, self.caches, self.logits, jnp.asarray(keys),
                 jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(wslot),

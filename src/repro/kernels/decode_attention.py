@@ -131,3 +131,34 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, page_table, q_pos,
     return decode_attention(q, k, v, kv_pos, q_pos, scale=scale,
                             window=window, block_l=block_l,
                             interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_l", "interpret"))
+def paged_mla_decode_attention(q, ckv_pages, kr_pages, pos_pages, page_table,
+                               q_pos, *, scale: Optional[float] = None,
+                               window: Optional[int] = None,
+                               block_l: int = 256, interpret: bool = False):
+    """Flash decode over a paged MLA LATENT pool (DESIGN.md
+    §Cache-backends): pages hold compressed ``(ckv, kr)`` latent rows
+    instead of per-head K/V.
+
+    q: (B, H, r + rd) absorbed latent-space queries (w_uk folded in);
+    ckv_pages: (P, page, r); kr_pages: (P, page, rd); pos_pages: (P, page);
+    page_table: (B, n_max); q_pos: (B,). Returns (B, H, r) latent outputs —
+    the caller applies w_uv. Absorbed MLA decode is exactly MQA with
+    Dk = r + rd and Dv = r, so after the latent gather the blocked
+    online-softmax kernel above consumes it unchanged (Hkv = 1, G = H).
+    """
+    B = q.shape[0]
+    P, page, r = ckv_pages.shape
+    n_max = page_table.shape[1]
+    L = n_max * page
+    ckv = ckv_pages[page_table].reshape(B, L, r)
+    kr = kr_pages[page_table].reshape(B, L, kr_pages.shape[-1])
+    k = jnp.concatenate([ckv, kr], axis=-1)[:, :, None, :]   # (B, L, 1, r+rd)
+    v = ckv[:, :, None, :]                                   # (B, L, 1, r)
+    kv_pos = pos_pages[page_table].reshape(B, L)
+    return decode_attention(q, k, v, kv_pos, q_pos, scale=scale,
+                            window=window, block_l=block_l,
+                            interpret=interpret)

@@ -11,6 +11,8 @@ import jax
 
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.decode_attention import paged_decode_attention as _paged
+from repro.kernels.decode_attention import (paged_mla_decode_attention
+                                            as _paged_mla)
 from repro.kernels.spa_attention import spa_attention as _spa, block_map
 
 
@@ -52,5 +54,17 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, page_table, q_pos,
                   scale=scale, window=window, block_l=block_l, interpret=itp)
 
 
+def paged_mla_decode_attention(q, ckv_pages, kr_pages, pos_pages, page_table,
+                               q_pos, *, scale: Optional[float] = None,
+                               window: Optional[int] = None,
+                               block_l: int = 256,
+                               interpret: Optional[bool] = None):
+    """Flash-decode over a paged MLA latent pool (see decode_attention.py)."""
+    itp = auto_interpret() if interpret is None else interpret
+    return _paged_mla(q, ckv_pages, kr_pages, pos_pages, page_table, q_pos,
+                      scale=scale, window=window, block_l=block_l,
+                      interpret=itp)
+
+
 __all__ = ["spa_attention", "decode_attention", "paged_decode_attention",
-           "block_map", "auto_interpret"]
+           "paged_mla_decode_attention", "block_map", "auto_interpret"]

@@ -58,6 +58,11 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
                 "rollout_engine='paged' needs a quiescent engine at weight "
                 "sync; the off-policy baseline syncs mid-flight — use the "
                 "group engine (DESIGN.md §Continuous-batching)")
+        # engine x family validation matrix (configs/base.py): GQA and MLA
+        # families page, sliding-window configs reclaim; SSM/enc-dec/VLM
+        # are rejected here with the architectural reason.
+        from repro.configs.base import require_engine_support
+        require_engine_support(cfg, "paged")
         from repro.core.paged import PagedGroupEngine
         return PagedGroupEngine(
             cfg, num_slots=rl.cbatch_slots, page_size=rl.kv_page_size,

@@ -9,11 +9,18 @@ Masking is driven by (position, segment) arrays, which uniformly express:
 Padding uses seg == -1 (tokens only attend within their own padding run via
 the diagonal) and invalid cache slots use pos == INVALID_POS (masked by the
 causal rule).
+
+KV caches are built and stepped through the :class:`CacheBackend` layer
+(DESIGN.md §Cache-backends): one *layout* policy (dense-contiguous,
+ring/sliding-window, paged) over one *content* spec (``cache_streams`` —
+per-head K/V rows for GQA, ``(ckv, kr)`` latent rows for MLA), so every
+decode engine constructs and advances its cache through the same interface
+instead of per-engine ad-hoc dicts.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -125,6 +132,175 @@ def chunked_attention(q, k, v, q_pos, kv_pos, q_seg, kv_seg, *,
 
 
 # ==========================================================================
+# CacheBackend — the unified KV-cache layer (DESIGN.md §Cache-backends)
+# ==========================================================================
+
+def cache_streams(cfg: ModelConfig) -> Tuple[Tuple[str, tuple], ...]:
+    """What one cached token consists of, per attention family:
+    (name, per-token trailing shape) for each stream. GQA caches per-head
+    K/V rows; MLA caches the compressed latent + shared rope key — the
+    layout backends below are agnostic to which."""
+    if cfg.use_mla:
+        return (("ckv", (cfg.kv_lora_rank,)),
+                ("kr", (cfg.qk_rope_head_dim,)))
+    return (("k", (cfg.num_kv_heads, cfg.head_dim)),
+            ("v", (cfg.num_kv_heads, cfg.head_dim)))
+
+
+def is_paged_cache(cache: dict) -> bool:
+    return "pos_pages" in cache
+
+
+class DenseCacheBackend:
+    """Contiguous per-row cache of ``length`` slots; doubles as the
+    sliding-window RING buffer when ``cfg.sliding_window`` is set (write
+    index ``offset % length``, windowed prefill ring-writes the trailing
+    window). Used by the group Sampler and the dense-slot engine."""
+
+    paged = False
+
+    def __init__(self, cfg: ModelConfig, length: int):
+        self.cfg = cfg
+        self.L = length
+        self.ring = cfg.sliding_window is not None
+
+    def init(self, batch: int, dtype) -> dict:
+        state = {n: jnp.zeros((batch, self.L) + shp, dtype)
+                 for n, shp in cache_streams(self.cfg)}
+        state["pos"] = jnp.full((batch, self.L), INVALID_POS, jnp.int32)
+        state["seg"] = jnp.full((batch, self.L), -2, jnp.int32)
+        return state
+
+    def write_decode(self, state: dict, vals: tuple, positions, segments,
+                     cache_offset) -> dict:
+        """One token per row (vals are (B, 1, *shp)); ``cache_offset`` is a
+        scalar (lock-step engines) or (B,) per-row offsets (slot engines)."""
+        L = self.L
+        off = jnp.asarray(cache_offset)
+        new = {}
+        if off.ndim == 1:
+            # per-row offsets (continuous batching: each slot is at a
+            # different position) -> per-row one-hot masked write.
+            idx = off % L if self.ring else off
+            sel = (jnp.arange(L, dtype=jnp.int32)[None, :]
+                   == idx[:, None])                            # (B, L)
+            for (n, shp), val in zip(cache_streams(self.cfg), vals):
+                seln = sel.reshape(sel.shape + (1,) * len(shp))
+                new[n] = jnp.where(seln, val, state[n])
+            new["pos"] = jnp.where(sel, positions, state["pos"])
+            new["seg"] = jnp.where(sel, segments, state["seg"])
+        else:
+            idx = cache_offset % L if self.ring else cache_offset
+            for (n, shp), val in zip(cache_streams(self.cfg), vals):
+                new[n] = jax.lax.dynamic_update_slice(
+                    state[n], val, (0, idx) + (0,) * len(shp))
+            new["pos"] = jax.lax.dynamic_update_slice(
+                state["pos"], positions, (0, idx))
+            new["seg"] = jax.lax.dynamic_update_slice(
+                state["seg"], segments, (0, idx))
+        return new
+
+    def write_prefill(self, state: dict, vals: tuple, positions,
+                      segments) -> dict:
+        """Prompt prefill. S <= L writes at offset 0; S > L (legal only on
+        ring caches) ring-writes the trailing window — token i lands in slot
+        ``i % L`` so later decode steps (``idx = offset % L``) find it."""
+        S = positions.shape[1]
+        new = {}
+        if S > self.L:
+            assert self.ring, "prefill exceeds cache"
+            rr = S % self.L
+            ring = lambda a: jnp.roll(a[:, -self.L:], rr, axis=1)
+            for (n, _), val in zip(cache_streams(self.cfg), vals):
+                new[n] = ring(val)
+            new["pos"] = ring(positions)
+            new["seg"] = ring(segments)
+            return new
+        for (n, shp), val in zip(cache_streams(self.cfg), vals):
+            new[n] = jax.lax.dynamic_update_slice(
+                state[n], val, (0, 0) + (0,) * len(shp))
+        new["pos"] = jax.lax.dynamic_update_slice(
+            state["pos"], positions, (0, 0))
+        new["seg"] = jax.lax.dynamic_update_slice(
+            state["seg"], segments, (0, 0))
+        return new
+
+    def read(self, state: dict) -> tuple:
+        """-> (*streams, kv_pos, kv_seg), each full-length."""
+        return tuple(state[n] for n, _ in cache_streams(self.cfg)) \
+            + (state["pos"], state["seg"])
+
+
+class PagedCacheBackend:
+    """One physical page pool shared by every sequence on the engine
+    (DESIGN.md §Continuous-batching). Logical sequences are stitched
+    together by a per-slot page table; a GRPO group's rows list the same
+    prompt pages, so the shared prompt is stored once per group — the
+    cache-level counterpart of SPA's shared-prompt packing. For MLA the
+    pages hold ``(ckv, kr)`` latent rows (cache_streams), ~10x smaller than
+    a GQA page — absorbed decode gathers latent pages directly."""
+
+    paged = True
+
+    def __init__(self, cfg: ModelConfig, page_size: int):
+        self.cfg = cfg
+        self.page = page_size
+
+    def init(self, num_pages: int, dtype) -> dict:
+        state = {n + "_pages": jnp.zeros((num_pages, self.page) + shp, dtype)
+                 for n, shp in cache_streams(self.cfg)}
+        state["pos_pages"] = jnp.full((num_pages, self.page), INVALID_POS,
+                                      jnp.int32)
+        return state
+
+    def write_decode(self, state: dict, vals: tuple, positions,
+                     cache_offset) -> dict:
+        """cache_offset: (B,) flat slot index (page_id * page_size + slot)
+        where this step's streams land — engines point inactive rows at the
+        trash page."""
+        P, page = state["pos_pages"].shape
+        flat = lambda a: a.reshape((P * page,) + a.shape[2:])
+        idx = jnp.asarray(cache_offset)
+        new = {}
+        for (n, _), val in zip(cache_streams(self.cfg), vals):
+            pool = state[n + "_pages"]
+            new[n + "_pages"] = flat(pool).at[idx].set(val[:, 0]).reshape(
+                pool.shape)
+        new["pos_pages"] = flat(state["pos_pages"]).at[idx].set(
+            positions[:, 0]).reshape(state["pos_pages"].shape)
+        return new
+
+    def gather(self, state: dict, page_table) -> tuple:
+        """(B, n_max) page table -> (*streams (B, L, *shp), kv_pos (B, L))
+        logical contexts; null page 0 carries pos 2^30 (masked)."""
+        B, n_max = page_table.shape
+        L = n_max * self.page
+        outs = tuple(
+            state[n + "_pages"][page_table].reshape((B, L) + shp)
+            for n, shp in cache_streams(self.cfg))
+        kv_pos = state["pos_pages"][page_table].reshape(B, L)
+        return outs + (kv_pos,)
+
+
+def cache_backend(cfg: ModelConfig, *, length: Optional[int] = None,
+                  page_size: Optional[int] = None):
+    """The single construction point every decode path goes through:
+    ``page_size`` selects the paged pool backend, otherwise a dense /
+    ring cache of ``length`` slots."""
+    if page_size is not None:
+        return PagedCacheBackend(cfg, page_size)
+    assert length is not None, "dense cache backend needs a length"
+    return DenseCacheBackend(cfg, length)
+
+
+def backend_of(cfg: ModelConfig, cache: dict):
+    """Recover the layout backend from a cache state's leaves."""
+    if is_paged_cache(cache):
+        return PagedCacheBackend(cfg, cache["pos_pages"].shape[1])
+    return DenseCacheBackend(cfg, cache["pos"].shape[1])
+
+
+# ==========================================================================
 # GQA attention block
 # ==========================================================================
 
@@ -139,52 +315,20 @@ def init_gqa(key, cfg: ModelConfig, dtype) -> dict:
     }
 
 
-def make_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
-    """length = window size when cfg.sliding_window is set (ring buffer)."""
-    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
-    return {
-        "k": jnp.zeros((batch, length, Hkv, hd), dtype),
-        "v": jnp.zeros((batch, length, Hkv, hd), dtype),
-        "pos": jnp.full((batch, length), INVALID_POS, jnp.int32),
-        "seg": jnp.full((batch, length), -2, jnp.int32),
-    }
-
-
 def make_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
                         dtype) -> dict:
-    """One physical page pool shared by every sequence on the engine
-    (DESIGN.md §Continuous-batching). Logical sequences are stitched
-    together by a per-slot page table; a GRPO group's rows list the same
-    prompt pages, so the shared prompt is stored once per group — the
-    cache-level counterpart of SPA's shared-prompt packing."""
-    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
-    return {
-        "k_pages": jnp.zeros((num_pages, page_size, Hkv, hd), dtype),
-        "v_pages": jnp.zeros((num_pages, page_size, Hkv, hd), dtype),
-        "pos_pages": jnp.full((num_pages, page_size), INVALID_POS, jnp.int32),
-    }
+    """Paged pool state (see PagedCacheBackend); GQA or MLA-latent pages
+    depending on cfg."""
+    return PagedCacheBackend(cfg, page_size).init(num_pages, dtype)
 
 
-def _paged_decode(params, cfg: ModelConfig, q, k, v, positions, cache,
-                  cache_offset, page_table):
-    """Single-token decode against the paged pool.
-
-    cache_offset: (B,) flat slot index (page_id * page_size + slot) where
-    this step's k/v land — the engine points inactive rows at the trash
-    page. page_table: (B, n_max) page ids per row (null page 0 pads).
-    Returns (out (B,1,H,Dv), new_cache)."""
-    B, _, H, hd = q.shape
-    P, page, Hkv, _ = cache["k_pages"].shape
-    flat = lambda a: a.reshape((P * page,) + a.shape[2:])
-    idx = jnp.asarray(cache_offset)
-    new_cache = {
-        "k_pages": flat(cache["k_pages"]).at[idx].set(k[:, 0]).reshape(
-            cache["k_pages"].shape),
-        "v_pages": flat(cache["v_pages"]).at[idx].set(v[:, 0]).reshape(
-            cache["v_pages"].shape),
-        "pos_pages": flat(cache["pos_pages"]).at[idx].set(
-            positions[:, 0]).reshape(cache["pos_pages"].shape),
-    }
+def _paged_gqa_decode(params, cfg: ModelConfig, q, k, v, positions, cache,
+                      cache_offset, page_table):
+    """Single-token GQA decode against the paged pool. Returns
+    (out (B,1,H,Dv), new_cache)."""
+    B = q.shape[0]
+    be = backend_of(cfg, cache)
+    new_cache = be.write_decode(cache, (k, v), positions, cache_offset)
     if cfg.use_pallas_attention:
         # flash-decode Pallas kernel over the page pool (§Perf): the kernel
         # wrapper owns the page-table gather; causal masking comes from kv
@@ -197,14 +341,10 @@ def _paged_decode(params, cfg: ModelConfig, q, k, v, positions, cache,
         return out, new_cache
     # pure-JAX path: gather each row's logical context,
     # (B, n_max, page, ...) -> (B, L, ...), then single-pass decode
-    n_max = page_table.shape[1]
-    L = n_max * page
-    kk = new_cache["k_pages"][page_table].reshape(B, L, Hkv, hd)
-    vv = new_cache["v_pages"][page_table].reshape(B, L, Hkv, hd)
-    kp = new_cache["pos_pages"][page_table].reshape(B, L)
+    kk, vv, kp = be.gather(new_cache, page_table)
     zeros = jnp.zeros((B, 1), jnp.int32)
     out = chunked_attention(q, kk, vv, positions, kp, zeros,
-                            jnp.zeros((B, L), jnp.int32),
+                            jnp.zeros(kp.shape, jnp.int32),
                             window=cfg.sliding_window,
                             chunk_size=cfg.attn_chunk_size)
     return out, new_cache
@@ -233,17 +373,17 @@ def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
     k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None and "k_pages" in cache:
+    if cache is not None and is_paged_cache(cache):
         assert S == 1, "paged KV cache is a decode-only path"
-        out, new_cache = _paged_decode(params, cfg, q, k, v, positions,
-                                       cache, cache_offset, page_table)
+        out, new_cache = _paged_gqa_decode(params, cfg, q, k, v, positions,
+                                           cache, cache_offset, page_table)
         out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
                          params["wo"])
         return out, new_cache
     if cache is None:
         kk, vv, kp, ks = k, v, positions, segments
     else:
-        L = cache["k"].shape[1]
+        be = backend_of(cfg, cache)
         if S == 1:
             # NOTE (SPerf, refuted): a mask-based (iota==idx select) write
             # does NOT avoid the SPMD cache gather here -- XLA computes the
@@ -254,39 +394,13 @@ def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
             # write on a seq-sharded dim remains the documented residual
             # collective of dense-GQA decode; the structural fix is a
             # shard_map'd decode step (future lever).
-            off = jnp.asarray(cache_offset)
-            if off.ndim == 1:
-                # per-row offsets (continuous batching: each slot is at a
-                # different position) -> per-row one-hot masked write.
-                idx = off % L if cfg.sliding_window is not None else off
-                sel = (jnp.arange(L, dtype=jnp.int32)[None, :]
-                       == idx[:, None])                      # (B, L)
-                sel4 = sel[..., None, None]
-                new_cache = {
-                    "k": jnp.where(sel4, k, cache["k"]),
-                    "v": jnp.where(sel4, v, cache["v"]),
-                    "pos": jnp.where(sel, positions, cache["pos"]),
-                    "seg": jnp.where(sel, segments, cache["seg"]),
-                }
-            else:
-                idx = (cache_offset % L if cfg.sliding_window is not None
-                       else cache_offset)
-                new_cache = {
-                    "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0)),
-                    "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0)),
-                    "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, (0, idx)),
-                    "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, (0, idx)),
-                }
-        elif S > L:
+            new_cache = be.write_decode(cache, (k, v), positions, segments,
+                                        cache_offset)
+        elif S > be.L:
             # windowed prefill (S > window): attend against the full fresh
             # K/V (the window mask handles visibility) and ring-write only
-            # the trailing L tokens — token i lands in slot i % L so later
-            # decode steps (idx = offset % L) find it.
-            assert cfg.sliding_window is not None, "prefill exceeds cache"
-            r = S % L
-            ring = lambda a: jnp.roll(a[:, -L:], r, axis=1)
-            new_cache = {"k": ring(k), "v": ring(v),
-                         "pos": ring(positions), "seg": ring(segments)}
+            # the trailing L tokens.
+            new_cache = be.write_prefill(cache, (k, v), positions, segments)
             out = chunked_attention(q, k, v, positions, positions,
                                     segments, segments,
                                     window=cfg.sliding_window,
@@ -295,14 +409,8 @@ def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
                              params["wo"])
             return out, new_cache
         else:  # prefill into an empty cache (L >= S, offset 0)
-            new_cache = {
-                "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
-                "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
-                "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, (0, 0)),
-                "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, (0, 0)),
-            }
-        kk, vv = new_cache["k"], new_cache["v"]
-        kp, ks = new_cache["pos"], new_cache["seg"]
+            new_cache = be.write_prefill(cache, (k, v), positions, segments)
+        kk, vv, kp, ks = be.read(new_cache)
 
     # Under the "sp_heads" profile (§Perf): reshard once per layer — q to
     # head-sharded, k/v replicated over the model axis — so the KV-chunk
@@ -345,15 +453,6 @@ def init_mla(key, cfg: ModelConfig, dtype) -> dict:
     }
 
 
-def make_mla_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
-    return {
-        "ckv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
-        "kr": jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype),
-        "pos": jnp.full((batch, length), INVALID_POS, jnp.int32),
-        "seg": jnp.full((batch, length), -2, jnp.int32),
-    }
-
-
 def _mla_qckv(params, cfg: ModelConfig, x, positions):
     from repro.models.layers import rmsnorm
     B, S, _ = x.shape
@@ -369,75 +468,92 @@ def _mla_qckv(params, cfg: ModelConfig, x, positions):
     return q_nope, q_rope, ckv, kr
 
 
+def _absorbed_q(params, cfg: ModelConfig, q_nope, q_rope):
+    """Fold w_uk into q: (B, S, H, nd) -> (B, S, H, r + rd) latent-space
+    queries — shared by the contiguous and paged absorbed-decode paths."""
+    H = cfg.num_heads
+    w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, H, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    return jnp.concatenate([q_lat, q_rope], axis=-1)
+
+
+def _paged_mla_decode(params, cfg: ModelConfig, q_nope, q_rope, ckv, kr,
+                      positions, cache, cache_offset, page_table, scale):
+    """Absorbed single-token MLA decode against the paged latent pool:
+    pages hold (ckv, kr) rows; scores and values stay in the
+    (rank + rope) latent space. Returns (o_lat (B,1,H,r), new_cache)."""
+    B = ckv.shape[0]
+    be = backend_of(cfg, cache)
+    new_cache = be.write_decode(cache, (ckv, kr), positions, cache_offset)
+    q_cat = _absorbed_q(params, cfg, q_nope, q_rope)           # (B,1,H,r+rd)
+    if cfg.use_pallas_attention:
+        from repro.kernels.ops import paged_mla_decode_attention as _flash
+        o_lat = _flash(q_cat[:, 0], new_cache["ckv_pages"],
+                       new_cache["kr_pages"], new_cache["pos_pages"],
+                       page_table, positions[:, 0], scale=scale,
+                       window=cfg.sliding_window)[:, None]
+        return o_lat, new_cache
+    ckv_all, kr_all, kp = be.gather(new_cache, page_table)
+    k_cat = jnp.concatenate([ckv_all, kr_all], axis=-1)[:, :, None, :]
+    zeros = jnp.zeros((B, 1), jnp.int32)
+    o_lat = chunked_attention(q_cat, k_cat, ckv_all[:, :, None, :],
+                              positions, kp, zeros,
+                              jnp.zeros(kp.shape, jnp.int32),
+                              window=cfg.sliding_window,
+                              chunk_size=cfg.attn_chunk_size, scale=scale)
+    return o_lat, new_cache
+
+
 def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
                   cache: Optional[dict] = None, cache_offset=None,
                   page_table=None):
     """Expanded path for train/prefill; absorbed path for decode (S == 1):
     scores and values live in the (rank + rope) latent space so the KV cache
-    stores only ckv + shared rope key — the MLA memory win."""
+    stores only ckv + shared rope key — the MLA memory win. A paged cache
+    (``ckv_pages``/``kr_pages``/``pos_pages`` + page table) routes absorbed
+    decode through the shared latent page pool."""
     B, S, d = x.shape
     H = cfg.num_heads
     nd, rd, vd, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
                      cfg.v_head_dim, cfg.kv_lora_rank)
-    assert page_table is None, \
-        "paged KV cache targets GQA; MLA decode keeps per-row latent caches"
     q_nope, q_rope, ckv, kr = _mla_qckv(params, cfg, x, positions)
     scale = (nd + rd) ** -0.5
 
+    if cache is not None and is_paged_cache(cache):
+        assert S == 1, "paged latent cache is a decode-only path"
+        o_lat, new_cache = _paged_mla_decode(
+            params, cfg, q_nope, q_rope, ckv, kr, positions, cache,
+            cache_offset, page_table, scale)
+        w_uv = params["w_uv"].reshape(r, H, vd)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * vd),
+                         params["wo"])
+        return out, new_cache
+
     new_cache = None
     if cache is not None:
-        L = cache["ckv"].shape[1]
-        if S > 1 and S > L:
+        be = backend_of(cfg, cache)
+        if S > 1 and S > be.L:
             # windowed prefill: ring-write trailing window, attend full
             # (mirrors gqa_attention's windowed-prefill path).
-            assert cfg.sliding_window is not None, "prefill exceeds cache"
-            r = S % L
-            ring = lambda a: jnp.roll(a[:, -L:], r, axis=1)
-            new_cache = {"ckv": ring(ckv), "kr": ring(kr),
-                         "pos": ring(positions), "seg": ring(segments)}
+            new_cache = be.write_prefill(cache, (ckv, kr), positions,
+                                         segments)
             ckv_all, kr_all = ckv, kr
             kp, ks = positions, segments
         else:
             if S == 1:
-                off = jnp.asarray(cache_offset)
-                if off.ndim == 1:    # per-row offsets (continuous batching)
-                    idx = off % L if cfg.sliding_window is not None else off
-                    sel = (jnp.arange(L, dtype=jnp.int32)[None, :]
-                           == idx[:, None])
-                    new_cache = {
-                        "ckv": jnp.where(sel[..., None], ckv, cache["ckv"]),
-                        "kr": jnp.where(sel[..., None], kr, cache["kr"]),
-                        "pos": jnp.where(sel, positions, cache["pos"]),
-                        "seg": jnp.where(sel, segments, cache["seg"]),
-                    }
-                else:
-                    idx = (cache_offset % L if cfg.sliding_window is not None
-                           else cache_offset)
-                    at = (0, idx)
-                    new_cache = {
-                        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv, at + (0,)),
-                        "kr": jax.lax.dynamic_update_slice(cache["kr"], kr, at + (0,)),
-                        "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, at),
-                        "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, at),
-                    }
+                new_cache = be.write_decode(cache, (ckv, kr), positions,
+                                            segments, cache_offset)
             else:
-                at = (0, 0)
-                new_cache = {
-                    "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv, at + (0,)),
-                    "kr": jax.lax.dynamic_update_slice(cache["kr"], kr, at + (0,)),
-                    "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, at),
-                    "seg": jax.lax.dynamic_update_slice(cache["seg"], segments, at),
-                }
-            ckv_all, kr_all = new_cache["ckv"], new_cache["kr"]
-            kp, ks = new_cache["pos"], new_cache["seg"]
+                new_cache = be.write_prefill(cache, (ckv, kr), positions,
+                                             segments)
+            ckv_all, kr_all, kp, ks = be.read(new_cache)
     else:
         ckv_all, kr_all, kp, ks = ckv, kr, positions, segments
 
     if S == 1 and cache is not None:
         # absorbed decode: fold w_uk into q, attend in latent space.
-        w_uk = params["w_uk"].reshape(r, H, nd)
-        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)     # (B,1,H,r)
-        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)       # (B,1,H,r+rd)
+        q_cat = _absorbed_q(params, cfg, q_nope, q_rope)        # (B,1,H,r+rd)
         k_cat = jnp.concatenate([ckv_all, kr_all], axis=-1)[:, :, None, :]
         o_lat = chunked_attention(q_cat, k_cat,
                                   ckv_all[:, :, None, :],
@@ -475,6 +591,4 @@ def attention(params, cfg: ModelConfig, x, positions, segments, **kw):
 
 
 def make_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
-    if cfg.use_mla:
-        return make_mla_cache(cfg, batch, length, dtype)
-    return make_kv_cache(cfg, batch, length, dtype)
+    return cache_backend(cfg, length=length).init(batch, dtype)

@@ -283,10 +283,18 @@ def forward_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     return x, new_caches, aux_total, final_states
 
 
-def init_caches(params: dict, cfg: ModelConfig, batch: int, length: int) -> dict:
-    """Build per-layer decode caches, stacked over layers to match scan."""
+def init_caches(params: dict, cfg: ModelConfig, batch: int, length: int, *,
+                ring: bool = True) -> dict:
+    """Build per-layer decode caches, stacked over layers to match scan.
+
+    Sliding-window configs get the ring-buffer backend sized to the window
+    (``ring=True``, the decode default); ``ring=False`` forces a full
+    ``length`` dense cache regardless — the paged engine's prompt prefill
+    uses it so every prompt token's KV is addressable for the page splice
+    (window masking still applies inside the attention)."""
     dt = dtype_of(cfg.compute_dtype)
-    kv_len = min(length, cfg.sliding_window) if cfg.sliding_window else length
+    kv_len = (min(length, cfg.sliding_window)
+              if cfg.sliding_window and ring else length)
 
     def one_layer(_):
         c = {}
@@ -310,13 +318,13 @@ def init_caches(params: dict, cfg: ModelConfig, batch: int, length: int) -> dict
 
 def init_paged_caches(params: dict, cfg: ModelConfig, num_pages: int,
                       page_size: int) -> dict:
-    """Per-layer paged KV pools (stacked over layers to match the body scan;
+    """Per-layer paged pools (stacked over layers to match the body scan;
     the page table is shared across layers — every layer uses the same
-    logical-to-physical page mapping, as in vLLM's block tables)."""
-    assert cfg.family in ("dense", "moe") and not cfg.use_mla \
-        and not cfg.is_encoder_decoder and not cfg.vision_prefix_len, \
-        f"{cfg.name}: paged KV cache targets decoder-only GQA families " \
-        "(see DESIGN.md §Arch-applicability)"
+    logical-to-physical page mapping, as in vLLM's block tables). GQA pools
+    page per-head K/V rows; MLA pools page (ckv, kr) latent rows
+    (DESIGN.md §Cache-backends)."""
+    from repro.configs.base import require_engine_support
+    require_engine_support(cfg, "paged")
     dt = dtype_of(cfg.compute_dtype)
     from repro.models.attention import make_paged_kv_cache
     one = {"kv": make_paged_kv_cache(cfg, num_pages, page_size, dt)}

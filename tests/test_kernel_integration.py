@@ -52,3 +52,43 @@ def test_pallas_path_matches_on_spa_packed_rows(setup):
     h_ker, _, _, _ = forward_hidden(params, cfg_k, toks, **kw)
     np.testing.assert_allclose(np.asarray(h_ker), np.asarray(h_ref),
                                atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-v2-lite-16b"])
+def test_pallas_paged_decode_matches_pure(arch):
+    """One paged decode step through the attention block with
+    cfg.use_pallas_attention on vs off (GQA K/V pages and MLA latent
+    pages): the flash-decode kernel wrapper and the pure-JAX gather path
+    must agree on the same page pool."""
+    from repro.models.attention import (PagedCacheBackend, attention,
+                                        init_attention)
+    cfg = reduced_config(get_config(arch))
+    cfg_k = dataclasses.replace(cfg, use_pallas_attention=True)
+    rng = np.random.RandomState(7)
+    params = init_attention(jax.random.PRNGKey(11), cfg, jnp.float32)
+    P, page, n_max, B = 6, 4, 3, 2
+    be = PagedCacheBackend(cfg, page)
+    cache = be.init(P, jnp.float32)
+    # fill pages 2..5 with a fake history at positions 0..7 per row
+    cache = {k: (jnp.asarray(rng.randn(*v.shape), jnp.float32)
+                 if v.dtype != jnp.int32 else v) for k, v in cache.items()}
+    pos = np.full((P, page), 2 ** 30, np.int64)
+    for j, p0 in ((2, 0), (3, 4), (4, 0), (5, 4)):
+        pos[j] = np.arange(p0, p0 + page)
+    cache["pos_pages"] = jnp.asarray(pos, jnp.int32)
+    table = jnp.asarray([[2, 3, 0], [4, 5, 0]], jnp.int32)
+    x = jnp.asarray(rng.randn(B, 1, cfg.d_model), jnp.float32)
+    positions = jnp.full((B, 1), 8, jnp.int32)
+    segments = jnp.zeros((B, 1), jnp.int32)
+    wslot = jnp.asarray([3 * page + 0, 5 * page + 0], jnp.int32)
+    o_ref, c_ref = attention(params, cfg, x, positions, segments,
+                             cache=cache, cache_offset=wslot,
+                             page_table=table)
+    o_ker, c_ker = attention(params, cfg_k, x, positions, segments,
+                             cache=cache, cache_offset=wslot,
+                             page_table=table)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               atol=2e-4, rtol=2e-4)
+    for k in c_ref:
+        np.testing.assert_allclose(np.asarray(c_ker[k]),
+                                   np.asarray(c_ref[k]), atol=1e-6)

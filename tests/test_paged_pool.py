@@ -3,7 +3,13 @@ token-identical to the group-at-a-time path under a fixed PRNG key
 (greedy AND sampled), with mid-batch admission/eviction, shared prompt
 pages refcounted back to the freelist, and the periodic-asynchrony
 contract (zero staleness in async mode) intact.
+
+The CacheBackend layer (DESIGN.md §Cache-backends) extends the same
+contract to MLA (latent pages) and sliding-window configs (out-of-window
+page reclamation) — proven token-identical below, with a long-decode test
+asserting reclaimed pages actually return to the freelist.
 """
+import dataclasses
 import threading
 
 import jax
@@ -211,6 +217,170 @@ def test_paged_rejects_offpolicy_mode(setup):
                   batch_prompts=2, group_size=2)
     with pytest.raises(ValueError, match="quiescent"):
         build_pipeline(cfg, rl)
+
+
+# =========================================================================
+# CacheBackend families: MLA latent pages + sliding-window reclamation
+# =========================================================================
+
+@pytest.fixture(scope="module")
+def setup_mla():
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    params = init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_paged_mla_token_identical(setup_mla, temperature):
+    """DeepSeek-V2 MLA through the paged pool: pages hold (ckv, kr) latent
+    rows and absorbed decode gathers them; output must be token-identical
+    to the group Sampler under the same key (greedy and sampled), with
+    slots < group size forcing out-of-lock-step admission."""
+    cfg, params = setup_mla
+    prompt = np.asarray([1, 9, 4, 7, 3, 8, 2], np.int32)
+    key = jax.random.PRNGKey(13)
+    ref = Sampler(cfg, LP, T, temperature=temperature)
+    eng = _engine(cfg, temperature=temperature)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    h = eng.submit(prompt, key)
+    while eng.step():
+        pass
+    _assert_group_identical(h.result(1),
+                            ref.generate(params, [prompt] * G, key))
+    assert eng.alloc.num_free == free0 and eng.idle
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-v2-lite-16b"])
+def test_paged_sliding_window_token_identical(setup, setup_mla, arch):
+    """Sliding-window configs through the paged pool: the window slides
+    past prompt AND response pages mid-decode (Lp + T > window), pages are
+    reclaimed, and the output still matches the group Sampler's ring-cache
+    decode token for token."""
+    cfg, params = (setup if arch == "llama3.2-3b" else setup_mla)
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    params = init(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray([1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 3, 4], np.int32)
+    key = jax.random.PRNGKey(17)
+    ref = Sampler(cfg, LP, T, temperature=1.0)
+    eng = _engine(cfg, temperature=1.0)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    h = eng.submit(prompt, key)
+    while eng.step():
+        pass
+    _assert_group_identical(h.result(1),
+                            ref.generate(params, [prompt] * G, key))
+    assert eng.reclaimed_pages > 0, "window slid past pages; none reclaimed"
+    assert eng.alloc.num_free == free0 and eng.idle
+
+
+def test_windowed_long_decode_reclaims_pages_to_freelist(setup):
+    """The O(window) residency claim: a pool too small to hold the full
+    decode's pages (prompt + G rows x all response pages) must still
+    complete a long windowed decode because out-of-window pages return to
+    the freelist mid-flight; peak occupancy stays within the admission
+    budget rather than growing with context."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    params = init(jax.random.PRNGKey(0), cfg)
+    T_long, page = 32, 4
+    n_resp = T_long // page                                   # 8 pages/row
+    budget = 8 // page + 3                                    # 5 < 8
+    # full-history demand: 2 live prompt pages + 4 rows x 8 = 34 pages;
+    # give only enough for the windowed budget (2 + 4 x 5 = 22)
+    num_pages = FIRST_PAGE + 2 + G * budget
+    eng = PagedGroupEngine(cfg, num_slots=G, page_size=page,
+                           num_pages=num_pages, max_prompt_len=LP,
+                           max_new_tokens=T_long, group_size=G,
+                           temperature=1.0)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    h = eng.submit(np.asarray([1, 9, 4, 7, 3, 8, 2], np.int32),
+                   jax.random.PRNGKey(23))
+    while eng.step():
+        pass
+    lens = np.asarray(h.result(1).response_len)
+    assert lens.max() > 8, "decode too short to slide the window"
+    assert eng.reclaimed_pages >= G * (n_resp - budget), \
+        "long decode must recycle out-of-window pages"
+    assert eng.peak_pages_used <= 2 + G * budget, \
+        "resident pages must be O(window), not O(context)"
+    assert eng.alloc.num_free == free0 and eng.idle
+
+
+def test_submit_rejects_impossible_prompt(setup):
+    """A group whose prompt + per-row page budget exceed what the pool can
+    EVER free must raise at submit (with the required vs available count)
+    instead of sitting in the admission queue forever."""
+    cfg, params = setup
+    # pool passes the construction check (max prompt + 1 response page =
+    # 4 + 1 + 2 reserved <= 7) but can never admit a full-length prompt
+    # alongside the T=8 response budget (4 + 2 = 6 > 5 free-able)
+    eng = PagedGroupEngine(cfg, num_slots=2, page_size=4,
+                           num_pages=FIRST_PAGE + 5, max_prompt_len=LP,
+                           max_new_tokens=T, group_size=2)
+    eng.set_params(params)
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(np.arange(1, LP + 1, dtype=np.int32),
+                   jax.random.PRNGKey(0))
+    # a short prompt still fits the same pool
+    h = eng.submit(np.asarray([1, 2, 3], np.int32), jax.random.PRNGKey(1))
+    while eng.step():
+        pass
+    assert h.done() and eng.idle
+
+
+def test_engine_support_matrix():
+    """The validation matrix (configs/base.py) every engine construction
+    consults: remaining paged exclusions are architectural — recurrent
+    state, bounded enc-dec decode, dense vision prefix."""
+    from repro.configs.base import engine_support
+    paged_ok = {"llama3.2-3b": True, "deepseek-v2-lite-16b": True,
+                "internlm2-20b": True, "qwen3-moe-235b-a22b": True,
+                "mamba2-2.7b": False, "hymba-1.5b": False,
+                "whisper-tiny": False, "internvl2-76b": False}
+    for arch, ok in paged_ok.items():
+        got, reason = engine_support(get_config(arch), "paged")
+        assert got == ok, f"{arch}: expected paged={ok}, got {got} ({reason})"
+        assert reason
+    # windowed variants of pageable families stay pageable (reclamation)
+    win = dataclasses.replace(get_config("llama3.2-3b"), sliding_window=8192)
+    ok, reason = engine_support(win, "paged")
+    assert ok and "reclaim" in reason
+    # group path serves everything; cbatch rejects enc-dec/VLM only
+    for arch in paged_ok:
+        assert engine_support(get_config(arch), "group")[0]
+    assert not engine_support(get_config("whisper-tiny"), "cbatch")[0]
+    assert engine_support(get_config("mamba2-2.7b"), "cbatch")[0]
+
+
+def test_paged_mla_decode_attention_kernel_matches_gather():
+    """The latent-page flash-decode wrapper must agree with the plain
+    kernel on the pre-gathered, concatenated latent streams (absorbed MLA
+    decode == MQA with Dk = r + rd, Dv = r)."""
+    from repro.kernels.decode_attention import (decode_attention,
+                                                paged_mla_decode_attention)
+    rng = np.random.RandomState(0)
+    B, H, r, rd, P, page, n_max = 2, 4, 16, 8, 6, 4, 3
+    q = jnp.asarray(rng.randn(B, H, r + rd), jnp.float32)
+    ckv_pages = jnp.asarray(rng.randn(P, page, r), jnp.float32)
+    kr_pages = jnp.asarray(rng.randn(P, page, rd), jnp.float32)
+    pos_pages = jnp.asarray(rng.randint(0, 10, size=(P, page)), jnp.int32)
+    pos_pages = pos_pages.at[0].set(2 ** 30)          # null page masked
+    table = jnp.asarray([[1, 2, 0], [3, 4, 5]], jnp.int32)
+    q_pos = jnp.asarray([7, 9], jnp.int32)
+    out = paged_mla_decode_attention(q, ckv_pages, kr_pages, pos_pages,
+                                     table, q_pos, block_l=4, interpret=True)
+    L = n_max * page
+    k = jnp.concatenate([ckv_pages[table].reshape(B, L, r),
+                         kr_pages[table].reshape(B, L, rd)],
+                        axis=-1)[:, :, None, :]
+    v = ckv_pages[table].reshape(B, L, r)[:, :, None, :]
+    ref = decode_attention(q, k, v, pos_pages[table].reshape(B, L), q_pos,
+                           block_l=4, interpret=True)
+    assert out.shape == (B, H, r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
 
 
 # =========================================================================

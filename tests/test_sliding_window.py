@@ -1,0 +1,126 @@
+"""Sliding-window ring-buffer cache (DESIGN.md §Arch-applicability): the
+windowed prefill ring-write and the ``idx = offset % window`` decode write
+must produce the same attention outputs as a full-length cache under the
+same window mask — the ring is a memory layout, not a semantics change.
+
+The oracle is the SAME config (same window masking) over a full-length
+dense cache: every offset is below the cache length, so ``off % L`` is the
+identity and the cache holds every token; only the ring's slot recycling
+differs. Covers GQA and MLA (both have ring paths in models/attention.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models.attention import (DenseCacheBackend, attention,
+                                    init_attention, make_cache)
+
+W, LP, T, B = 8, 24, 6, 2
+
+
+def _cfg(arch):
+    return dataclasses.replace(reduced_config(get_config(arch)),
+                               sliding_window=W)
+
+
+def _pos_seg(S):
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    seg = jnp.zeros((B, S), jnp.int32)
+    return pos, seg
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-v2-lite-16b"])
+def test_ring_cache_matches_full_cache_oracle(arch):
+    """Windowed prefill (S > window -> ring-write of the trailing window)
+    followed by T ring decode steps must match a full-length cache driven
+    through the identical attention (same window mask) step for step."""
+    cfg = _cfg(arch)
+    rng = np.random.RandomState(0)
+    params = init_attention(jax.random.PRNGKey(1), cfg, jnp.float32)
+
+    ring = make_cache(cfg, B, W, jnp.float32)          # the decode default
+    full = make_cache(cfg, B, LP + T, jnp.float32)     # oracle layout
+    assert ring["pos"].shape[1] == W
+
+    x = jnp.asarray(rng.randn(B, LP, cfg.d_model), jnp.float32)
+    pos, seg = _pos_seg(LP)
+    out_ring, ring = attention(params, cfg, x, pos, seg,
+                               cache=ring, cache_offset=0)
+    out_full, full = attention(params, cfg, x, pos, seg,
+                               cache=full, cache_offset=0)
+    np.testing.assert_allclose(np.asarray(out_ring), np.asarray(out_full),
+                               atol=1e-5)
+
+    for t in range(T):
+        xt = jnp.asarray(rng.randn(B, 1, cfg.d_model), jnp.float32)
+        pt = jnp.full((B, 1), LP + t, jnp.int32)
+        st = jnp.zeros((B, 1), jnp.int32)
+        o_r, ring = attention(params, cfg, xt, pt, st,
+                              cache=ring, cache_offset=LP + t)
+        o_f, full = attention(params, cfg, xt, pt, st,
+                              cache=full, cache_offset=LP + t)
+        np.testing.assert_allclose(np.asarray(o_r), np.asarray(o_f),
+                                   atol=1e-5, err_msg=f"decode step {t}")
+
+
+def test_ring_decode_per_row_offsets():
+    """The slot engines drive the ring with PER-ROW offsets (one-hot masked
+    writes); ``idx = off % window`` must land each row's token in its own
+    ring slot, matching the scalar-offset path row for row."""
+    cfg = _cfg("llama3.2-3b")
+    rng = np.random.RandomState(2)
+    params = init_attention(jax.random.PRNGKey(3), cfg, jnp.float32)
+    be = DenseCacheBackend(cfg, W)
+    assert be.ring
+
+    # warm two independent caches to different depths via the scalar path
+    caches, outs_scalar = [], []
+    offs = [W + 3, W - 2]                    # one wrapped row, one not
+    for b, depth in enumerate(offs):
+        c = make_cache(cfg, 1, W, jnp.float32)
+        for t in range(depth):
+            xt = jnp.asarray(rng.randn(1, 1, cfg.d_model), jnp.float32)
+            pt = jnp.full((1, 1), t, jnp.int32)
+            st = jnp.zeros((1, 1), jnp.int32)
+            o, c = attention(params, cfg, xt, pt, st, cache=c,
+                             cache_offset=t)
+        caches.append(c)
+
+    # stack the rows into one 2-row cache and advance with per-row offsets
+    stacked = jax.tree.map(lambda a, b2: jnp.concatenate([a, b2], axis=0),
+                           caches[0], caches[1])
+    x = jnp.asarray(rng.randn(B, 1, cfg.d_model), jnp.float32)
+    pos = jnp.asarray([[offs[0]], [offs[1]]], jnp.int32)
+    seg = jnp.zeros((B, 1), jnp.int32)
+    out_rows, stacked = attention(params, cfg, x, pos, seg, cache=stacked,
+                                  cache_offset=jnp.asarray(offs, jnp.int32))
+    for b in range(B):
+        o_ref, _ = attention(params, cfg, x[b:b + 1], pos[b:b + 1],
+                             seg[b:b + 1], cache=caches[b],
+                             cache_offset=offs[b])
+        np.testing.assert_allclose(np.asarray(out_rows[b:b + 1]),
+                                   np.asarray(o_ref), atol=1e-5)
+
+
+def test_windowed_mask_actually_limits_attention():
+    """Sanity guard for the oracle itself: with the window mask, a token
+    far past the window must be insensitive to the earliest prompt tokens
+    (full causal attention would not be)."""
+    cfg = _cfg("llama3.2-3b")
+    rng = np.random.RandomState(4)
+    params = init_attention(jax.random.PRNGKey(5), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(1, LP, cfg.d_model), jnp.float32)
+    x2 = x.at[0, 0].set(x[0, 0] + 7.0)       # perturb token 0
+    pos = jnp.arange(LP, dtype=jnp.int32)[None]
+    seg = jnp.zeros((1, LP), jnp.int32)
+    o1, _ = attention(params, cfg, x, pos, seg)
+    o2, _ = attention(params, cfg, x2, pos, seg)
+    # inside the window of token 0 the outputs differ...
+    assert not np.allclose(np.asarray(o1[0, 1]), np.asarray(o2[0, 1]))
+    # ...but the last token (pos LP-1 >= window) cannot see token 0
+    np.testing.assert_allclose(np.asarray(o1[0, -1]), np.asarray(o2[0, -1]),
+                               atol=1e-6)
