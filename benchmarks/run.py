@@ -18,16 +18,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single table (table1..table5, roofline)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: just the continuous-batching table "
-                         "(slot engine + pool-level paged-vs-group), "
-                         "skipping the slow training-side tables")
+                    help="CI smoke: the continuous-batching table (slot "
+                         "engine + pool-level paged-vs-group) and the "
+                         "weight-plane sync-gap table, skipping the slow "
+                         "training-side tables")
     args = ap.parse_args()
     if args.smoke and args.only:
         ap.error("--smoke picks its own table set; drop --only")
 
     from benchmarks import (table1_async, table2_trimodel, table3_spa,
                             table4_dp_baselines, table5_scaling,
-                            table6_cbatch)
+                            table6_cbatch, table7_transfer)
     tables = {
         "table1": table1_async.main,
         "table2": table2_trimodel.main,
@@ -35,10 +36,12 @@ def main() -> None:
         "table4": table4_dp_baselines.main,
         "table5": table5_scaling.main,
         "table6": table6_cbatch.main,   # beyond-paper: continuous batching
+        "table7": table7_transfer.main,  # beyond-paper: weight-plane sync-gap
     }
     if args.smoke:
         tables = {"table6": table6_cbatch.main,
-                  "table6_pool": table6_cbatch.pool_mode}
+                  "table6_pool": table6_cbatch.pool_mode,
+                  "table7": table7_transfer.main}
     print("table,name,value,derived")
     failures = 0
     for name, fn in tables.items():

@@ -109,6 +109,7 @@ def pool_mode(n_groups: int = 6, group_size: int = 4, workers: int = 4
     from repro.core.engine import InferenceInstance
     from repro.core.paged import PagedGroupEngine
     from repro.models.attention import cache_streams
+    from repro.transfer.service import WeightTransferService
 
     # The MLA variant benchmarks LATENT paging, so the MoE half of
     # deepseek-v2 is disabled: near-boundary expert-routing flips under
@@ -170,12 +171,16 @@ def pool_mode(n_groups: int = 6, group_size: int = 4, workers: int = 4
                 max_prompt_len=LP, max_new_tokens=T, group_size=group_size,
                 temperature=1.0, eos_id=EOS, capture_logprobs=False)
             inst = InferenceInstance(0, cfg, sampler, paged_engine=eng)
-            inst.sync_weights(params, 0)
+            # weights arrive via the weight-plane's bucket stream — the
+            # shipped trainer->pool path, not a raw whole-tree install
+            WeightTransferService([inst], bucket_bytes=1 << 20
+                                  ).publish(params, 0)
             return inst, eng
 
         def make_group():
             inst = InferenceInstance(0, cfg, sampler)
-            inst.sync_weights(params, 0)
+            WeightTransferService([inst], bucket_bytes=1 << 20
+                                  ).publish(params, 0)
             return inst, None
 
         results = {}

@@ -1,3 +1,4 @@
-from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.checkpoint.ckpt import (load_checkpoint, load_tri,
+                                   save_checkpoint, save_tri)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "save_tri", "load_tri"]

@@ -15,16 +15,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-_SEP = "::"
+from repro.transfer.plan import flatten_with_keys
 
 
 def _flatten(tree) -> dict:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
-                        for e in path)
-        flat[key] = leaf
-    return flat
+    """Path-keyed flat view — same key scheme as the weight-plane's
+    reshard plans (one shared helper, so checkpoint manifest keys and
+    transfer leaf keys can never drift apart)."""
+    keys, leaves, _ = flatten_with_keys(tree)
+    return dict(zip(keys, leaves))
 
 
 def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
@@ -40,6 +39,36 @@ def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
     np.savez(os.path.join(path, "arrays.npz"), **arrays)
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump({"dtypes": dtypes, "step": step}, f)
+
+
+def save_tri(path: str, tri) -> None:
+    """Checkpoint the full tri-model state (policy, old, ref, Adam state)
+    with the weight-plane version in the manifest — the version is part of
+    the state: a resumed run must republish the SAME version to the pool
+    or the on-policy monitor's staleness accounting restarts from zero."""
+    save_checkpoint(path, {"policy": tri.policy, "old": tri.old,
+                           "ref": tri.ref, "opt": tri.opt},
+                    step=tri.version)
+
+
+def load_tri(path: str, like_tri, shardings=None):
+    """Restore a tri-model checkpoint into ``like_tri``'s structure
+    (mutates it in place) and return it, version included. ``shardings``
+    optionally re-places every leaf (same layout for the four trees)."""
+    like = {"policy": like_tri.policy, "old": like_tri.old,
+            "ref": like_tri.ref, "opt": like_tri.opt}
+    # the three param trees share one layout; fp32 Adam state stays on the
+    # trainer's default placement (the weight-plane never ships it)
+    shard_tree = None if shardings is None else \
+        {"policy": shardings, "old": shardings, "ref": shardings}
+    restored, step = load_checkpoint(path, like,
+                                     shardings=shard_tree)
+    like_tri.policy = restored["policy"]
+    like_tri.old = restored["old"]
+    like_tri.ref = restored["ref"]
+    like_tri.opt = restored["opt"]
+    like_tri.version = int(step)
+    return like_tri
 
 
 def load_checkpoint(path: str, like_tree, shardings=None):

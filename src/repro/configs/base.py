@@ -294,4 +294,23 @@ class RLConfig:
     # without captured values (simulated/scripted instances) fall back to
     # the recompute path per micro-batch.
     capture_logprobs: bool = True
+    # --- weight-plane (DESIGN.md §Weight-plane) -----------------------
+    # The iteration-boundary trainer->pool weight push streams the param
+    # tree as fixed-size buckets through repro.transfer instead of one
+    # whole-tree device_put per instance.
+    transfer_bucket_bytes: int = 1 << 22   # wire bytes coalesced per bucket
+    # Overlap: start streaming the new version's buckets the moment the
+    # optimizer update materialises (background thread), hiding wire time
+    # under the trainer's iteration tail. Rollouts stay version-GATED, so
+    # Proposition 1 is preserved exactly — the param trajectory is
+    # bitwise-identical to eager sync (tests/test_transfer.py).
+    transfer_overlap: bool = True
+    # Wire dtype for the payload ("" = stream the storage dtype, bitwise).
+    # E.g. "bfloat16" streams a bf16 payload while fp32 master weights
+    # stay trainer-side.
+    transfer_wire_dtype: str = ""
+    # Cast with the Pallas fused cast+copy kernel
+    # (kernels/transfer_cast.py) instead of the pure-JAX astype path; only
+    # meaningful when transfer_wire_dtype differs from storage.
+    transfer_pallas_cast: bool = False
     seed: int = 0

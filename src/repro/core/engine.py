@@ -20,6 +20,13 @@ Three execution modes per instance:
              inference deployment (inference on separate devices), and is
              what the throughput benchmarks use so results reflect pipeline
              structure rather than this container's single CPU core.
+
+Weights live in a :class:`~repro.transfer.service.VersionedParamStore` per
+instance: readers take an atomic (params, version) snapshot, and the
+weight-plane service streams versioned buckets into the store's back
+buffer (DESIGN.md §Weight-plane). ``sync_weights`` remains as the eager
+whole-tree path (tests / serving), built on the same store so the
+(params, version) pair can never tear.
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.paged import PagedGroupEngine
 from repro.rl.rollout import RolloutBatch, Sampler
+from repro.transfer.service import VersionedParamStore
 
 
 class InferenceInstance:
@@ -48,43 +56,60 @@ class InferenceInstance:
         self.paged_engine = paged_engine
         assert paged_engine is None or scripted_fn is None, \
             "paged engine runs real decode; simulated instances script it"
-        self._params = None
-        self._version = -1
+        # the paged engine's set_params asserts decode quiescence, so its
+        # flips are DEFERRED to the scheduler's boundary (after the queue
+        # drain) instead of landing from the stream thread
+        self.store = VersionedParamStore(
+            name=f"inst{inst_id}",
+            on_flip=(None if paged_engine is None else paged_engine.set_params),
+            defer_flip=paged_engine is not None)
         self._lock = threading.Lock()  # one request in flight per instance
         self.busy_time = 0.0
 
     def sync_weights(self, params, version: int) -> None:
-        # device_put models the trainer -> rollout-worker weight broadcast
-        self._params = jax.tree.map(jax.device_put, params)
-        self._version = version
-        if self.paged_engine is not None:
-            self.paged_engine.set_params(self._params)
+        """Eager whole-tree publish (legacy path; the RL scheduler streams
+        buckets through the weight-plane service instead)."""
+        self.store.install(params, version)
 
     @property
     def version(self) -> int:
-        return self._version
+        return self.store.version
 
-    def generate_group(self, prompts: List[np.ndarray], key) -> tuple:
-        """Returns (RolloutBatch, weight_version)."""
+    def generate_group(self, prompts: List[np.ndarray], key,
+                       min_version: Optional[int] = None) -> tuple:
+        """Returns (RolloutBatch, weight_version).
+
+        ``min_version`` is the rollout-side half of the weight-plane's
+        version gate: the request blocks until the store's ACTIVE buffer
+        holds at least that version, so overlapped bucket streaming can
+        never hand an iteration-t request pre-flip weights. The (params,
+        version) pair is one atomic snapshot — the version returned is
+        provably the version sampled from."""
         if self.paged_engine is not None:
-            return self._generate_group_paged(prompts, key)
+            return self._generate_group_paged(prompts, key, min_version)
         # group-at-a-time: serialised per instance — models single-instance
         # occupancy / continuous batching slot limits.
         with self._lock:
+            # gate BEFORE the busy clock starts: time blocked waiting for
+            # the weight flip is the boundary's sync-gap, not inference
+            # occupancy — folding it into busy_time would contaminate
+            # IterationStats.infer_time exactly the way producer waits
+            # were once folded into train_time
+            params, version = self.store.wait_version(min_version)
             t0 = time.perf_counter()
-            version = self._version
             if self.scripted_fn is not None:
                 out = self.scripted_fn(prompts, key)
                 if self.latency_fn is not None:
                     time.sleep(self.latency_fn(out))
             else:
-                assert self.sampler is not None and self._params is not None
-                out = self.sampler.generate(self._params, prompts, key)
+                assert self.sampler is not None and params is not None
+                out = self.sampler.generate(params, prompts, key)
                 jax.block_until_ready(out.response_ids)
             self.busy_time += time.perf_counter() - t0
             return out, version
 
-    def _generate_group_paged(self, prompts: List[np.ndarray], key) -> tuple:
+    def _generate_group_paged(self, prompts: List[np.ndarray], key,
+                              min_version: Optional[int] = None) -> tuple:
         """Token-level path: submit the group, then help drive the shared
         engine until it completes. Concurrent callers' groups share decode
         steps — the engine lock serialises single steps, not whole groups."""
@@ -97,7 +122,9 @@ class InferenceInstance:
         assert all(np.array_equal(p, prompts[0]) for p in prompts[1:]), \
             "paged engine serves GRPO groups: all prompts in a group must " \
             "be identical (heterogeneous requests go through separate groups)"
-        version = self._version
+        # the engine holds the flipped params; set_params asserts quiescence,
+        # so the version cannot change while this group is in flight
+        _, version = self.store.wait_version(min_version)
         handle = eng.submit(prompts[0], key)
         while not handle.done():
             with self._lock:
@@ -135,11 +162,13 @@ class InferencePool:
             return inst
 
     def sync_weights(self, params, version: int) -> None:
+        """Eager per-instance publish (legacy/tests; the scheduler's
+        boundary goes through ``WeightTransferService.ensure``)."""
         for inst in self.instances:
             inst.sync_weights(params, version)
 
-    def generate_group(self, prompts, key):
-        return self.pick().generate_group(prompts, key)
+    def generate_group(self, prompts, key, min_version: Optional[int] = None):
+        return self.pick().generate_group(prompts, key, min_version)
 
     def reset_stats(self) -> None:
         for inst in self.instances:

@@ -55,7 +55,12 @@ class TemporaryDataGenerator:
             problem, prompt_ids = item
             prompts = [prompt_ids] * self.group_size          # G rollouts/group
             try:
-                out, version = self.pool.generate_group(prompts, key)
+                # version gate (DESIGN.md §Weight-plane): the request blocks
+                # until the instance's active buffer holds at least the
+                # iteration's weights, so overlapped bucket streaming can
+                # never serve pre-flip params to this batch
+                out, version = self.pool.generate_group(
+                    prompts, key, min_version=weight_version)
                 resp = np.asarray(out.response_ids)
                 lens = np.asarray(out.response_len)
                 lps = getattr(out, "response_logprobs", None)

@@ -34,6 +34,7 @@ from repro.core.trimodel import TriModelState
 from repro.optim.accumulate import GradAccumulator
 from repro.rl.grpo import (MicroBatch, group_advantages, make_apply_update,
                            make_grad_step, make_grad_step_captured)
+from repro.transfer.service import WeightTransferService
 
 
 @dataclasses.dataclass
@@ -79,7 +80,8 @@ def _pad_rows(mb: MicroBatch, m: int) -> MicroBatch:
 class PeriodicAsyncScheduler:
     def __init__(self, cfg: ModelConfig, rl: RLConfig, tri: TriModelState,
                  generator: TemporaryDataGenerator, queue: RolloutQueue,
-                 loader, *, num_devices: int = 1):
+                 loader, *, num_devices: int = 1,
+                 transfer: Optional[WeightTransferService] = None):
         self.cfg = cfg
         self.rl = rl
         self.tri = tri
@@ -87,6 +89,16 @@ class PeriodicAsyncScheduler:
         self.queue = queue
         self.loader = loader
         self.num_devices = num_devices
+        # the weight-plane (DESIGN.md §Weight-plane): versioned bucket
+        # streaming trainer -> pool, replacing the old serial per-instance
+        # whole-tree pool.sync_weights at the boundary
+        self.transfer = transfer if transfer is not None else \
+            WeightTransferService(
+                generator.pool,
+                bucket_bytes=rl.transfer_bucket_bytes,
+                wire_dtype=rl.transfer_wire_dtype or None,
+                use_pallas_cast=rl.transfer_pallas_cast,
+                overlap=rl.transfer_overlap)
         self.grad_step = make_grad_step(cfg, rl)
         self.grad_step_captured = make_grad_step_captured(cfg, rl)
         # micro-step accounting: captured = ratio from rollout-time behavior
@@ -180,6 +192,44 @@ class PeriodicAsyncScheduler:
         jax.block_until_ready(jax.tree.leaves(new_params)[0])
         self.tri.apply_update(new_params, new_opt)   # line 11
         self._train_busy += time.perf_counter() - t0
+        # overlap: start streaming the NEW version's buckets to the pool's
+        # back buffers the moment the update materialises — the wire time
+        # hides under the iteration tail instead of extending the next
+        # boundary; flips stay version-gated (no-op when overlap is off)
+        self.transfer.publish_async(self.tri.policy, self.tri.version)
+
+    def _sync_boundary(self, submit) -> None:
+        """THE iteration boundary (Algorithm 1 lines 3 + 10) — the one
+        place the Proposition-1 invariant 'rollout weights == old-policy
+        weights' is established: drain (strict modes), dispatch the
+        iteration's submissions, flip every instance to the policy's
+        version via the weight-plane barrier, then old <- policy. The
+        residual block time is the pool's sync-gap
+        (``IterationStats.metrics['sync_gap']``).
+
+        ``submit`` runs BETWEEN the drain and the flip barrier: every
+        request it dispatches version-gates on ``tri.version``, so
+        correctness never depends on flip-before-submit ordering — and the
+        stream tail overlaps the generator's worker spin-up instead of
+        extending the boundary. Paged engines stay quiescent through their
+        deferred flip because the gates hold every new request back until
+        the flip lands."""
+        if self.rl.mode in ("sync", "async"):
+            # Algorithm 1 line 3: wait until Q empty BEFORE submitting
+            # (a new submission registers pending groups) and before the
+            # weights move — also guarantees paged engines are quiescent
+            # for their deferred flips
+            self.queue.wait_empty()
+        submit()
+        flipped = self.transfer.ensure(self.tri.policy, self.tri.version)
+        # Algorithm 1 line 10 at the BOUNDARY, before training: old <-
+        # policy == the weights just flipped to the pool, so old-policy
+        # weights equal rollout weights at consumption (Proposition 1's
+        # equality — refreshing at iteration END left old one optimizer
+        # step stale during iteration t's grad steps; see DESIGN.md
+        # §Tri-model-capture). The flipped version is passed through so
+        # the equality is asserted, not assumed.
+        self.tri.refresh_old(expected_rollout_version=flipped)
 
     # ------------------------------------------------------------------
     def run(self, num_iterations: int, *, key=None) -> List[IterationStats]:
@@ -228,21 +278,14 @@ class PeriodicAsyncScheduler:
                 self.monitor.max_staleness_seen = 0
 
                 if mode in ("sync", "async"):
-                    # Algorithm 1 line 3: wait until Q empty, sync weights
-                    self.queue.wait_empty()
-                    pool.sync_weights(self.tri.policy, self.tri.version)
-                    # Algorithm 1 line 10 at the BOUNDARY, before training:
-                    # old <- policy == the weights just synced to the pool,
-                    # so old-policy weights equal rollout weights at
-                    # consumption (Proposition 1's equality — refreshing at
-                    # iteration END left old one optimizer step stale
-                    # during iteration t's grad steps; see DESIGN.md
-                    # §Tri-model-capture)
-                    self.tri.refresh_old()
-                    key, k_t = jax.random.split(key)
-                    self.generator.submit_batch(batches[t], k_t,
-                                                self.tri.version)
-                    next_submit = t + 1
+                    def submit():
+                        nonlocal key, next_submit
+                        key, k_t = jax.random.split(key)
+                        self.generator.submit_batch(batches[t], k_t,
+                                                    self.tri.version)
+                        next_submit = t + 1
+
+                    self._sync_boundary(submit)
                     n_expect = len(batches[t])
                     if mode == "sync":
                         self.generator.join()        # full-batch barrier
@@ -261,14 +304,16 @@ class PeriodicAsyncScheduler:
                             rewards_seen.extend(g.rewards.tolist())
                             trained_tokens += self._train_group(g, acc)
                 else:  # async_offpolicy (AReaL-like, staleness <= eta)
-                    pool.sync_weights(self.tri.policy, self.tri.version)
-                    self.tri.refresh_old()           # line 10 at boundary
-                    while (next_submit <= t + eta
-                           and next_submit < len(batches)):
-                        key, k_t = jax.random.split(key)
-                        self.generator.submit_batch(batches[next_submit],
-                                                    k_t, self.tri.version)
-                        next_submit += 1
+                    def submit():
+                        nonlocal key, next_submit
+                        while (next_submit <= t + eta
+                               and next_submit < len(batches)):
+                            key, k_t = jax.random.split(key)
+                            self.generator.submit_batch(
+                                batches[next_submit], k_t, self.tri.version)
+                            next_submit += 1
+
+                    self._sync_boundary(submit)
                     for _ in range(len(batches[t])):
                         g = self.queue.get()
                         self.monitor.check(g, self.tri.version)
@@ -294,7 +339,9 @@ class PeriodicAsyncScheduler:
                                  if rewards_seen else 0.0),
                     tpspd=trained_tokens / wall / self.num_devices,
                     max_staleness=self.monitor.max_staleness_seen,
-                    metrics={})
+                    # boundary sync-gap: time the pool sat idle waiting for
+                    # this iteration's weight flip (weight-plane barrier)
+                    metrics={"sync_gap": self.transfer.last_gap})
                 self.history.append(stats)
                 consumed_upto = t + 1
         except BaseException:
@@ -309,5 +356,18 @@ class PeriodicAsyncScheduler:
             # after an error it is diagnostic only (run() refuses re-entry)
             self._inflight = batches[consumed_upto:next_submit]
             self._key = key
+            # join any background bucket stream BEFORE unwinding — a
+            # daemon thread mid-device_put at interpreter teardown aborts
+            # the runtime. On the happy path a failed stream's error
+            # surfaces here AND poisons re-entry (groups of in-flight
+            # eta-lookahead batches may already be queued — resubmitting
+            # them would double-train); when already unwinding, the
+            # original exception wins.
+            try:
+                self.transfer.drain()
+            except Exception:
+                if not self._failed:
+                    self._failed = True
+                    raise
         self.generator.join()
         return self.history[start:]

@@ -14,7 +14,7 @@ iteration t trains (see DESIGN.md §Tri-model-capture).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 
@@ -35,9 +35,20 @@ class TriModelState:
         return cls(policy=params, old=copy(params), ref=copy(params),
                    opt=adam_init(params), version=0)
 
-    def refresh_old(self) -> None:
+    def refresh_old(self, expected_rollout_version: Optional[int] = None
+                    ) -> None:
         """Algorithm 1 line 10: old <- policy (pre-update). Called at the
-        iteration boundary, after the pool weight sync (see module doc)."""
+        iteration boundary, after the pool weight sync (see module doc).
+
+        ``expected_rollout_version`` is the version the weight-plane just
+        flipped the pool to; passing it turns the boundary invariant
+        "rollout weights == old-policy weights" into an assertion — if the
+        pool serves any other version, old <- policy would NOT equal the
+        behavior weights and Proposition 1's equality breaks."""
+        assert (expected_rollout_version is None
+                or expected_rollout_version == self.version), \
+            f"boundary invariant broken: pool flipped to version " \
+            f"{expected_rollout_version} but policy holds {self.version}"
         self.old = self.policy
 
     def apply_update(self, new_params, new_opt) -> None:

@@ -9,6 +9,7 @@ from typing import Optional
 
 import jax
 
+from repro.kernels.transfer_cast import transfer_cast as _transfer_cast
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.decode_attention import paged_decode_attention as _paged
 from repro.kernels.decode_attention import (paged_mla_decode_attention
@@ -66,5 +67,13 @@ def paged_mla_decode_attention(q, ckv_pages, kr_pages, pos_pages, page_table,
                       interpret=itp)
 
 
+def transfer_cast(x, dtype, *, block_rows: int = 256,
+                  interpret: Optional[bool] = None):
+    """Fused cast+copy for the weight-plane wire path (transfer_cast.py)."""
+    itp = auto_interpret() if interpret is None else interpret
+    return _transfer_cast(x, dtype, block_rows=block_rows, interpret=itp)
+
+
 __all__ = ["spa_attention", "decode_attention", "paged_decode_attention",
-           "paged_mla_decode_attention", "block_map", "auto_interpret"]
+           "paged_mla_decode_attention", "block_map", "auto_interpret",
+           "transfer_cast"]

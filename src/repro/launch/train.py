@@ -31,6 +31,7 @@ from repro.data.tokenizer import Tokenizer
 from repro.models import init
 from repro.rl.reward import RuleBasedReward
 from repro.rl.rollout import Sampler
+from repro.transfer.service import WeightTransferService
 
 
 def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
@@ -79,10 +80,27 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
     queue = RolloutQueue()
     gen = TemporaryDataGenerator(pool, queue, RuleBasedReward(tok),
                                  rl.group_size)
-    sched = PeriodicAsyncScheduler(cfg, rl, tri, gen, queue, loader)
+    # the weight-plane (DESIGN.md §Weight-plane): when a mesh is installed
+    # the reshard plan carries trainer-profile -> inference-profile
+    # (infer_tp: TP-sharded, data-replicated) placements per leaf; on a
+    # single device both spec trees resolve to unplaced device_puts.
+    from repro.sharding.specs import current_mesh, param_specs, \
+        param_specs_for_profile
+    mesh = current_mesh()
+    transfer = WeightTransferService(
+        pool,
+        bucket_bytes=rl.transfer_bucket_bytes,
+        wire_dtype=rl.transfer_wire_dtype or None,
+        use_pallas_cast=rl.transfer_pallas_cast,
+        overlap=rl.transfer_overlap,
+        src_specs=None if mesh is None else param_specs(params, mesh),
+        dst_specs=None if mesh is None else param_specs_for_profile(
+            params, mesh, "infer_tp"))
+    sched = PeriodicAsyncScheduler(cfg, rl, tri, gen, queue, loader,
+                                   transfer=transfer)
     return sched, {"tokenizer": tok, "task": task, "loader": loader,
                    "pool": pool, "queue": queue, "generator": gen,
-                   "tri": tri}
+                   "tri": tri, "transfer": transfer}
 
 
 def main() -> None:
@@ -110,6 +128,19 @@ def main() -> None:
                          "recomputes old-policy logprobs via the stacked "
                          "old+ref tri-model forward (DESIGN.md "
                          "§Tri-model-capture)")
+    ap.add_argument("--no-transfer-overlap", action="store_true",
+                    help="disable weight-plane overlap: publish+flip "
+                         "eagerly inside the iteration boundary instead of "
+                         "streaming buckets under the trainer's iteration "
+                         "tail (DESIGN.md §Weight-plane)")
+    ap.add_argument("--transfer-bucket-bytes", type=int, default=1 << 22,
+                    help="wire bytes coalesced per weight-plane bucket")
+    ap.add_argument("--transfer-wire-dtype", default="",
+                    choices=["", "bfloat16", "float32"],
+                    help="weight-plane payload dtype ('' = storage dtype, "
+                         "bitwise)")
+    ap.add_argument("--transfer-pallas-cast", action="store_true",
+                    help="wire cast via the Pallas fused cast+copy kernel")
     ap.add_argument("--spa", action="store_true",
                     help="enable shared-prompt attention packing")
     ap.add_argument("--spa-align", type=int, default=0,
@@ -136,7 +167,11 @@ def main() -> None:
         shared_prompt_attention=args.spa, spa_align=args.spa_align,
         rollout_engine=args.rollout_engine, cbatch_slots=args.cbatch_slots,
         kv_page_size=args.kv_page_size,
-        capture_logprobs=not args.no_capture_logprobs, seed=args.seed)
+        capture_logprobs=not args.no_capture_logprobs,
+        transfer_overlap=not args.no_transfer_overlap,
+        transfer_bucket_bytes=args.transfer_bucket_bytes,
+        transfer_wire_dtype=args.transfer_wire_dtype,
+        transfer_pallas_cast=args.transfer_pallas_cast, seed=args.seed)
 
     from repro.sharding.specs import set_profile
     set_profile(args.profile)

@@ -89,6 +89,19 @@ _PROFILES = {
         "expert_data": ("data",),
         "seq": (),
     },
+    # inference-pool profile (the weight-plane's destination layout —
+    # DESIGN.md §Weight-plane): weights TP-sharded on the model axis and
+    # REPLICATED across data (data -> ()), so decode pays zero FSDP
+    # gathers; activations batch-sharded. The trainer keeps its FSDP
+    # profile — repro.transfer reshards leaf-by-leaf in flight.
+    "infer_tp": {
+        "batch": ("pod", "data"),
+        "data": (),
+        "model": ("model",),
+        "expert": ("data",),
+        "expert_data": ("data",),
+        "seq": (),
+    },
 }
 
 
@@ -107,6 +120,28 @@ def set_profile(name: str) -> None:
 
 def current_profile_map() -> dict:
     return dict(LOGICAL_TO_MESH)
+
+
+@contextlib.contextmanager
+def use_profile(name: str):
+    """Temporarily install a sharding profile (restores the previous live
+    mapping on exit) — used to resolve param specs under a profile other
+    than the active one, e.g. the weight-plane computing its destination
+    (inference) layout while the trainer profile stays installed."""
+    prev = dict(LOGICAL_TO_MESH)
+    set_profile(name)
+    try:
+        yield
+    finally:
+        LOGICAL_TO_MESH.clear()
+        LOGICAL_TO_MESH.update(prev)
+
+
+def param_specs_for_profile(params, mesh: Mesh, profile: str):
+    """NamedSharding pytree for ``params`` as profile ``profile`` would
+    place it — the src/dst spec trees a reshard plan is built from."""
+    with use_profile(profile):
+        return param_specs(params, mesh)
 
 
 def set_mesh(mesh: Optional[Mesh]) -> None:

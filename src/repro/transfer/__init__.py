@@ -1,0 +1,19 @@
+"""Weight-plane: versioned, resharding, overlap-capable trainer->pool
+parameter transfer (DESIGN.md §Weight-plane).
+
+    build_plan  -> per-leaf reshard plan coalesced into wire buckets
+    VersionedParamStore -> per-instance double buffer, atomic (params,
+                           version) flips
+    WeightTransferService -> publish / publish_async / ensure (the
+                             iteration-boundary barrier + sync-gap meter)
+"""
+from repro.transfer.plan import (Bucket, LeafPlan, TransferPlan, build_plan,
+                                 flatten_with_keys, pack_bucket,
+                                 unpack_bucket)
+from repro.transfer.service import VersionedParamStore, WeightTransferService
+
+__all__ = [
+    "Bucket", "LeafPlan", "TransferPlan", "build_plan", "flatten_with_keys",
+    "pack_bucket", "unpack_bucket",
+    "VersionedParamStore", "WeightTransferService",
+]

@@ -1,0 +1,186 @@
+"""Reshard plans: per-leaf trainer->pool transfer descriptions, coalesced
+into fixed-size buckets (the weight-plane's unit of streaming).
+
+The trainer and the inference pool hold the SAME parameter pytree under
+DIFFERENT sharding layouts (e.g. trainer FSDP/DP profile vs inference
+TP/replicated profile — see ``sharding/specs.py`` profiles). A
+:class:`TransferPlan` records, per leaf, the source and destination
+placements plus the wire dtype, and groups leaves into buckets of at most
+``bucket_bytes`` wire bytes so the iteration-boundary weight push is a
+stream of bounded chunks rather than one whole-tree op:
+
+  * a chunk can be in flight while the previous one is still landing
+    (the service overlaps buckets with the trainer's iteration tail);
+  * a destination flips to the new version only once EVERY bucket of that
+    version has landed — partial trees are never observable.
+
+Leaves larger than ``bucket_bytes`` get a bucket of their own (they are
+never split: a leaf is the atomic unit of the device_put reshard).
+
+Packing is value-preserving by default (``wire_dtype=None`` streams the
+storage dtype — pushed params are bitwise-identical to the source tree).
+An explicit ``wire_dtype`` (e.g. bf16 payload while fp32 master weights
+stay trainer-side) casts on pack and re-casts on unpack; the plan records
+both dtypes so the destination always materialises the storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def flatten_with_keys(tree) -> Tuple[List[str], list, "jax.tree_util.PyTreeDef"]:
+    """(path keys, leaves, treedef) with checkpoint-compatible path keys."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys, leaves = [], []
+    for path, leaf in flat:
+        keys.append(_SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path))
+        leaves.append(leaf)
+    return keys, leaves, treedef
+
+
+def _dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    key: str                      # pytree path (checkpoint-style)
+    index: int                    # position in tree_flatten order
+    shape: tuple
+    dtype: str                    # storage dtype (destination materialises this)
+    wire_dtype: str               # dtype on the wire (== dtype unless casting)
+    wire_bytes: int
+    src_spec: Optional[object]    # NamedSharding / None (trainer placement)
+    dst_spec: Optional[object]    # NamedSharding / None (pool placement)
+
+    @property
+    def resharded(self) -> bool:
+        """True when source and destination placements differ — the leaf
+        changes layout in flight (FSDP shard -> TP/replicated, etc.)."""
+        s = getattr(self.src_spec, "spec", self.src_spec)
+        d = getattr(self.dst_spec, "spec", self.dst_spec)
+        return s != d
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    bid: int
+    indices: Tuple[int, ...]      # leaf indices (tree_flatten order)
+    wire_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferPlan:
+    leaves: Tuple[LeafPlan, ...]
+    buckets: Tuple[Bucket, ...]
+    treedef: object
+    total_wire_bytes: int
+
+    @property
+    def num_resharded(self) -> int:
+        return sum(1 for l in self.leaves if l.resharded)
+
+    def describe(self) -> dict:
+        sizes = [b.wire_bytes for b in self.buckets]
+        return {"leaves": len(self.leaves), "buckets": len(self.buckets),
+                "total_wire_bytes": self.total_wire_bytes,
+                "max_bucket_bytes": max(sizes) if sizes else 0,
+                "resharded_leaves": self.num_resharded}
+
+
+def build_plan(params, *, bucket_bytes: int,
+               src_specs=None, dst_specs=None,
+               wire_dtype: Optional[str] = None) -> TransferPlan:
+    """Compute the per-leaf plan and coalesce into buckets.
+
+    ``src_specs`` / ``dst_specs`` are pytrees of placements matching
+    ``params`` (e.g. from ``sharding.specs.param_specs`` under the trainer
+    and inference profiles); either may be None (single-device / unplaced).
+    Bucketing is greedy first-fit in tree-flatten order, so the bucket list
+    is a pure function of (tree structure, shapes, dtypes, bucket_bytes) —
+    source and destination always agree on it.
+    """
+    assert bucket_bytes > 0, "bucket_bytes must be positive"
+    keys, leaves, treedef = flatten_with_keys(params)
+    src_flat = (flatten_with_keys(src_specs)[1] if src_specs is not None
+                else [None] * len(leaves))
+    dst_flat = (flatten_with_keys(dst_specs)[1] if dst_specs is not None
+                else [None] * len(leaves))
+    assert len(src_flat) == len(leaves) and len(dst_flat) == len(leaves), \
+        "spec trees must match the param tree structure"
+
+    plans: List[LeafPlan] = []
+    for i, (k, leaf) in enumerate(zip(keys, leaves)):
+        storage = str(jnp.asarray(leaf).dtype)
+        wire = wire_dtype or storage
+        nbytes = int(np.prod(leaf.shape, dtype=np.int64)) * _dtype_bytes(wire) \
+            if leaf.shape else _dtype_bytes(wire)
+        plans.append(LeafPlan(key=k, index=i, shape=tuple(leaf.shape),
+                              dtype=storage, wire_dtype=wire,
+                              wire_bytes=nbytes, src_spec=src_flat[i],
+                              dst_spec=dst_flat[i]))
+
+    buckets: List[Bucket] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    for lp in plans:
+        if cur and cur_bytes + lp.wire_bytes > bucket_bytes:
+            buckets.append(Bucket(len(buckets), tuple(cur), cur_bytes))
+            cur, cur_bytes = [], 0
+        cur.append(lp.index)
+        cur_bytes += lp.wire_bytes
+    if cur:
+        buckets.append(Bucket(len(buckets), tuple(cur), cur_bytes))
+
+    return TransferPlan(leaves=tuple(plans), buckets=tuple(buckets),
+                        treedef=treedef,
+                        total_wire_bytes=sum(l.wire_bytes for l in plans))
+
+
+# --------------------------------------------------------------------------
+# pack / unpack — the per-bucket wire operations
+# --------------------------------------------------------------------------
+
+def pack_bucket(plan: TransferPlan, leaves: Sequence, bucket: Bucket,
+                *, cast_fn: Optional[Callable] = None) -> list:
+    """Source side: the bucket's leaves as wire arrays (cast to the wire
+    dtype when the plan says so; identity otherwise — bitwise pass-through).
+    ``cast_fn(x, dtype)`` defaults to ``x.astype``; the Pallas fused
+    cast+copy kernel (``kernels/transfer_cast.py``) slots in here."""
+    out = []
+    for i in bucket.indices:
+        lp = plan.leaves[i]
+        x = leaves[i]
+        if lp.wire_dtype != lp.dtype:
+            x = (cast_fn(x, lp.wire_dtype) if cast_fn is not None
+                 else jnp.asarray(x).astype(lp.wire_dtype))
+        out.append(x)
+    return out
+
+
+def unpack_bucket(plan: TransferPlan, bucket: Bucket, arrays: Sequence
+                  ) -> List[Tuple[int, jax.Array]]:
+    """Destination side: restore storage dtype and apply the destination
+    placement. Returns [(leaf index, placed array)] — the store splices
+    these into its staging buffer. The device_put against ``dst_spec`` IS
+    the reshard: XLA moves only the shards each destination device needs.
+    """
+    out = []
+    for i, x in zip(bucket.indices, arrays):
+        lp = plan.leaves[i]
+        x = jnp.asarray(x)
+        if lp.wire_dtype != lp.dtype:
+            x = x.astype(lp.dtype)
+        x = jax.device_put(x, lp.dst_spec) if lp.dst_spec is not None \
+            else jax.device_put(x)
+        out.append((i, x))
+    return out

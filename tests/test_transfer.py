@@ -1,0 +1,498 @@
+"""Weight-plane tests (DESIGN.md §Weight-plane).
+
+Covers the transfer subsystem end to end: reshard-plan bucketing and
+bitwise round-trip (trainer profile -> inference profile), the Pallas
+fused cast+copy wire kernel vs the pure-JAX cast, the versioned
+double-buffered store's atomicity (torn-read regression), rollout version
+gating, overlap-vs-eager param-trajectory identity, and the
+checkpoint <-> weight-plane resume round-trip.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.checkpoint import load_tri, save_tri
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig
+from repro.core.engine import InferenceInstance
+from repro.launch.train import build_pipeline
+from repro.models import init
+from repro.rl.rollout import Sampler
+from repro.sharding.specs import param_specs_for_profile
+from repro.transfer import (VersionedParamStore, WeightTransferService,
+                            build_plan, flatten_with_keys, pack_bucket,
+                            unpack_bucket)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_config(get_config("llama3.2-3b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init(jax.random.PRNGKey(0), cfg)
+
+
+def _assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def _rl(**kw) -> RLConfig:
+    base = dict(mode="async", batch_prompts=2, group_size=4, micro_batch=2,
+                num_inference_instances=2, max_prompt_len=32,
+                max_response_len=12, learning_rate=1e-3, seed=0)
+    base.update(kw)
+    return RLConfig(**base)
+
+
+# =========================================================================
+# reshard plans + bucketing
+# =========================================================================
+
+def test_bucketing_covers_every_leaf_once(params):
+    plan = build_plan(params, bucket_bytes=32 << 10)
+    seen = [i for b in plan.buckets for i in b.indices]
+    assert sorted(seen) == list(range(len(plan.leaves)))
+    for b in plan.buckets:
+        assert b.wire_bytes == sum(plan.leaves[i].wire_bytes
+                                   for i in b.indices)
+        # a bucket only exceeds the cap when a single leaf does
+        assert b.wire_bytes <= 32 << 10 or len(b.indices) == 1
+    assert plan.total_wire_bytes == sum(l.wire_bytes for l in plan.leaves)
+
+
+def test_bucketing_deterministic(params):
+    p1 = build_plan(params, bucket_bytes=16 << 10)
+    p2 = build_plan(params, bucket_bytes=16 << 10)
+    assert [b.indices for b in p1.buckets] == [b.indices for b in p2.buckets]
+
+
+def test_oversize_leaf_gets_own_bucket():
+    tree = {"big": jnp.zeros((1024,), jnp.float32),
+            "s1": jnp.zeros((4,), jnp.float32),
+            "s2": jnp.zeros((4,), jnp.float32)}
+    plan = build_plan(tree, bucket_bytes=256)
+    big = [b for b in plan.buckets
+           if any(plan.leaves[i].key == "big" for i in b.indices)]
+    assert len(big) == 1 and len(big[0].indices) == 1
+
+
+def _push_through(plan, src_tree):
+    """Stream every bucket of ``src_tree`` and rebuild the dest tree."""
+    leaves = flatten_with_keys(src_tree)[1]
+    slots = [None] * len(leaves)
+    for b in plan.buckets:
+        for i, arr in unpack_bucket(plan, b, pack_bucket(plan, leaves, b)):
+            slots[i] = arr
+    return jax.tree_util.tree_unflatten(plan.treedef, slots)
+
+
+def test_reshard_roundtrip_bitwise(params):
+    """Acceptance (a): params pushed through trainer-spec -> inference-spec
+    buckets are bitwise-identical to the source tree."""
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    src = param_specs_for_profile(params, mesh, "baseline")
+    dst = param_specs_for_profile(params, mesh, "infer_tp")
+    plan = build_plan(params, bucket_bytes=64 << 10,
+                      src_specs=src, dst_specs=dst)
+    # the two profiles place FSDP-stored weights differently, so the plan
+    # must actually reshard some leaves — otherwise this test proves nothing
+    assert plan.num_resharded > 0
+    _assert_trees_bitwise(params, _push_through(plan, params))
+
+
+def test_roundtrip_bitwise_no_mesh(params):
+    plan = build_plan(params, bucket_bytes=8 << 10)
+    _assert_trees_bitwise(params, _push_through(plan, params))
+
+
+# =========================================================================
+# wire cast: Pallas fused cast+copy vs pure-JAX
+# =========================================================================
+
+@pytest.mark.parametrize("shape", [(257, 33), (5,), (16, 128), (1, 1)])
+@pytest.mark.parametrize("src,dst", [("float32", "bfloat16"),
+                                     ("bfloat16", "float32")])
+def test_pallas_cast_matches_jax(shape, src, dst):
+    """Acceptance (c): the Pallas cast kernel matches the pure-JAX path."""
+    from repro.kernels.ops import transfer_cast
+    x = (jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32) * 7.3
+         ).astype(src)
+    got = transfer_cast(x, dst)
+    want = x.astype(dst)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_wire_cast_roundtrip_matches_astype():
+    """fp32 masters, bf16 payload: the pushed tree equals the pure
+    astype(bf16).astype(f32) reference, Pallas and JAX cast paths alike."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(1), (130, 7),
+                                   jnp.float32),
+            "b": jax.random.normal(jax.random.PRNGKey(2), (11,),
+                                   jnp.float32)}
+    want = jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(jnp.float32),
+                        tree)
+    plan = build_plan(tree, bucket_bytes=1 << 20, wire_dtype="bfloat16")
+    _assert_trees_bitwise(want, _push_through(plan, tree))
+    from repro.kernels.ops import transfer_cast
+    leaves = flatten_with_keys(tree)[1]
+    slots = [None] * len(leaves)
+    for b in plan.buckets:
+        wire = pack_bucket(plan, leaves, b, cast_fn=transfer_cast)
+        for i, arr in unpack_bucket(plan, b, wire):
+            slots[i] = arr
+    _assert_trees_bitwise(want, jax.tree_util.tree_unflatten(plan.treedef,
+                                                             slots))
+
+
+# =========================================================================
+# versioned store: staged delivery, atomic flips
+# =========================================================================
+
+def _tiny_tree(v: float):
+    return {"a": jnp.full((8,), v, jnp.float32),
+            "b": jnp.full((3, 3), v + 0.5, jnp.float32)}
+
+
+def test_store_partial_delivery_invisible():
+    store = VersionedParamStore()
+    store.install(_tiny_tree(0.0), 0)
+    tree = _tiny_tree(1.0)
+    plan = build_plan(tree, bucket_bytes=16)      # forces >= 2 buckets
+    assert len(plan.buckets) >= 2
+    leaves = flatten_with_keys(tree)[1]
+    store.begin(1, plan)
+    b0 = plan.buckets[0]
+    done = store.deliver(b0, unpack_bucket(plan, b0,
+                                           pack_bucket(plan, leaves, b0)))
+    assert not done and store.staged_version is None
+    # the active pair is untouched mid-stream
+    p, v = store.snapshot()
+    assert v == 0 and float(p["a"][0]) == 0.0
+    with pytest.raises(AssertionError):
+        store.flip()                              # incomplete staging
+    for b in plan.buckets[1:]:
+        done = store.deliver(b, unpack_bucket(plan, b,
+                                              pack_bucket(plan, leaves, b)))
+    assert done and store.staged_version == 1
+    assert store.flip() == 1
+    p, v = store.snapshot()
+    assert v == 1 and float(p["a"][0]) == 1.0
+
+
+def test_store_rejects_stale_begin_and_double_deliver():
+    store = VersionedParamStore()
+    store.install(_tiny_tree(0.0), 5)
+    tree = _tiny_tree(1.0)
+    plan = build_plan(tree, bucket_bytes=1 << 20)
+    with pytest.raises(AssertionError):
+        store.begin(5, plan)                      # not newer than active
+    store.begin(6, plan)
+    leaves = flatten_with_keys(tree)[1]
+    b0 = plan.buckets[0]
+    placed = unpack_bucket(plan, b0, pack_bucket(plan, leaves, b0))
+    store.deliver(b0, placed)
+    with pytest.raises(AssertionError):
+        store.deliver(b0, placed)
+
+
+def test_store_snapshot_pair_never_tears():
+    """Hammer flips from one thread while readers snapshot: the (params,
+    version) pair must always belong together (params carry their version
+    as content)."""
+    store = VersionedParamStore()
+    store.install(_tiny_tree(0.0), 0)
+    stop = threading.Event()
+    errs = []
+
+    def flipper():
+        for v in range(1, 60):
+            store.install(_tiny_tree(float(v)), v)
+        stop.set()
+
+    def reader():
+        while not stop.is_set():
+            p, v = store.snapshot()
+            if float(p["a"][0]) != float(v):
+                errs.append((float(p["a"][0]), v))
+
+    threads = [threading.Thread(target=flipper)] + \
+        [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, f"torn (params, version) pairs observed: {errs[:5]}"
+
+
+def test_instance_torn_read_regression(cfg):
+    """Satellite: the old ``sync_weights`` mutated ``_params``/``_version``
+    without the request lock, so ``generate_group`` could read version i
+    then sample with version i+1 params. Provoke the interleaving: hammer
+    weight flips while groups generate, and require every returned batch's
+    TOKENS to match the params of its returned VERSION (greedy decode, two
+    distinguishable weight sets)."""
+    sampler = Sampler(cfg, 16, 6, temperature=0.0, capture_logprobs=False)
+    p0 = init(jax.random.PRNGKey(0), cfg)
+    p1 = init(jax.random.PRNGKey(1), cfg)
+    prompts = [np.asarray([3, 9, 4], np.int32)] * 2
+    key = jax.random.PRNGKey(7)
+    expected = {0: np.asarray(sampler.generate(p0, prompts, key).response_ids),
+                1: np.asarray(sampler.generate(p1, prompts, key).response_ids)}
+    assert not np.array_equal(expected[0], expected[1]), \
+        "seeds produced indistinguishable weights; pick different seeds"
+    inst = InferenceInstance(0, cfg, sampler)
+    inst.sync_weights(p0, 0)
+    stop = threading.Event()
+
+    def flipper():
+        v = 1
+        while not stop.is_set():
+            inst.sync_weights(p1 if v % 2 else p0, v)
+            v += 1
+            time.sleep(0.001)
+
+    th = threading.Thread(target=flipper, daemon=True)
+    th.start()
+    try:
+        for _ in range(12):
+            out, v = inst.generate_group(prompts, key)
+            np.testing.assert_array_equal(
+                np.asarray(out.response_ids), expected[v % 2],
+                err_msg=f"tokens sampled from a different version than {v}")
+    finally:
+        stop.set()
+        th.join()
+
+
+def test_version_gate_blocks_until_flip(cfg):
+    """A request for iteration i's weights must wait for version i's flip
+    rather than sample pre-flip params."""
+    inst = InferenceInstance(
+        0, cfg, sampler=None,
+        scripted_fn=lambda p, k: ("served", inst.store.version))
+    inst.sync_weights(_tiny_tree(0.0), 0)
+    got = {}
+
+    def request():
+        got["out"], got["version"] = inst.generate_group(
+            [np.zeros(2, np.int32)], jax.random.PRNGKey(0), min_version=2)
+
+    th = threading.Thread(target=request)
+    th.start()
+    time.sleep(0.1)
+    assert th.is_alive(), "request must block until version 2 lands"
+    inst.sync_weights(_tiny_tree(2.0), 2)
+    th.join(timeout=5)
+    assert not th.is_alive() and got["version"] == 2
+
+
+# =========================================================================
+# transfer service: publish / overlap / failure surfacing
+# =========================================================================
+
+def _scripted_instances(n):
+    return [InferenceInstance(i, cfg=None, sampler=None,
+                              scripted_fn=lambda p, k: None)
+            for i in range(n)]
+
+
+def test_service_eager_publish_flips_all():
+    insts = _scripted_instances(3)
+    svc = WeightTransferService(insts, bucket_bytes=32)
+    tree = _tiny_tree(4.0)
+    svc.publish(tree, 0)
+    assert [i.store.version for i in insts] == [0, 0, 0]
+    for i in insts:
+        _assert_trees_bitwise(tree, i.store.snapshot()[0])
+    assert svc.bytes_streamed == svc.plan.total_wire_bytes
+    assert svc.buckets_streamed == len(svc.plan.buckets)
+
+
+def test_service_overlap_publish_and_boundary_barrier():
+    insts = _scripted_instances(2)
+    svc = WeightTransferService(insts, bucket_bytes=32, wire_latency=0.005)
+    svc.ensure(_tiny_tree(0.0), 0)                # first boundary: eager
+    assert svc.gaps[-1]["mode"] == "eager"
+    svc.publish_async(_tiny_tree(1.0), 1)         # overlapped stream
+    time.sleep(0.2)                               # the trainer's tail
+    v = svc.ensure(_tiny_tree(1.0), 1)
+    assert v == 1 and svc.gaps[-1]["mode"] in ("overlap", "noop")
+    assert svc.gaps[-1]["gap"] < 0.1              # wire time was hidden
+    for i in insts:
+        p, ver = i.store.snapshot()
+        assert ver == 1 and float(p["a"][0]) == 1.0
+
+
+def test_service_stream_failure_surfaces_at_boundary():
+    insts = _scripted_instances(1)
+    svc = WeightTransferService(insts, bucket_bytes=32,
+                                wire_dtype="not-a-dtype")
+    svc.publish_async(_tiny_tree(0.0), 0)
+    with pytest.raises(RuntimeError, match="weight-plane"):
+        svc.ensure(_tiny_tree(0.0), 0)
+
+
+def test_stream_failure_poisons_version_gate():
+    """The boundary submits version-gated requests BEFORE the flip
+    barrier; a failed stream must poison the gate so those requests error
+    out instead of wedging forever with the instance lock held."""
+    insts = _scripted_instances(1)
+    svc = WeightTransferService(insts, bucket_bytes=32,
+                                wire_dtype="not-a-dtype")
+    svc.publish_async(_tiny_tree(0.0), 0)
+    with pytest.raises(RuntimeError):
+        svc.ensure(_tiny_tree(0.0), 0)
+    with pytest.raises(RuntimeError, match="stream failed"):
+        insts[0].store.wait_version(0, timeout=5)
+    # a later successful publish clears the poison and serves again
+    good = WeightTransferService(insts, bucket_bytes=32)
+    good.publish(_tiny_tree(1.0), 1)
+    p, v = insts[0].store.wait_version(1, timeout=5)
+    assert v == 1 and float(p["a"][0]) == 1.0
+
+
+# =========================================================================
+# scheduler integration: gating + trajectory identity (acceptance b)
+# =========================================================================
+
+def _versions_probe(sched):
+    """Record (group weight_version, consuming iteration version) pairs."""
+    pairs = []
+    orig = sched.monitor.check
+
+    def probe(group, current):
+        pairs.append((group.weight_version, current))
+        return orig(group, current)
+
+    sched.monitor.check = probe
+    return pairs
+
+
+@pytest.mark.parametrize("mode,iters", [("sync", 3), ("async", 3)])
+def test_overlap_trajectory_identical_to_eager(cfg, mode, iters):
+    """Acceptance (b): with overlap enabled every consumed rollout's
+    weight_version equals the consuming iteration, and the param
+    trajectory is IDENTICAL to the eager-sync baseline under a fixed key.
+    (async uses one group/iteration so consumption order — and thus fp
+    accumulation order — is deterministic across runs.)"""
+    n_prompts = 2 if mode == "sync" else 1
+
+    def run(overlap):
+        rl = _rl(mode=mode, batch_prompts=n_prompts,
+                 transfer_overlap=overlap, transfer_bucket_bytes=8 << 10)
+        sched, parts = build_pipeline(cfg, rl, seed=0)
+        pairs = _versions_probe(sched)
+        hist = sched.run(iters)
+        assert all(s.max_staleness == 0 for s in hist)
+        assert all(wv == cv for wv, cv in pairs), pairs
+        assert len(pairs) == n_prompts * iters
+        return parts["tri"].policy
+
+    _assert_trees_bitwise(run(True), run(False))
+
+
+def test_overlap_paged_engine_deferred_flips(cfg):
+    """Paged instances can't flip mid-decode (set_params asserts
+    quiescence): with overlap on, their flips defer to the boundary after
+    the queue drain — the run must stay strictly on-policy."""
+    rl = _rl(rollout_engine="paged", batch_prompts=2, group_size=4,
+             cbatch_slots=8, transfer_overlap=True)
+    sched, parts = build_pipeline(cfg, rl, seed=0)
+    hist = sched.run(2)
+    assert all(s.max_staleness == 0 for s in hist)
+    assert parts["tri"].version == 2
+    # iterations 0/1 flipped versions 0/1 at their boundaries; the final
+    # publish (version 2) streamed in the background and — paged flips
+    # being deferred — sits fully staged awaiting the next boundary
+    for inst in parts["pool"].instances:
+        assert inst.store.version == 1
+        assert inst.store.staged_version == 2
+
+
+def test_offpolicy_runs_through_weight_plane(cfg):
+    """The off-policy baseline syncs with rollouts in flight: flips must
+    land without waiting on busy instances (snapshot isolation), staleness
+    measured as before."""
+    rl = _rl(mode="async_offpolicy", staleness_eta=1, batch_prompts=2,
+             transfer_overlap=True)
+    sched, _ = build_pipeline(cfg, rl, seed=0)
+    hist = sched.run(3)
+    assert max(s.max_staleness for s in hist) >= 1
+
+
+def test_sync_gap_metric_reported(cfg):
+    rl = _rl(mode="sync", batch_prompts=1, transfer_overlap=True)
+    sched, _ = build_pipeline(cfg, rl, seed=0)
+    hist = sched.run(2)
+    assert all("sync_gap" in s.metrics for s in hist)
+    assert all(s.metrics["sync_gap"] >= 0.0 for s in hist)
+
+
+# =========================================================================
+# checkpoint <-> weight-plane round trip (satellite)
+# =========================================================================
+
+def test_checkpoint_restores_versioned_store(tmp_path, cfg, params):
+    """save/load with shardings: the tri-model version survives, and a
+    service publish of the restored tree brings every store to exactly
+    that version with bitwise-identical params."""
+    from repro.core.trimodel import TriModelState
+    from repro.sharding.specs import param_specs
+    tri = TriModelState.create(params)
+    tri.version = 7
+    path = str(tmp_path / "ck")
+    save_tri(path, tri)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    like = TriModelState.create(jax.tree.map(jnp.zeros_like, params))
+    restored = load_tri(path, like, shardings=param_specs(params, mesh))
+    assert restored.version == 7
+    _assert_trees_bitwise(params, restored.policy)
+    insts = _scripted_instances(2)
+    svc = WeightTransferService(insts, bucket_bytes=32 << 10)
+    svc.publish(restored.policy, restored.version)
+    for i in insts:
+        p, v = i.store.snapshot()
+        assert v == 7
+        _assert_trees_bitwise(params, p)
+
+
+def test_resume_is_step_identical(tmp_path, cfg):
+    """A run checkpointed at iteration 2 and resumed in a FRESH pipeline
+    is step-identical to the uninterrupted 4-iteration run (fixed key):
+    same param trajectory bitwise, version carried through the store."""
+    rl = _rl(mode="sync", batch_prompts=2, transfer_overlap=True)
+
+    sched_a, parts_a = build_pipeline(cfg, rl, seed=0)
+    sched_a.run(4)
+
+    sched_b, parts_b = build_pipeline(cfg, rl, seed=0)
+    sched_b.run(2)
+    path = str(tmp_path / "resume")
+    save_tri(path, parts_b["tri"])
+    resume_key = sched_b._key
+
+    sched_c, parts_c = build_pipeline(cfg, rl, seed=0)
+    load_tri(path, parts_c["tri"])
+    assert parts_c["tri"].version == 2
+    list(parts_c["loader"].batches(2))       # batches 0-1 consumed pre-save
+    sched_c.run(2, key=resume_key)
+
+    assert parts_c["tri"].version == parts_a["tri"].version == 4
+    _assert_trees_bitwise(parts_a["tri"].policy, parts_c["tri"].policy)
+    _assert_trees_bitwise(parts_a["tri"].opt.mu, parts_c["tri"].opt.mu)
+    # the pool's stores carry the resumed version forward
+    assert all(i.store.version == 4 for i in parts_c["pool"].instances)
