@@ -19,16 +19,16 @@ def main() -> None:
                     help="run a single table (table1..table5, roofline)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: the continuous-batching table (slot "
-                         "engine + pool-level paged-vs-group) and the "
-                         "weight-plane sync-gap table, skipping the slow "
-                         "training-side tables")
+                         "engine + pool-level paged-vs-group), the "
+                         "weight-plane sync-gap table, and the spec-decode "
+                         "table, skipping the slow training-side tables")
     args = ap.parse_args()
     if args.smoke and args.only:
         ap.error("--smoke picks its own table set; drop --only")
 
     from benchmarks import (table1_async, table2_trimodel, table3_spa,
                             table4_dp_baselines, table5_scaling,
-                            table6_cbatch, table7_transfer)
+                            table6_cbatch, table7_transfer, table8_specdec)
     tables = {
         "table1": table1_async.main,
         "table2": table2_trimodel.main,
@@ -37,11 +37,13 @@ def main() -> None:
         "table5": table5_scaling.main,
         "table6": table6_cbatch.main,   # beyond-paper: continuous batching
         "table7": table7_transfer.main,  # beyond-paper: weight-plane sync-gap
+        "table8": table8_specdec.main,   # beyond-paper: speculative decode
     }
     if args.smoke:
         tables = {"table6": table6_cbatch.main,
                   "table6_pool": table6_cbatch.pool_mode,
-                  "table7": table7_transfer.main}
+                  "table7": table7_transfer.main,
+                  "table8": table8_specdec.main}
     print("table,name,value,derived")
     failures = 0
     for name, fn in tables.items():

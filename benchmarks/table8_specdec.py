@@ -1,0 +1,128 @@
+"""Beyond-paper table: speculative decode on the paged rollout/serving
+engine (DESIGN.md §Spec-decode).
+
+Rollout decode is the producer the periodic-async pipeline exists to hide;
+spec decode is the memory-bandwidth lever that speeds the producer itself
+WITHOUT off-policy staleness — rejection sampling is distribution-exact,
+so the greedy runs below are asserted token-identical to the non-spec
+baseline, per variant.
+
+For each cache-backend variant (GQA pages / MLA latent pages (MoE half
+disabled — router capacity ties couple batch shapes, see table6) /
+sliding-window with reclamation) the same request batch is served greedy
+through the paged engine with spec off and with spec on (prompt-lookup
+drafts; the GQA variant also measures the resident draft-model provider),
+reporting tokens/s, acceptance rate, committed tokens per verify forward,
+and the engine-step reduction.
+
+Measurement caveat (same as table6): on this container's single CPU core
+a k+1-token forward pays ~k+1x the FLOPs of a 1-token forward, so the
+wall-clock win here comes from fewer dispatches and long accepted runs
+(greedy repetition); on accelerator decode the verify forward is
+bandwidth-bound and costs ~1 step, which is the production case.
+"""
+from __future__ import annotations
+
+import time
+
+import dataclasses
+import numpy as np
+
+from benchmarks.common import emit, save
+from repro.configs import get_config, reduced_config
+from repro.data.tasks import ArithmeticTask
+from repro.data.tokenizer import Tokenizer
+
+N_REQ, SLOTS, LP, T = 6, 4, 48, 128
+SPEC_K = 4
+REPS = 3
+
+
+def _variants():
+    gqa = reduced_config(get_config("llama3.2-3b"))
+    mla = dataclasses.replace(
+        reduced_config(get_config("deepseek-v2-lite-16b")),
+        num_experts=0, num_experts_per_tok=0, num_shared_experts=0,
+        moe_d_ff=0, first_k_dense=0, dense_d_ff=0)
+    swa = dataclasses.replace(gqa, sliding_window=32)
+    return [("gqa", gqa), ("mla", mla), ("swa", swa)]
+
+
+def _serve(cfg, prompts, spec_k: int, draft: str = "prompt_lookup"):
+    """Median-of-REPS serve through the paged engine (greedy)."""
+    from repro.launch.serve import serve_paged
+    best = None
+    for _ in range(REPS + 1):           # +1 warmup (jit compile)
+        done, stats = serve_paged(
+            cfg, prompts, max_prompt_len=LP, max_new=T, num_slots=SLOTS,
+            temperature=0.0, seed=0, spec_k=spec_k, spec_draft=draft)
+        if best is None or stats["wall_s"] < best[1]["wall_s"]:
+            best = (done, stats)
+    return best
+
+
+def main() -> dict:
+    tok_ = Tokenizer(512)
+    prompts = [np.asarray(tok_.encode(p.prompt)[:LP], np.int32)
+               for p in ArithmeticTask(seed=0).batch(N_REQ)]
+    out = {"config": {"n_req": N_REQ, "slots": SLOTS, "max_prompt_len": LP,
+                      "max_new": T, "spec_k": SPEC_K, "reps": REPS},
+           "variants": {}}
+    gqa_base_ids = None
+    for vname, cfg in _variants():
+        base_done, base = _serve(cfg, prompts, spec_k=0)
+        spec_done, spec = _serve(cfg, prompts, spec_k=SPEC_K)
+        # the exactness contract: greedy spec decode is token-identical
+        base_ids = {c.request_id: c.response_ids.tolist() for c in base_done}
+        spec_ids = {c.request_id: c.response_ids.tolist() for c in spec_done}
+        assert base_ids == spec_ids, \
+            f"{vname}: greedy spec decode diverged from the baseline"
+        if vname == "gqa":
+            gqa_base_ids = base_ids
+        row = {
+            "baseline_tok_s": base["tok_per_s"],
+            "baseline_steps": base["decode_steps"],
+            "spec_tok_s": spec["tok_per_s"],
+            "spec_steps": spec["decode_steps"],
+            "acceptance_rate": spec["acceptance_rate"],
+            "tokens_per_forward": spec["tokens_per_forward"],
+            "speedup": spec["tok_per_s"] / base["tok_per_s"],
+            "step_reduction": base["decode_steps"] / spec["decode_steps"],
+        }
+        out["variants"][vname] = row
+        emit("table8", f"{vname}_baseline_tok_s",
+             f"{row['baseline_tok_s']:.1f}")
+        emit("table8", f"{vname}_spec_tok_s", f"{row['spec_tok_s']:.1f}",
+             f"k={SPEC_K} prompt-lookup, token-identical asserted")
+        emit("table8", f"{vname}_acceptance_rate",
+             f"{row['acceptance_rate']:.3f}")
+        emit("table8", f"{vname}_tokens_per_forward",
+             f"{row['tokens_per_forward']:.2f}", "1.0 = no speculation win")
+        emit("table8", f"{vname}_step_reduction",
+             f"{row['step_reduction']:.2f}x",
+             "engine decode steps, baseline / spec")
+        emit("table8", f"{vname}_speedup", f"{row['speedup']:.2f}x",
+             "wall tokens/s, spec / baseline")
+    # the resident draft-model provider on the GQA variant (random-init
+    # draft: reports the machinery's cost floor, not a tuned acceptance)
+    gqa = _variants()[0][1]
+    md_done, md = _serve(gqa, prompts, spec_k=SPEC_K, draft="model")
+    assert {c.request_id: c.response_ids.tolist() for c in md_done} \
+        == gqa_base_ids, "model-draft greedy diverged from the baseline"
+    out["variants"]["gqa_model_draft"] = {
+        "spec_tok_s": md["tok_per_s"],
+        "acceptance_rate": md["acceptance_rate"],
+        "tokens_per_forward": md["tokens_per_forward"],
+    }
+    emit("table8", "gqa_model_draft_tok_s", f"{md['tok_per_s']:.1f}",
+         "resident draft model (random-init)")
+    emit("table8", "gqa_model_draft_acceptance",
+         f"{md['acceptance_rate']:.3f}")
+    save("table8_specdec", out)
+    return out
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    main()
+    print(f"# table8 done in {time.time() - t0:.0f}s")

@@ -36,6 +36,18 @@ def main() -> None:
                     help="serve through the token-level paged-KV engine "
                          "with this many slots (shared page pool, slots "
                          "freed at EOS — see DESIGN.md §Continuous-batching)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decode on the paged engine "
+                         "(DESIGN.md §Spec-decode); stats report the "
+                         "draft acceptance rate")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify step")
+    ap.add_argument("--spec-draft", default="prompt_lookup",
+                    choices=["prompt_lookup", "model"])
+    ap.add_argument("--shared-system", type=int, default=0, metavar="N",
+                    help="serve N requests sharing one system prompt "
+                         "through refcounted shared pages (per-request "
+                         "suffixes teacher-forced, then free decode)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -51,16 +63,51 @@ def main() -> None:
     if args.paged and args.cbatch:
         raise SystemExit("--paged and --cbatch are different engines; "
                          "pick one")
+    spec_k = args.spec_k if args.spec else 0
+    if spec_k and not (args.paged or args.shared_system):
+        raise SystemExit("--spec rides the paged engine in this demo; add "
+                         "--paged SLOTS (or --shared-system N)")
+
+    if args.shared_system:
+        from repro.launch.serve import serve_shared
+        system = np.asarray(
+            tok.encode("You are a terse arithmetic solver. ")[
+                : args.max_prompt_len], np.int32)
+        suffixes = [np.asarray(tok.encode(p.prompt)[: args.max_new // 2],
+                               np.int32)
+                    for p in ArithmeticTask(seed=args.seed + 1).batch(
+                        args.shared_system)]
+        done, stats = serve_shared(
+            cfg, system, suffixes, max_prompt_len=args.max_prompt_len,
+            max_new=args.max_new, temperature=args.temperature,
+            seed=args.seed, spec_k=spec_k, spec_draft=args.spec_draft)
+        extra = (f", accept={stats['acceptance_rate']:.2f}"
+                 if spec_k else "")
+        print(f"{args.arch} (shared-system x{args.shared_system}): "
+              f"{stats['generated_tokens']} tokens in "
+              f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
+              f"{stats['prompt_pages_saved']} prompt pages saved by "
+              f"sharing{extra})")
+        for c in done[:4]:
+            print(f"  req {c.request_id}: "
+                  f"{tok.decode(c.response_ids.tolist())!r}")
+        return
+
     if args.paged:
         from repro.launch.serve import serve_paged
         done, stats = serve_paged(
             cfg, prompts, max_prompt_len=args.max_prompt_len,
             max_new=args.max_new, num_slots=args.paged,
-            temperature=args.temperature, seed=args.seed)
-        print(f"{args.arch} (paged x{args.paged}): {len(done)} requests in "
-              f"completion order, {stats['generated_tokens']} tokens in "
+            temperature=args.temperature, seed=args.seed,
+            spec_k=spec_k, spec_draft=args.spec_draft)
+        extra = (f", accept={stats['acceptance_rate']:.2f}"
+                 if spec_k else "")
+        print(f"{args.arch} (paged x{args.paged}"
+              f"{f' spec k={spec_k}' if spec_k else ''}): {len(done)} "
+              f"requests in completion order, "
+              f"{stats['generated_tokens']} tokens in "
               f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
-              f"{stats['decode_steps']} decode steps)")
+              f"{stats['decode_steps']} decode steps{extra})")
         for c in done[:4]:
             print(f"  req {c.request_id} finished at step {c.finish_step}: "
                   f"{tok.decode(c.response_ids.tolist())!r}")

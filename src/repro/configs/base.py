@@ -190,6 +190,11 @@ class ModelConfig:
 
 ROLLOUT_ENGINES = ("group", "cbatch", "paged")
 
+# The speculative-decode plane (DESIGN.md §Spec-decode) is not a fourth
+# engine — it rides the three above — but its applicability is validated
+# through the same matrix so the exclusion list lives in one place.
+SPEC_PLANE = "spec"
+
 
 def engine_support(cfg: ModelConfig, engine: str) -> Tuple[bool, str]:
     """(supported, reason) for running ``cfg`` on a decode engine:
@@ -197,10 +202,15 @@ def engine_support(cfg: ModelConfig, engine: str) -> Tuple[bool, str]:
     * ``group``  — the group-at-a-time Sampler (reference semantics);
     * ``cbatch`` — the dense-slot continuous-batching engine;
     * ``paged``  — the token-level paged pool (GQA K/V pages or MLA
-      latent pages; sliding-window configs reclaim out-of-window pages).
+      latent pages; sliding-window configs reclaim out-of-window pages);
+    * ``spec``   — the draft/verify speculative-decode plane layered on
+      any of the engines (src/repro/spec/).
     """
+    if engine == SPEC_PLANE:
+        return _spec_support(cfg)
     if engine not in ROLLOUT_ENGINES:
-        raise KeyError(f"unknown engine {engine!r}; known: {ROLLOUT_ENGINES}")
+        raise KeyError(f"unknown engine {engine!r}; known: "
+                       f"{ROLLOUT_ENGINES + (SPEC_PLANE,)}")
     if engine == "group":
         return True, "reference decode path for every family"
     if cfg.is_encoder_decoder:
@@ -223,9 +233,34 @@ def engine_support(cfg: ModelConfig, engine: str) -> Tuple[bool, str]:
     return True, f"pages hold {kind}{win}"
 
 
+def _spec_support(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Speculative decode needs a REVERSIBLE per-token cache: a rejected
+    draft's KV entries are overwritten or rolled back (paged engines return
+    speculative pages to the freelist). Recurrent state cannot be rolled
+    back cheaply, and the group-path-only modality families never see the
+    multi-token verify forward (DESIGN.md §Spec-decode, §Known-issues)."""
+    if cfg.family == "ssm" or cfg.hybrid:
+        return False, ("O(1) recurrent state advances irreversibly per "
+                       "token — a rejected draft would need the pre-draft "
+                       "SSM state restored, i.e. a state checkpoint per "
+                       "speculated token")
+    if cfg.is_encoder_decoder:
+        return False, ("served via the group path only (bounded decoder "
+                       "context, cross-attention-dominated) — no verify "
+                       "engine to ride")
+    if cfg.vision_prefix_len:
+        return False, ("served via the group path only (dense vision "
+                       "prefix) — no verify engine to ride")
+    kind = "MLA latent" if cfg.use_mla else "GQA"
+    win = (" incl. sliding-window (speculative pages respect reclamation)"
+           if cfg.sliding_window is not None else "")
+    return True, f"k+1-token verify through the {kind} cache{win}"
+
+
 def engine_support_matrix(cfg: ModelConfig) -> dict:
-    """{engine: (supported, reason)} for one config."""
-    return {e: engine_support(cfg, e) for e in ROLLOUT_ENGINES}
+    """{engine: (supported, reason)} for one config (+ the spec plane)."""
+    return {e: engine_support(cfg, e)
+            for e in ROLLOUT_ENGINES + (SPEC_PLANE,)}
 
 
 def require_engine_support(cfg: ModelConfig, engine: str) -> None:
@@ -294,6 +329,20 @@ class RLConfig:
     # without captured values (simulated/scripted instances) fall back to
     # the recompute path per micro-batch.
     capture_logprobs: bool = True
+    # --- speculative decode (DESIGN.md §Spec-decode) ------------------
+    # Draft/verify plane over the rollout engines: propose spec_k tokens
+    # cheaply, verify them in ONE k+1-token target forward, accept via
+    # rejection sampling. Distribution-exact, so Proposition 1 survives:
+    # greedy decode is token-identical to the non-spec engines, sampled
+    # decode draws exactly from the target policy (tests/test_spec.py),
+    # and capture_logprobs returns TARGET-model logprobs straight from
+    # the verify pass. SSM/enc-dec/VLM are excluded (engine_support).
+    spec_decode: bool = False
+    spec_k: int = 4                    # drafted tokens per verify step
+    # draft provider: "prompt_lookup" (n-gram reuse of prompt/response
+    # tokens — no extra model) or "model" (small resident draft model)
+    spec_draft: str = "prompt_lookup"
+    spec_ngram: int = 3                # longest n-gram the lookup tries
     # --- weight-plane (DESIGN.md §Weight-plane) -----------------------
     # The iteration-boundary trainer->pool weight push streams the param
     # tree as fixed-size buckets through repro.transfer instead of one

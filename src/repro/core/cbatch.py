@@ -115,20 +115,54 @@ class ContinuousBatchingSampler:
     def __init__(self, cfg: ModelConfig, *, num_slots: int,
                  max_prompt_len: int, max_new_tokens: int,
                  temperature: float = 1.0, top_p: float = 1.0,
-                 eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD):
+                 eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD,
+                 spec_k: int = 0, spec_draft: str = "prompt_lookup",
+                 spec_ngram: int = 3, seed: int = 0):
         from repro.configs.base import require_engine_support
         require_engine_support(cfg, "cbatch")
         self.cfg = cfg
         self.B = num_slots
         self.Lp = max_prompt_len
         self.T = max_new_tokens
-        self.max_ctx = max_prompt_len + max_new_tokens
+        self.spec_k = spec_k
+        # speculative writes run up to k tokens past the frontier — give
+        # the contiguous cache (and a windowed ring, via ring_slack) that
+        # slack (DESIGN.md §Spec-decode)
+        self.max_ctx = max_prompt_len + max_new_tokens + \
+            (spec_k + 1 if spec_k else 0)
         self.temperature = temperature
         self.top_p = top_p
         self.eos_id = eos_id
         self.pad_id = pad_id
         self._prefill = jax.jit(self._prefill_row, donate_argnums=(1,))
         self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
+        if spec_k:
+            require_engine_support(cfg, "spec")
+            from functools import partial
+            from repro.spec.draft import make_draft_provider
+            from repro.spec.sampler import dense_verify_step
+            # serving engine: no trainer consumes behavior logprobs —
+            # capture off skips the verify pass's full-vocab log-softmax
+            self._vstep = jax.jit(
+                partial(dense_verify_step, cfg, temperature, top_p, False),
+                donate_argnums=(1,))
+            self._draft = make_draft_provider(
+                spec_draft, cfg, num_slots, spec_k=spec_k,
+                ngram=spec_ngram, max_prompt_len=max_prompt_len,
+                max_new_tokens=max_new_tokens, pad_id=pad_id, seed=seed)
+        self.reset_spec_stats()
+
+    # -- spec stats ---------------------------------------------------------
+
+    def reset_spec_stats(self) -> None:
+        self.spec_steps = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
 
     # -- jitted cores -------------------------------------------------------
 
@@ -139,7 +173,8 @@ class ContinuousBatchingSampler:
         real = ar < length
         positions = jnp.where(real, ar, 0).astype(jnp.int32)
         segments = jnp.where(real, 0, -1).astype(jnp.int32)
-        row = init_caches(params, cfg, 1, self.max_ctx)
+        row = init_caches(params, cfg, 1, self.max_ctx,
+                          ring_slack=self.spec_k + 1 if self.spec_k else 0)
         h, row, _, _ = forward_hidden(params, cfg, tokens,
                                       positions=positions, segments=segments,
                                       caches=row, cache_offset=0)
@@ -183,6 +218,8 @@ class ContinuousBatchingSampler:
         completion order. ``max_new_per_request`` caps each request's
         generation individually (rollout lengths vary in RL; a freed slot
         admits the next request immediately)."""
+        if self.spec_k:
+            return self._run_spec(params, prompts, key, max_new_per_request)
         cfg, B = self.cfg, self.B
         limits = (max_new_per_request if max_new_per_request is not None
                   else [self.T] * len(prompts))
@@ -228,4 +265,94 @@ class ContinuousBatchingSampler:
                         response_ids=np.asarray(slot_toks[s], np.int32),
                         finish_step=step))
                     sched.evict(s)
+        return done
+
+    def _run_spec(self, params, prompts: List[np.ndarray], key,
+                  max_new_per_request: Optional[List[int]] = None
+                  ) -> List[Completed]:
+        """Speculative run loop (DESIGN.md §Spec-decode): per engine step,
+        every live slot drafts k tokens and ONE k+1-token verify forward
+        commits 1..k+1 of them — variable per-row token counts, which is
+        exactly the admission/eviction model the SlotScheduler already
+        serves. Freshly admitted slots ride their first block with the
+        prefill logits as p_0 (``fresh``); rejected speculative cache
+        entries carry positions past the frontier (masked) until the next
+        block overwrites them."""
+        from repro.models.attention import INVALID_POS
+        from repro.spec.sampler import pack_row_block, truncate_commit
+        from repro.spec.verify import assemble_commit
+        self.reset_spec_stats()
+        cfg, B, k = self.cfg, self.B, self.spec_k
+        limits = (max_new_per_request if max_new_per_request is not None
+                  else [self.T] * len(prompts))
+        sched = SlotScheduler(B)
+        for rid, p in enumerate(prompts):
+            sched.submit((rid, p))
+        caches = init_caches(params, cfg, B, self.max_ctx,
+                             ring_slack=k + 1)
+        logits = jnp.zeros((B, cfg.vocab_size), jnp.float32)
+        req_keys = np.asarray(jax.random.split(key, len(prompts)))
+        plen = np.zeros((B,), np.int32)
+        slot_keys = np.zeros((B, 2), np.uint32)
+        fresh = np.zeros((B,), bool)
+        slot_toks: List[list] = [[] for _ in range(B)]
+        done: List[Completed] = []
+
+        while not sched.idle:
+            for s, (rid, p) in sched.admit():
+                p = np.asarray(p, np.int32)[: self.Lp]
+                row = np.full((1, self.Lp), self.pad_id, np.int32)
+                row[0, : len(p)] = p
+                caches, lg = self._prefill(
+                    params, caches, jnp.asarray(row),
+                    jnp.asarray([len(p)], jnp.int32), s)
+                logits = logits.at[s].set(lg)
+                plen[s] = len(p)
+                slot_keys[s] = req_keys[rid]
+                fresh[s] = True
+                slot_toks[s] = []
+                self._draft.start(s, p)
+            act = sched.active_slots()
+            draft = self._draft.propose(act, k)
+            tokens = np.full((B, k + 1), self.pad_id, np.int32)
+            positions = np.full((B, k + 1), int(INVALID_POS), np.int32)
+            segs = np.full((B, k + 1), -1, np.int32)
+            offs = np.zeros((B,), np.int32)
+            for s in act:
+                t = len(slot_toks[s])
+                delta = pack_row_block(
+                    tokens[s], positions[s], segs[s], fresh[s], draft[s],
+                    slot_toks[s][-1] if slot_toks[s] else 0,
+                    int(plen[s]) + t, k)
+                # right-padded slots: cache slot index == position
+                offs[s] = plen[s] + t + delta
+            folds = np.full((B,), sched.step, np.int32)
+            accept, alt, lp_d, lp_a, caches = self._vstep(
+                params, caches, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(segs), jnp.asarray(offs), logits,
+                jnp.asarray(fresh), jnp.asarray(draft),
+                jnp.asarray(slot_keys), jnp.asarray(folds))
+            accept, alt, lp_d, lp_a = jax.device_get(
+                (accept, alt, lp_d, lp_a))
+            step = sched.tick()
+            for s in list(act):
+                rid = sched.slot_req[s][0]
+                ct, cl = assemble_commit(accept[s], alt[s], draft[s],
+                                         lp_d[s], lp_a[s])
+                self.spec_steps += 1
+                self.drafted_tokens += k
+                self.accepted_tokens += len(ct) - 1
+                cap = min(self.T, limits[rid])
+                ct, _, row_done = truncate_commit(
+                    ct, cl, cap - len(slot_toks[s]), self.eos_id)
+                slot_toks[s].extend(ct)
+                self._draft.commit(s, ct)
+                fresh[s] = False
+                if row_done:
+                    done.append(Completed(
+                        request_id=rid,
+                        response_ids=np.asarray(slot_toks[s], np.int32),
+                        finish_step=step))
+                    sched.evict(s)
+                    self._draft.stop(s)
         return done

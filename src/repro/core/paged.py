@@ -128,6 +128,13 @@ class _Row:
     credit: int = 0                  # future page allocations reserved
     # live pages in logical order: (last_pos, table_idx, page_id, is_prompt)
     live: deque = dataclasses.field(default_factory=deque)
+    # spec-decode state (DESIGN.md §Spec-decode): a fresh row still holds
+    # its prefill logits in hand; a steady row's last committed token is
+    # unfed and rides into the next verify block
+    fresh: bool = True
+    # teacher-forced continuation (shared-system-prompt serving): tokens
+    # committed verbatim before free decoding starts
+    forced: list = dataclasses.field(default_factory=list)
 
 
 class GroupHandle:
@@ -158,7 +165,9 @@ class PagedGroupEngine:
                  num_pages: int, max_prompt_len: int, max_new_tokens: int,
                  group_size: int, temperature: float = 1.0, top_p: float = 1.0,
                  eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD,
-                 capture_logprobs: bool = True):
+                 capture_logprobs: bool = True, spec_k: int = 0,
+                 spec_draft: str = "prompt_lookup", spec_ngram: int = 3,
+                 seed: int = 0):
         if num_slots < 1 or page_size < 1:
             raise ValueError(f"paged engine needs num_slots >= 1 and "
                              f"page_size >= 1, got {num_slots}/{page_size}")
@@ -177,6 +186,14 @@ class PagedGroupEngine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.capture_logprobs = capture_logprobs
+        self.spec_k = spec_k
+        if spec_k:
+            require_engine_support(cfg, "spec")
+            from repro.spec.draft import make_draft_provider
+            self._draft = make_draft_provider(
+                spec_draft, cfg, num_slots, spec_k=spec_k, ngram=spec_ngram,
+                max_prompt_len=max_prompt_len,
+                max_new_tokens=max_new_tokens, pad_id=pad_id, seed=seed)
         self.n_prompt_pages = -(-max_prompt_len // page_size)
         self.n_resp_pages = -(-max_new_tokens // page_size)
         self.n_max = self.n_prompt_pages + self.n_resp_pages
@@ -210,6 +227,19 @@ class PagedGroupEngine:
         self._prefill = jax.jit(self._prefill_group, donate_argnums=(1,))
         self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
         self._invalidate = jax.jit(self._invalidate_pages, donate_argnums=(0,))
+        self._verify = jax.jit(self._verify_step, donate_argnums=(1,))
+        self.reset_spec_stats()
+
+    def reset_spec_stats(self) -> None:
+        self.spec_steps = 0            # verify forwards x live rows
+        self.drafted_tokens = 0        # free (non-forced) drafts proposed
+        self.accepted_tokens = 0       # free drafts that survived verify
+        self.rolled_back_pages = 0     # speculative pages returned on reject
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
 
     # -- page geometry ------------------------------------------------------
 
@@ -222,11 +252,17 @@ class PagedGroupEngine:
         the page credit the admission gate reserves. Without a window every
         written page stays (budget = all of them); with one, reclamation
         each step bounds the live span to `window` positions, which straddle
-        at most window//page + 2 pages (+1 slack for the step's new page)."""
+        at most window//page + 2 pages (+1 slack for the step's new page).
+        Spec decode writes up to k tokens past the frontier before the
+        window slides, so speculative pages widen the windowed budget by
+        ceil(k/page) + 1 (never past the total — positions >= max_new are
+        clamped to the trash page)."""
         n = self._n_total(max_new)
         if self.window is None:
             return n
-        return min(n, self.window // self.page + 3)
+        spec = ((self.spec_k + self.page - 1) // self.page + 1
+                if self.spec_k else 0)
+        return min(n, self.window // self.page + 3 + spec)
 
     def _prompt_page_range(self, plen: int):
         """(j0, n_pp): prompt pages j0..n_pp-1 are window-visible to at
@@ -282,17 +318,20 @@ class PagedGroupEngine:
         return new_caches, logits
 
     def _decode_step(self, params, caches, logits, keys, rows, positions,
-                     wslot, ptab, active):
+                     wslot, ptab, active, forced, use_forced):
         """One token for every slot: sample from the slot's current logits
         with its row's own step key, then advance through the paged cache.
         Inactive slots feed PAD at pos 2^30 and write into the trash page.
-        With capture enabled, also returns log p(sampled id) under the raw
-        distribution — the rollout-time behavior logprob
-        (DESIGN.md §Tri-model-capture); disabled engines skip both the
-        log-softmax and the extra device->host transfer."""
+        Rows with a pending teacher-forced prefix (shared-system-prompt
+        serving) commit ``forced`` instead of the sample. With capture
+        enabled, also returns log p(emitted id) under the raw distribution
+        — the rollout-time behavior logprob (DESIGN.md §Tri-model-capture);
+        disabled engines skip both the log-softmax and the extra
+        device->host transfer."""
         cfg = self.cfg
         tok = _sample_token_rows(keys, logits, rows, self.G,
                                  self.temperature, self.top_p)
+        tok = jnp.where(use_forced, forced, tok)
         tok = jnp.where(active, tok, self.pad_id)
         lp = (jnp.where(active, sampled_token_logprob(logits, tok), 0.0)
               if self.capture_logprobs else None)
@@ -304,6 +343,32 @@ class PagedGroupEngine:
         logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
                                  W.astype(jnp.float32))
         return tok, lp, caches, logits_next
+
+    def _verify_step(self, params, caches, logits, tokens, positions, segs,
+                     wslots, ptab, keys, folds, fresh, draft):
+        """One k+1-token spec verify forward for every slot (DESIGN.md
+        §Spec-decode): the block (the unfed committed token + k drafts, or
+        k drafts + a masked pad slot for fresh rows) writes into its
+        speculative pages and attends through the pool; ``fresh`` rows use
+        their prefill logits as p_0. Masked slots point at the trash page
+        with pos 2^30. Returns the verify verdicts + raw capture logprobs
+        (host assembles commits — variable tokens per row)."""
+        from repro.spec.verify import verify_block
+        cfg = self.cfg
+        h, caches, _, _ = forward_hidden(
+            params, cfg, tokens, positions=positions, segments=segs,
+            caches=caches, cache_offset=wslots, page_table=ptab)
+        W = lm_head_weight(params["embed"], cfg)
+        out = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                         W.astype(jnp.float32))
+        p = jnp.where(fresh[:, None, None],
+                      jnp.concatenate([logits[:, None], out[:, :-1]],
+                                      axis=1),
+                      out)
+        return verify_block(p, draft, keys, folds,
+                            temperature=self.temperature,
+                            top_p=self.top_p,
+                            capture=self.capture_logprobs) + (caches,)
 
     def _invalidate_pages(self, caches, pages):
         """Mark freshly allocated response pages invalid — they may hold a
@@ -332,16 +397,28 @@ class PagedGroupEngine:
                 self.logits = jnp.zeros((self.B, self.cfg.vocab_size),
                                         jnp.float32)
 
-    def submit(self, prompt, key, *, max_new: Optional[int] = None
-               ) -> GroupHandle:
+    def submit(self, prompt, key, *, max_new: Optional[int] = None,
+               forced: Optional[List[np.ndarray]] = None) -> GroupHandle:
         """Register one GRPO group (G rollouts of one prompt). Returns a
         handle; drive ``step`` until it resolves. Raises immediately when
         the group could never be admitted — a prompt whose window-visible
         pages plus one row's page budget exceed what the pool can EVER free
-        would otherwise sit in the admission queue forever."""
+        would otherwise sit in the admission queue forever.
+
+        ``forced`` (len G, one int array per row) teacher-forces each
+        row's leading response tokens — the shared-system-prompt serving
+        scenario: all rows share the prompt's refcounted pages, then each
+        row feeds its own request suffix verbatim before decoding freely.
+        Forced tokens count against ``max_new`` and are returned as part
+        of the response (the caller strips them)."""
         assert self.params is not None, "set_params before submit"
         p = np.asarray(prompt, np.int32)[-self.Lp:]   # Sampler keeps the tail
         max_new = self.T if max_new is None else min(max_new, self.T)
+        if forced is not None:
+            assert len(forced) == self.G, \
+                f"forced needs one token list per row ({self.G})"
+            assert all(len(f) < max_new for f in forced), \
+                "forced prefix must leave room to decode (len < max_new)"
         j0, n_pp = self._prompt_page_range(len(p))
         need = (n_pp - j0) + self._row_budget(max_new)
         avail = self.P - FIRST_PAGE
@@ -359,7 +436,9 @@ class PagedGroupEngine:
             h = GroupHandle(g)
             self._handles[g.gid] = h
             for i in range(self.G):
-                self.sched.submit(_Row(group=g, idx=i))
+                f = ([] if forced is None
+                     else [int(t) for t in np.asarray(forced[i])])
+                self.sched.submit(_Row(group=g, idx=i, forced=f))
             return h
 
     @property
@@ -377,6 +456,7 @@ class PagedGroupEngine:
         self.generated_tokens = 0
         self.reclaimed_pages = 0
         self.alloc.min_free = self.alloc.num_free
+        self.reset_spec_stats()
 
     # -- engine step --------------------------------------------------------
 
@@ -419,6 +499,9 @@ class PagedGroupEngine:
         self.logits = self.logits.at[slot].set(g.prompt_logits)
         row.toks = []
         row.lps = []
+        row.fresh = True
+        if self.spec_k:
+            self._draft.start(slot, g.prompt)
 
     def _alloc_resp_page(self, slot: int, row: _Row, k: int) -> int:
         """Lazily take response page k (the write cursor just crossed a
@@ -437,11 +520,37 @@ class PagedGroupEngine:
         self._ptab[slot, ti] = pid
         row.live.append((len(g.prompt) + (k + 1) * self.page - 1, ti, pid,
                          False))
-        if len(row.pages) == self._n_total(g.max_new):
-            # last page this row will ever write: return unused credit
+        if not self.spec_k and len(row.pages) == self._n_total(g.max_new):
+            # last page this row will ever write: return unused credit.
+            # Spec engines skip the early return — a speculative final
+            # page may be ROLLED BACK and re-allocated later, so its
+            # credit must stay symmetric (alloc -1 / rollback +1) until
+            # the row finishes (_finish_row releases the remainder).
             self._outstanding -= row.credit
             row.credit = 0
         return pid
+
+    def _rollback_row(self, slot: int, row: _Row, vf_rp: int) -> None:
+        """Return speculative response pages holding ONLY rejected drafts
+        to the freelist (DESIGN.md §Spec-decode): after a commit that fed
+        through response position ``vf_rp``, any page whose first slot is
+        past it contains nothing a future query may see — pop it off the
+        row's table, release it, and re-arm the row's page credit (the
+        exact inverse of ``_alloc_resp_page``, so the admission-gate
+        invariant resident + credit == budget is untouched). Partially
+        valid pages stay: their stale tail slots are overwritten by the
+        next verify block before any read."""
+        keep = vf_rp // self.page if vf_rp >= 0 else -1
+        while len(row.pages) - 1 > keep:
+            pid = row.pages.pop()
+            last, ti, pid_live, is_prompt = row.live.pop()
+            assert pid_live == pid and not is_prompt, \
+                "rollback must pop the most recent speculative page"
+            self._ptab[slot, ti] = NULL_PAGE
+            self.alloc.release([pid])
+            row.credit += 1
+            self._outstanding += 1
+            self.rolled_back_pages += 1
 
     def _reclaim_row(self, slot: int, row: _Row, q_pos: int) -> None:
         """Sliding-window page reclamation: positions only grow, so once
@@ -494,7 +603,8 @@ class PagedGroupEngine:
             h._event.set()
 
     def step(self) -> bool:
-        """One admission pass + one decode step for every slot. Returns
+        """One admission pass + one decode step for every slot (spec
+        engines verify a k+1-token block instead — §Spec-decode). Returns
         False (and does nothing) when the engine is idle."""
         with self._mutex:
             # admit one row at a time: _admit_row consumes pages, and the
@@ -507,12 +617,16 @@ class PagedGroupEngine:
             act = self.sched.active_slots()
             if not act:
                 return False
+            if self.spec_k:
+                return self._spec_step(act)
             B = self.B
             keys = np.zeros((B, 2), np.uint32)
             rows = np.zeros((B,), np.int32)
             pos = np.full((B,), INVALID_POS, np.int32)
             wslot = np.full((B,), TRASH_PAGE * self.page, np.int32)
             active = np.zeros((B,), bool)
+            forced = np.zeros((B,), np.int32)
+            use_forced = np.zeros((B,), bool)
             fresh = np.full((B,), TRASH_PAGE, np.int32)   # pages to wipe
             n_fresh = 0
             for s in act:
@@ -530,6 +644,9 @@ class PagedGroupEngine:
                 pos[s] = q_pos
                 wslot[s] = row.pages[k] * self.page + t % self.page
                 active[s] = True
+                if row.forced:
+                    forced[s] = row.forced[0]
+                    use_forced[s] = True
             if n_fresh:
                 # one fixed-shape (B,) invalidation for every page freshly
                 # allocated this step (trash-page padding keeps the jit
@@ -540,7 +657,8 @@ class PagedGroupEngine:
             tok, lp, self.caches, self.logits = self._decode(
                 self.params, self.caches, self.logits, jnp.asarray(keys),
                 jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(wslot),
-                jnp.asarray(self._ptab), jnp.asarray(active))
+                jnp.asarray(self._ptab), jnp.asarray(active),
+                jnp.asarray(forced), jnp.asarray(use_forced))
             # one host transfer for the step's outputs (lp is None when
             # capture is off) — this sync sits in the per-token hot loop
             tok, lp = jax.device_get((tok, lp))
@@ -550,12 +668,111 @@ class PagedGroupEngine:
             for s in act:
                 row = self.sched.slot_req[s]
                 row.toks.append(int(tok[s]))
+                if row.forced:
+                    row.forced.pop(0)
                 if self.capture_logprobs:
                     row.lps.append(float(lp[s]))
                 if (tok[s] == self.eos_id
                         or len(row.toks) >= row.group.max_new):
                     self._finish_row(s, row, step)
             return True
+
+    def _spec_step(self, act: List[int]) -> bool:
+        """One spec-decode engine step (DESIGN.md §Spec-decode), called
+        under the mutex with ``act`` the live slots: draft k tokens per
+        row, pre-allocate the block's speculative pages against the row
+        credits, run ONE k+1-token verify forward, commit 1..k+1 tokens
+        per row on the host, and roll rejected speculative pages back to
+        the freelist. A row with a pending teacher-forced prefix proposes
+        its forced tokens as drafts and force-accepts them — the fed
+        tokens ARE the forced tokens, so later accept tests stay valid."""
+        from repro.spec.sampler import truncate_commit
+        from repro.spec.verify import assemble_commit
+        B, k, page = self.B, self.spec_k, self.page
+        drafts = self._draft.propose(act, k)
+        tokens = np.full((B, k + 1), self.pad_id, np.int32)
+        positions = np.full((B, k + 1), INVALID_POS, np.int32)
+        segs = np.full((B, k + 1), -1, np.int32)
+        wslots = np.full((B, k + 1), TRASH_PAGE * page, np.int32)
+        keys = np.zeros((B, 2), np.uint32)
+        folds = np.zeros((B,), np.int32)
+        fresh_m = np.zeros((B,), bool)
+        fresh_pages = np.full((B * (k + 1),), TRASH_PAGE, np.int32)
+        n_fresh = 0
+        for s in act:
+            row = self.sched.slot_req[s]
+            g = row.group
+            rc = len(row.toks)
+            nf = min(len(row.forced), k)
+            if nf:
+                drafts[s, :nf] = row.forced[:nf]
+            start_rp = rc if row.fresh else rc - 1
+            if self.window is not None:
+                self._reclaim_row(s, row, len(g.prompt) + start_rp)
+            if row.fresh:
+                blk = [(int(drafts[s, j]), rc + j) for j in range(k)] \
+                    + [(self.pad_id, None)]
+            else:
+                blk = [(row.toks[-1], rc - 1)] \
+                    + [(int(drafts[s, j]), rc + j) for j in range(k)]
+            for j, (tv, rp) in enumerate(blk):
+                if rp is None or rp >= g.max_new:
+                    continue                    # masked slot: trash page
+                pidx = rp // page
+                while pidx >= len(row.pages):
+                    fresh_pages[n_fresh] = self._alloc_resp_page(
+                        s, row, len(row.pages))
+                    n_fresh += 1
+                tokens[s, j] = tv
+                positions[s, j] = len(g.prompt) + rp
+                segs[s, j] = 0
+                wslots[s, j] = row.pages[pidx] * page + rp % page
+            keys[s] = g.keys[rc]
+            folds[s] = row.idx
+            fresh_m[s] = row.fresh
+        if n_fresh:
+            self.caches = self._invalidate(self.caches,
+                                           jnp.asarray(fresh_pages))
+        accept, alt, lp_d, lp_a, self.caches = self._verify(
+            self.params, self.caches, self.logits, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(segs), jnp.asarray(wslots),
+            jnp.asarray(self._ptab), jnp.asarray(keys), jnp.asarray(folds),
+            jnp.asarray(fresh_m), jnp.asarray(drafts))
+        accept, alt, lp_d, lp_a = jax.device_get((accept, alt, lp_d, lp_a))
+        step = self.sched.tick()
+        self.decode_steps += 1
+        for s in act:
+            row = self.sched.slot_req[s]
+            g = row.group
+            rc = len(row.toks)
+            nf = min(len(row.forced), k)
+            ct, cl = assemble_commit(accept[s], alt[s], drafts[s],
+                                     lp_d[s], lp_a[s], n_forced=nf)
+            if len(row.forced) > k:
+                # more forced tokens pending than the block carried:
+                # commit exactly the k fed forced tokens; the last one is
+                # already fed and simply re-fed by the next steady block
+                ct, cl = ct[:k], cl[:k]
+            self.spec_steps += 1
+            self.drafted_tokens += k - nf
+            self.accepted_tokens += max(len(ct) - 1 - nf, 0)
+            ct, cl, row_done = truncate_commit(ct, cl, g.max_new - rc,
+                                               self.eos_id)
+            del row.forced[: min(len(ct), len(row.forced))]
+            row.toks.extend(ct)
+            if self.capture_logprobs:
+                row.lps.extend(cl)
+            self._draft.commit(s, ct)
+            self.generated_tokens += len(ct)
+            row.fresh = False
+            if row_done:
+                self._finish_row(s, row, step)
+                self._draft.stop(s)
+            else:
+                # speculative pages past the committed-and-fed frontier
+                # hold only rejected drafts — roll them back
+                self._rollback_row(s, row, len(row.toks) - 2)
+        return True
 
     # -- standalone serving -------------------------------------------------
 

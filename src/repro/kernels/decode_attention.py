@@ -1,11 +1,21 @@
-"""Flash-decode Pallas kernel: one new token's GQA attention against a long
-KV cache, blocked over cache length with an online-softmax accumulator in
-VMEM — the serving-side hot spot of the decoupled deployment (decode_32k /
+"""Flash-decode Pallas kernel: new tokens' GQA attention against a long KV
+cache, blocked over cache length with an online-softmax accumulator in VMEM
+— the serving-side hot spot of the decoupled deployment (decode_32k /
 long_500k shapes).
 
-Layout: grid = (B, Hkv, nL) with the cache-length axis innermost; the
-(G, Dv) accumulator for the Hkv head's G query heads lives in VMEM scratch.
-Invalid cache slots carry pos >= 2**30 and are masked by the causal rule.
+Two query shapes share one kernel body:
+
+  * q_len = 1 (``decode_attention``): one new token per row — the plain
+    continuous-batching decode step;
+  * q_len = k+1 (``verify_attention``): the spec-decode verify block
+    (DESIGN.md §Spec-decode) — k drafted tokens plus the unfed committed
+    token attend in ONE pass, each query row masked by its OWN position, so
+    intra-block causality needs no extra machinery.
+
+Layout: grid = (B, Hkv, nL) with the cache-length axis innermost; queries
+are flattened to R = q_len * G rows per Hkv head and the (R, Dv)
+accumulator lives in VMEM scratch. Invalid cache slots carry pos >= 2**30
+and are masked by the causal rule.
 """
 from __future__ import annotations
 
@@ -32,11 +42,11 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    q = q_ref[0, 0].astype(jnp.float32)            # (R, D)
     k = k_ref[0, :, 0].astype(jnp.float32)         # (bL, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale  # (G, bL)
-    qp = qpos_ref[0]                               # scalar-ish (1,)
+                            preferred_element_type=jnp.float32) * scale  # (R, bL)
+    qp = qpos_ref[0]                               # (R,) per-query positions
     kp = kpos_ref[0]                               # (bL,)
     ok = kp[None, :] <= qp[:, None]
     if window is not None:
@@ -60,6 +70,50 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _flash_rows(qr, k, v, kv_pos, q_pos_rows, *, scale: float,
+                window: Optional[int], block_l: int, interpret: bool):
+    """Blocked online-softmax attention for R query rows per Hkv head.
+
+    qr: (B, Hkv, R, D) flattened query rows; q_pos_rows: (B, R) each row's
+    own position (decode broadcasts one position over G rows; verify
+    interleaves q_len positions x G). k/v: (B, L, Hkv, Dv); kv_pos: (B, L).
+    Returns (B, Hkv, R, Dv) in qr.dtype.
+    """
+    B, Hkv, R, D = qr.shape
+    _, L, _, Dv = v.shape
+
+    bL = min(block_l, L)
+    pad = (-L) % bL
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    L_p = L + pad
+    nL = L_p // bL
+
+    grid = (B, Hkv, nL)
+    kernel = functools.partial(_kernel, scale=scale, window=window, nL=nL)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, R), lambda b, h, li: (b, 0)),           # q_pos
+            pl.BlockSpec((1, 1, R, D), lambda b, h, li: (b, h, 0, 0)),
+            pl.BlockSpec((1, bL, 1, D), lambda b, h, li: (b, li, h, 0)),
+            pl.BlockSpec((1, bL, 1, Dv), lambda b, h, li: (b, li, h, 0)),
+            pl.BlockSpec((1, bL), lambda b, h, li: (b, li)),         # kv_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, Dv), lambda b, h, li: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, Dv), qr.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R, Dv), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos_rows, qr, k, v, kv_pos)
+
+
 @functools.partial(
     jax.jit, static_argnames=("scale", "window", "block_l", "interpret"))
 def decode_attention(q, k, v, kv_pos, q_pos, *,
@@ -72,39 +126,64 @@ def decode_attention(q, k, v, kv_pos, q_pos, *,
     _, L, Hkv, Dv = v.shape
     G = H // Hkv
     scale = D ** -0.5 if scale is None else scale
-
-    bL = min(block_l, L)
-    pad = (-L) % bL
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
-    L_p = L + pad
-    nL = L_p // bL
-
     qr = q.reshape(B, Hkv, G, D)
-    grid = (B, Hkv, nL)
-    kernel = functools.partial(_kernel, scale=scale, window=window, nL=nL)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h, li: (b, 0)),          # q_pos
-            pl.BlockSpec((1, 1, G, D), lambda b, h, li: (b, h, 0, 0)),
-            pl.BlockSpec((1, bL, 1, D), lambda b, h, li: (b, li, h, 0)),
-            pl.BlockSpec((1, bL, 1, Dv), lambda b, h, li: (b, li, h, 0)),
-            pl.BlockSpec((1, bL), lambda b, h, li: (b, li)),        # kv_pos
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, li: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((G, Dv), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q_pos.reshape(B, 1), qr, k, v, kv_pos)
+    qp = jnp.broadcast_to(q_pos[:, None], (B, G))
+    out = _flash_rows(qr, k, v, kv_pos, qp, scale=scale, window=window,
+                      block_l=block_l, interpret=interpret)
     return out.reshape(B, H, Dv)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_l", "interpret"))
+def verify_attention(q, k, v, kv_pos, q_pos, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     block_l: int = 256, interpret: bool = False):
+    """Multi-token verify block (DESIGN.md §Spec-decode): q: (B, S, H, D)
+    where S = k+1 drafted-plus-unfed tokens; q_pos: (B, S) each token's own
+    position (the cache already holds the block's K/V, so causality within
+    the block is the ordinary position mask); k/v: (B, L, Hkv, Dv);
+    kv_pos: (B, L). Returns (B, S, H, Dv) in q.dtype."""
+    B, S, H, D = q.shape
+    _, L, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    # flatten to R = S*G query rows per Hkv head, position repeated per G
+    qr = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, Hkv, S * G, D)
+    qp = jnp.repeat(q_pos, G, axis=1)                          # (B, S*G)
+    out = _flash_rows(qr, k, v, kv_pos, qp, scale=scale, window=window,
+                      block_l=block_l, interpret=interpret)
+    out = out.reshape(B, Hkv, S, G, Dv).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, S, H, Dv)
+
+
+def _gather_pages(k_pages, v_pages, pos_pages, page_table):
+    """(P, page, Hkv, D) pools + (B, n_max) tables -> each row's logical
+    (B, L, Hkv, D) context (null page 0 carries pos 2^30, masked)."""
+    B, n_max = page_table.shape
+    P, page = pos_pages.shape
+    L = n_max * page
+    k = k_pages[page_table].reshape(B, L, k_pages.shape[2],
+                                    k_pages.shape[-1])
+    v = v_pages[page_table].reshape(B, L, v_pages.shape[2],
+                                    v_pages.shape[-1])
+    kv_pos = pos_pages[page_table].reshape(B, L)
+    return k, v, kv_pos
+
+
+def _gather_latent_pages(ckv_pages, kr_pages, pos_pages, page_table):
+    """Latent pools -> MQA-shaped (B, L, 1, r+rd) keys / (B, L, 1, r)
+    values (absorbed MLA decode is MQA with Dk = r + rd, Dv = r)."""
+    B, n_max = page_table.shape
+    P, page, r = ckv_pages.shape
+    L = n_max * page
+    ckv = ckv_pages[page_table].reshape(B, L, r)
+    kr = kr_pages[page_table].reshape(B, L, kr_pages.shape[-1])
+    k = jnp.concatenate([ckv, kr], axis=-1)[:, :, None, :]
+    v = ckv[:, :, None, :]
+    kv_pos = pos_pages[page_table].reshape(B, L)
+    return k, v, kv_pos
 
 
 @functools.partial(
@@ -121,14 +200,23 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, page_table, q_pos,
     context — one shared physical prompt copy per GRPO group — and the
     blocked online-softmax kernel above consumes it unchanged.
     """
-    B = q.shape[0]
-    P, page, Hkv, Dv = v_pages.shape
-    n_max = page_table.shape[1]
-    L = n_max * page
-    k = k_pages[page_table].reshape(B, L, Hkv, k_pages.shape[-1])
-    v = v_pages[page_table].reshape(B, L, Hkv, Dv)
-    kv_pos = pos_pages[page_table].reshape(B, L)
+    k, v, kv_pos = _gather_pages(k_pages, v_pages, pos_pages, page_table)
     return decode_attention(q, k, v, kv_pos, q_pos, scale=scale,
+                            window=window, block_l=block_l,
+                            interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_l", "interpret"))
+def paged_verify_attention(q, k_pages, v_pages, pos_pages, page_table,
+                           q_pos, *, scale: Optional[float] = None,
+                           window: Optional[int] = None,
+                           block_l: int = 256, interpret: bool = False):
+    """Spec-decode verify over a paged KV pool: q: (B, S, H, D) with the
+    k+1-token block already written into the pool (speculative pages), so
+    the gathered context + per-token position mask give exact causality."""
+    k, v, kv_pos = _gather_pages(k_pages, v_pages, pos_pages, page_table)
+    return verify_attention(q, k, v, kv_pos, q_pos, scale=scale,
                             window=window, block_l=block_l,
                             interpret=interpret)
 
@@ -150,15 +238,25 @@ def paged_mla_decode_attention(q, ckv_pages, kr_pages, pos_pages, page_table,
     Dk = r + rd and Dv = r, so after the latent gather the blocked
     online-softmax kernel above consumes it unchanged (Hkv = 1, G = H).
     """
-    B = q.shape[0]
-    P, page, r = ckv_pages.shape
-    n_max = page_table.shape[1]
-    L = n_max * page
-    ckv = ckv_pages[page_table].reshape(B, L, r)
-    kr = kr_pages[page_table].reshape(B, L, kr_pages.shape[-1])
-    k = jnp.concatenate([ckv, kr], axis=-1)[:, :, None, :]   # (B, L, 1, r+rd)
-    v = ckv[:, :, None, :]                                   # (B, L, 1, r)
-    kv_pos = pos_pages[page_table].reshape(B, L)
+    k, v, kv_pos = _gather_latent_pages(ckv_pages, kr_pages, pos_pages,
+                                        page_table)
     return decode_attention(q, k, v, kv_pos, q_pos, scale=scale,
+                            window=window, block_l=block_l,
+                            interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "block_l", "interpret"))
+def paged_mla_verify_attention(q, ckv_pages, kr_pages, pos_pages,
+                               page_table, q_pos, *,
+                               scale: Optional[float] = None,
+                               window: Optional[int] = None,
+                               block_l: int = 256, interpret: bool = False):
+    """Spec-decode verify over the paged MLA latent pool: q: (B, S, H,
+    r + rd) absorbed queries for the k+1-token block; q_pos: (B, S).
+    Returns (B, S, H, r) latent outputs."""
+    k, v, kv_pos = _gather_latent_pages(ckv_pages, kr_pages, pos_pages,
+                                        page_table)
+    return verify_attention(q, k, v, kv_pos, q_pos, scale=scale,
                             window=window, block_l=block_l,
                             interpret=interpret)

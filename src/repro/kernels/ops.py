@@ -11,9 +11,14 @@ import jax
 
 from repro.kernels.transfer_cast import transfer_cast as _transfer_cast
 from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.decode_attention import verify_attention as _verify
 from repro.kernels.decode_attention import paged_decode_attention as _paged
 from repro.kernels.decode_attention import (paged_mla_decode_attention
                                             as _paged_mla)
+from repro.kernels.decode_attention import (paged_verify_attention
+                                            as _paged_verify)
+from repro.kernels.decode_attention import (paged_mla_verify_attention
+                                            as _paged_mla_verify)
 from repro.kernels.spa_attention import spa_attention as _spa, block_map
 
 
@@ -67,6 +72,42 @@ def paged_mla_decode_attention(q, ckv_pages, kr_pages, pos_pages, page_table,
                       interpret=itp)
 
 
+def verify_attention(q, k, v, kv_pos, q_pos, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     block_l: int = 256,
+                     interpret: Optional[bool] = None):
+    """Multi-token spec-decode verify attention (decode_attention.py)."""
+    itp = auto_interpret() if interpret is None else interpret
+    return _verify(q, k, v, kv_pos, q_pos, scale=scale, window=window,
+                   block_l=block_l, interpret=itp)
+
+
+def paged_verify_attention(q, k_pages, v_pages, pos_pages, page_table, q_pos,
+                           *, scale: Optional[float] = None,
+                           window: Optional[int] = None,
+                           block_l: int = 256,
+                           interpret: Optional[bool] = None):
+    """Spec-decode verify over a paged KV pool (decode_attention.py)."""
+    itp = auto_interpret() if interpret is None else interpret
+    return _paged_verify(q, k_pages, v_pages, pos_pages, page_table, q_pos,
+                         scale=scale, window=window, block_l=block_l,
+                         interpret=itp)
+
+
+def paged_mla_verify_attention(q, ckv_pages, kr_pages, pos_pages, page_table,
+                               q_pos, *, scale: Optional[float] = None,
+                               window: Optional[int] = None,
+                               block_l: int = 256,
+                               interpret: Optional[bool] = None):
+    """Spec-decode verify over a paged MLA latent pool
+    (decode_attention.py)."""
+    itp = auto_interpret() if interpret is None else interpret
+    return _paged_mla_verify(q, ckv_pages, kr_pages, pos_pages, page_table,
+                             q_pos, scale=scale, window=window,
+                             block_l=block_l, interpret=itp)
+
+
 def transfer_cast(x, dtype, *, block_rows: int = 256,
                   interpret: Optional[bool] = None):
     """Fused cast+copy for the weight-plane wire path (transfer_cast.py)."""
@@ -74,6 +115,7 @@ def transfer_cast(x, dtype, *, block_rows: int = 256,
     return _transfer_cast(x, dtype, block_rows=block_rows, interpret=itp)
 
 
-__all__ = ["spa_attention", "decode_attention", "paged_decode_attention",
-           "paged_mla_decode_attention", "block_map", "auto_interpret",
-           "transfer_cast"]
+__all__ = ["spa_attention", "decode_attention", "verify_attention",
+           "paged_decode_attention", "paged_mla_decode_attention",
+           "paged_verify_attention", "paged_mla_verify_attention",
+           "block_map", "auto_interpret", "transfer_cast"]

@@ -72,3 +72,30 @@ def decode_attention_ref(q, k, v, kv_pos, q_pos, *,
     p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
     return o.reshape(B, H, Dv)
+
+
+def verify_attention_ref(q, k, v, kv_pos, q_pos, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None):
+    """Multi-token spec-decode verify attention against a cache that
+    already holds the block's K/V (DESIGN.md §Spec-decode).
+
+    q: (B, S, H, D) the k+1-token verify block; k/v: (B, L, Hkv, D);
+    kv_pos: (B, L) with INVALID slots marked by a huge position;
+    q_pos: (B, S) each block token's own position — causality within the
+    block is the ordinary position mask. Returns (B, S, H, Dv) f32.
+    """
+    B, S, H, D = q.shape
+    _, L, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    ok = kv_pos[:, None, :] <= q_pos[:, :, None]               # (B, S, L)
+    if window is not None:
+        ok &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, S, H, Dv)

@@ -44,10 +44,13 @@ def serve_batch(cfg, prompts, *, max_prompt_len: int, max_new: int,
 
 def serve_paged(cfg, prompts, *, max_prompt_len: int, max_new: int,
                 num_slots: int = 4, page_size: int = 16,
-                temperature: float = 0.7, seed: int = 0):
+                temperature: float = 0.7, seed: int = 0,
+                spec_k: int = 0, spec_draft: str = "prompt_lookup"):
     """Serve independent requests through the token-level paged engine
     (each request is its own group of size 1); returns (completions in
-    completion order, stats)."""
+    completion order, stats). ``spec_k`` > 0 turns on speculative decode
+    (DESIGN.md §Spec-decode): k drafted tokens verified per target
+    forward, distribution-exact, acceptance rate in the stats."""
     from repro.core.paged import FIRST_PAGE, PagedGroupEngine
     if num_slots < 1 or page_size < 1:
         raise ValueError(f"serve_paged needs num_slots >= 1 and "
@@ -60,14 +63,75 @@ def serve_paged(cfg, prompts, *, max_prompt_len: int, max_new: int,
                            num_pages=pages, max_prompt_len=max_prompt_len,
                            max_new_tokens=max_new, group_size=1,
                            temperature=temperature,
-                           capture_logprobs=False)   # serving: no consumer
+                           capture_logprobs=False,   # serving: no consumer
+                           spec_k=spec_k, spec_draft=spec_draft, seed=seed)
     t0 = time.time()
     done = eng.serve(params, prompts, jax.random.PRNGKey(seed + 1))
     wall = time.time() - t0
     toks = sum(len(c.response_ids) for c in done)
-    return done, {"wall_s": wall, "generated_tokens": toks,
-                  "tok_per_s": toks / wall,
-                  "decode_steps": eng.decode_steps}
+    stats = {"wall_s": wall, "generated_tokens": toks,
+             "tok_per_s": toks / wall, "decode_steps": eng.decode_steps}
+    if spec_k:
+        # tokens committed per PER-ROW verify forward (1.0 = no spec win;
+        # up to k+1 on a clean sweep) — engine steps batch many rows, so
+        # decode_steps alone would conflate batching with speculation
+        stats.update(spec_k=spec_k, acceptance_rate=eng.acceptance_rate,
+                     tokens_per_forward=(toks / eng.spec_steps
+                                         if eng.spec_steps else 0.0))
+    return done, stats
+
+
+def serve_shared(cfg, system_prompt, suffixes, *, max_prompt_len: int,
+                 max_new: int, page_size: int = 16,
+                 temperature: float = 0.7, seed: int = 0,
+                 spec_k: int = 0, spec_draft: str = "prompt_lookup"):
+    """Serve N requests that share one system prompt through REFCOUNTED
+    shared pages: the prompt prefills once, its pages enter every row's
+    table with refcount N, then each row teacher-forces its own request
+    suffix and decodes freely — the serving analogue of a GRPO group
+    (DESIGN.md §Continuous-batching, §Spec-decode).
+
+    Returns (completions with the forced suffix stripped, stats incl. the
+    pages the sharing saved vs N private prompt copies)."""
+    from repro.core.cbatch import Completed
+    from repro.core.paged import PagedGroupEngine
+    N = len(suffixes)
+    params = init(jax.random.PRNGKey(seed), cfg)
+    eng = PagedGroupEngine(cfg, num_slots=N, page_size=page_size,
+                           num_pages=0,      # auto-size
+                           max_prompt_len=max_prompt_len,
+                           max_new_tokens=max_new, group_size=N,
+                           temperature=temperature, capture_logprobs=False,
+                           spec_k=spec_k, spec_draft=spec_draft, seed=seed)
+    eng.set_params(params)
+    t0 = time.time()
+    handle = eng.submit(np.asarray(system_prompt, np.int32),
+                        jax.random.PRNGKey(seed + 1), forced=suffixes)
+    while eng.step():
+        pass
+    out = handle.result(timeout=0)
+    wall = time.time() - t0
+    ids = np.asarray(out.response_ids)
+    lens = np.asarray(out.response_len)
+    done = []
+    for i, suf in enumerate(suffixes):
+        done.append(Completed(request_id=i,
+                              response_ids=ids[i, len(suf): lens[i]],
+                              finish_step=handle._group.finish_step))
+    # forced suffixes are request INPUTS (stripped from the completions):
+    # count only freely generated tokens, comparable to serve_paged
+    forced = sum(len(s) for s in suffixes)
+    toks = int(lens.sum()) - forced
+    n_prompt_pages = -(-len(system_prompt) // page_size)
+    stats = {"wall_s": wall, "generated_tokens": toks,
+             "forced_tokens": forced,
+             "tok_per_s": toks / wall, "decode_steps": eng.decode_steps,
+             "prompt_pages_stored": n_prompt_pages,
+             "prompt_pages_saved": (N - 1) * n_prompt_pages,
+             "peak_pages": eng.peak_pages_used}
+    if spec_k:
+        stats.update(spec_k=spec_k, acceptance_rate=eng.acceptance_rate)
+    return done, stats
 
 
 def main() -> None:
@@ -80,12 +144,54 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots (paged engine)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decode (paged engine; DESIGN.md "
+                         "§Spec-decode) — stats report acceptance rate")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify step")
+    ap.add_argument("--spec-draft", default="prompt_lookup",
+                    choices=["prompt_lookup", "model"])
+    ap.add_argument("--shared-system", type=int, default=0, metavar="N",
+                    help="serve N requests sharing one system prompt "
+                         "through refcounted shared pages (each request "
+                         "teacher-forces its own suffix, then decodes)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
     tok = Tokenizer(cfg.vocab_size)
     task = ArithmeticTask(seed=args.seed)
+    spec_k = args.spec_k if args.spec else 0
+    if spec_k and args.engine != "paged" and not args.shared_system:
+        raise SystemExit("--spec rides the paged engine here; add "
+                         "--engine paged (or --shared-system N)")
+
+    if args.shared_system:
+        # shared-system-prompt scenario: one refcounted prompt page set
+        # serves every request; suffixes are the per-request questions
+        system = np.asarray(
+            tok.encode("You are a terse arithmetic solver. ")[
+                : args.max_prompt_len], np.int32)
+        problems = task.batch(args.shared_system)
+        suffixes = [np.asarray(tok.encode(p.prompt)[: args.max_new // 2],
+                               np.int32) for p in problems]
+        done, stats = serve_shared(
+            cfg, system, suffixes, max_prompt_len=args.max_prompt_len,
+            max_new=args.max_new, page_size=args.page_size, seed=args.seed,
+            spec_k=spec_k, spec_draft=args.spec_draft)
+        extra = (f", accept={stats['acceptance_rate']:.2f}"
+                 if spec_k else "")
+        print(f"{args.arch} (shared-system x{args.shared_system}): "
+              f"{stats['generated_tokens']} tokens in "
+              f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
+              f"{stats['decode_steps']} decode steps, "
+              f"{stats['prompt_pages_saved']} prompt pages saved by "
+              f"sharing{extra})")
+        for c in done[:4]:
+            print(f"  req {c.request_id}: "
+                  f"{tok.decode(c.response_ids.tolist())!r}")
+        return
+
     problems = task.batch(args.num_requests)
     prompts = [np.asarray(tok.encode(p.prompt)[: args.max_prompt_len],
                           np.int32) for p in problems]
@@ -94,11 +200,17 @@ def main() -> None:
         done, stats = serve_paged(
             cfg, prompts, max_prompt_len=args.max_prompt_len,
             max_new=args.max_new, num_slots=args.slots,
-            page_size=args.page_size, seed=args.seed)
-        print(f"{args.arch} (paged x{args.slots}): {len(done)} requests in "
-              f"completion order, {stats['generated_tokens']} tokens in "
+            page_size=args.page_size, seed=args.seed,
+            spec_k=spec_k, spec_draft=args.spec_draft)
+        extra = (f", accept={stats['acceptance_rate']:.2f}, "
+                 f"{stats['tokens_per_forward']:.2f} tok/forward"
+                 if spec_k else "")
+        print(f"{args.arch} (paged x{args.slots}"
+              f"{f' spec k={spec_k}' if spec_k else ''}): {len(done)} "
+              f"requests in completion order, "
+              f"{stats['generated_tokens']} tokens in "
               f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
-              f"{stats['decode_steps']} decode steps)")
+              f"{stats['decode_steps']} decode steps{extra})")
         for c in done[:4]:
             print(f"  req {c.request_id} finished at step {c.finish_step}: "
                   f"{tok.decode(c.response_ids.tolist())!r}")

@@ -47,9 +47,23 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
     tri = TriModelState.create(params)
     sampler = None
     if scripted_fn is None:
-        sampler = Sampler(cfg, rl.max_prompt_len, rl.max_response_len,
-                          temperature=rl.temperature, top_p=rl.top_p,
-                          capture_logprobs=rl.capture_logprobs)
+        if rl.spec_decode and rl.rollout_engine == "group":
+            # speculative group engine (DESIGN.md §Spec-decode): same
+            # generate() surface, k+1 tokens per target forward; greedy
+            # decode token-identical, sampled decode distribution-exact,
+            # captured logprobs come from the verify pass
+            from repro.configs.base import require_engine_support
+            require_engine_support(cfg, "spec")
+            from repro.spec import SpecSampler
+            sampler = SpecSampler(
+                cfg, rl.max_prompt_len, rl.max_response_len,
+                spec_k=rl.spec_k, draft=rl.spec_draft, ngram=rl.spec_ngram,
+                temperature=rl.temperature, top_p=rl.top_p,
+                capture_logprobs=rl.capture_logprobs, seed=seed)
+        else:
+            sampler = Sampler(cfg, rl.max_prompt_len, rl.max_response_len,
+                              temperature=rl.temperature, top_p=rl.top_p,
+                              capture_logprobs=rl.capture_logprobs)
 
     def paged_engine():
         if rl.rollout_engine != "paged" or scripted_fn is not None:
@@ -70,7 +84,9 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
             num_pages=rl.kv_pages, max_prompt_len=rl.max_prompt_len,
             max_new_tokens=rl.max_response_len, group_size=rl.group_size,
             temperature=rl.temperature, top_p=rl.top_p,
-            capture_logprobs=rl.capture_logprobs)
+            capture_logprobs=rl.capture_logprobs,
+            spec_k=rl.spec_k if rl.spec_decode else 0,
+            spec_draft=rl.spec_draft, spec_ngram=rl.spec_ngram, seed=seed)
 
     instances = [InferenceInstance(i, cfg, sampler, latency_fn=latency_fn,
                                    scripted_fn=scripted_fn,
@@ -120,6 +136,17 @@ def main() -> None:
     ap.add_argument("--cbatch-slots", type=int, default=8,
                     help="decode slots per paged instance")
     ap.add_argument("--kv-page-size", type=int, default=16)
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decode for rollouts (DESIGN.md "
+                         "§Spec-decode): k drafted tokens verified per "
+                         "target forward, distribution-exact (Proposition "
+                         "1 intact)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify step")
+    ap.add_argument("--spec-draft", default="prompt_lookup",
+                    choices=["prompt_lookup", "model"],
+                    help="draft provider: n-gram prompt lookup (no extra "
+                         "model) or a small resident draft model")
     ap.add_argument("--max-prompt-len", type=int, default=48)
     ap.add_argument("--max-response-len", type=int, default=16)
     ap.add_argument("--prompt-pad", type=int, default=0)
@@ -167,6 +194,8 @@ def main() -> None:
         shared_prompt_attention=args.spa, spa_align=args.spa_align,
         rollout_engine=args.rollout_engine, cbatch_slots=args.cbatch_slots,
         kv_page_size=args.kv_page_size,
+        spec_decode=args.spec, spec_k=args.spec_k,
+        spec_draft=args.spec_draft,
         capture_logprobs=not args.no_capture_logprobs,
         transfer_overlap=not args.no_transfer_overlap,
         transfer_bucket_bytes=args.transfer_bucket_bytes,

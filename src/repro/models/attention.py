@@ -173,22 +173,26 @@ class DenseCacheBackend:
 
     def write_decode(self, state: dict, vals: tuple, positions, segments,
                      cache_offset) -> dict:
-        """One token per row (vals are (B, 1, *shp)); ``cache_offset`` is a
-        scalar (lock-step engines) or (B,) per-row offsets (slot engines)."""
+        """Decode-time write of S tokens per row (vals are (B, S, *shp);
+        S == 1 for plain decode, S == k+1 for the spec-decode verify block
+        — DESIGN.md §Spec-decode); ``cache_offset`` is a scalar (lock-step
+        engines) or (B,) per-row START offsets (slot engines): row b's
+        token j lands at slot ``off[b] + j`` (mod L on ring caches)."""
         L = self.L
         off = jnp.asarray(cache_offset)
         new = {}
         if off.ndim == 1:
             # per-row offsets (continuous batching: each slot is at a
-            # different position) -> per-row one-hot masked write.
-            idx = off % L if self.ring else off
-            sel = (jnp.arange(L, dtype=jnp.int32)[None, :]
-                   == idx[:, None])                            # (B, L)
+            # different position) -> batched scatter at off[b] + j.
+            S = positions.shape[1]
+            idx = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+            if self.ring:
+                idx = idx % L
+            b_idx = jnp.arange(off.shape[0], dtype=jnp.int32)[:, None]
             for (n, shp), val in zip(cache_streams(self.cfg), vals):
-                seln = sel.reshape(sel.shape + (1,) * len(shp))
-                new[n] = jnp.where(seln, val, state[n])
-            new["pos"] = jnp.where(sel, positions, state["pos"])
-            new["seg"] = jnp.where(sel, segments, state["seg"])
+                new[n] = state[n].at[b_idx, idx].set(val)
+            new["pos"] = state["pos"].at[b_idx, idx].set(positions)
+            new["seg"] = state["seg"].at[b_idx, idx].set(segments)
         else:
             idx = cache_offset % L if self.ring else cache_offset
             for (n, shp), val in zip(cache_streams(self.cfg), vals):
@@ -255,19 +259,21 @@ class PagedCacheBackend:
 
     def write_decode(self, state: dict, vals: tuple, positions,
                      cache_offset) -> dict:
-        """cache_offset: (B,) flat slot index (page_id * page_size + slot)
-        where this step's streams land — engines point inactive rows at the
-        trash page."""
+        """cache_offset: (B, S) flat slot indices (page_id * page_size +
+        slot) where this step's S tokens per row land (S == 1 for plain
+        decode, k+1 for the spec verify block) — engines point inactive
+        rows and masked speculative slots at the trash page, so duplicate
+        trash indices across rows are harmless garbage."""
         P, page = state["pos_pages"].shape
         flat = lambda a: a.reshape((P * page,) + a.shape[2:])
-        idx = jnp.asarray(cache_offset)
+        idx = jnp.asarray(cache_offset)                        # (B, S)
         new = {}
         for (n, _), val in zip(cache_streams(self.cfg), vals):
             pool = state[n + "_pages"]
-            new[n + "_pages"] = flat(pool).at[idx].set(val[:, 0]).reshape(
+            new[n + "_pages"] = flat(pool).at[idx].set(val).reshape(
                 pool.shape)
         new["pos_pages"] = flat(state["pos_pages"]).at[idx].set(
-            positions[:, 0]).reshape(state["pos_pages"].shape)
+            positions).reshape(state["pos_pages"].shape)
         return new
 
     def gather(self, state: dict, page_table) -> tuple:
@@ -322,27 +328,51 @@ def make_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     return PagedCacheBackend(cfg, page_size).init(num_pages, dtype)
 
 
+def _is_verify(S: int, cache_offset) -> bool:
+    """Multi-token DECODE-side write (the spec plane's k+1-token verify
+    block, DESIGN.md §Spec-decode) vs prefill: every prefill call passes a
+    scalar offset (0), while verify engines pass per-row start offsets."""
+    return S > 1 and cache_offset is not None \
+        and jnp.asarray(cache_offset).ndim >= 1
+
+
+def _paged_offsets(cache_offset):
+    """Normalise the paged write offsets to (B, S) flat slot indices —
+    single-token engines pass (B,), the spec verify block (B, k+1)."""
+    off = jnp.asarray(cache_offset)
+    return off[:, None] if off.ndim == 1 else off
+
+
 def _paged_gqa_decode(params, cfg: ModelConfig, q, k, v, positions, cache,
                       cache_offset, page_table):
-    """Single-token GQA decode against the paged pool. Returns
-    (out (B,1,H,Dv), new_cache)."""
-    B = q.shape[0]
+    """GQA decode against the paged pool: S == 1 plain decode or S == k+1
+    spec-decode verify (DESIGN.md §Spec-decode) — the written block then
+    attends over the row's full gathered context, so intra-block causality
+    falls out of the position mask. Returns (out (B,S,H,Dv), new_cache)."""
+    B, S = q.shape[:2]
     be = backend_of(cfg, cache)
-    new_cache = be.write_decode(cache, (k, v), positions, cache_offset)
+    new_cache = be.write_decode(cache, (k, v), positions,
+                                _paged_offsets(cache_offset))
     if cfg.use_pallas_attention:
         # flash-decode Pallas kernel over the page pool (§Perf): the kernel
         # wrapper owns the page-table gather; causal masking comes from kv
         # pos (invalid slots carry 2^30).
-        from repro.kernels.ops import paged_decode_attention as _flash_paged
-        out = _flash_paged(q[:, 0], new_cache["k_pages"],
-                           new_cache["v_pages"], new_cache["pos_pages"],
-                           page_table, positions[:, 0],
-                           window=cfg.sliding_window)[:, None]
+        if S == 1:
+            from repro.kernels.ops import paged_decode_attention as _flash
+            out = _flash(q[:, 0], new_cache["k_pages"],
+                         new_cache["v_pages"], new_cache["pos_pages"],
+                         page_table, positions[:, 0],
+                         window=cfg.sliding_window)[:, None]
+        else:
+            from repro.kernels.ops import paged_verify_attention as _flash
+            out = _flash(q, new_cache["k_pages"], new_cache["v_pages"],
+                         new_cache["pos_pages"], page_table, positions,
+                         window=cfg.sliding_window)
         return out, new_cache
     # pure-JAX path: gather each row's logical context,
     # (B, n_max, page, ...) -> (B, L, ...), then single-pass decode
     kk, vv, kp = be.gather(new_cache, page_table)
-    zeros = jnp.zeros((B, 1), jnp.int32)
+    zeros = jnp.zeros((B, S), jnp.int32)
     out = chunked_attention(q, kk, vv, positions, kp, zeros,
                             jnp.zeros(kp.shape, jnp.int32),
                             window=cfg.sliding_window,
@@ -374,7 +404,7 @@ def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
 
     new_cache = None
     if cache is not None and is_paged_cache(cache):
-        assert S == 1, "paged KV cache is a decode-only path"
+        # S == 1: plain decode; S > 1: spec-decode verify block
         out, new_cache = _paged_gqa_decode(params, cfg, q, k, v, positions,
                                            cache, cache_offset, page_table)
         out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
@@ -384,7 +414,7 @@ def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
         kk, vv, kp, ks = k, v, positions, segments
     else:
         be = backend_of(cfg, cache)
-        if S == 1:
+        if S == 1 or _is_verify(S, cache_offset):
             # NOTE (SPerf, refuted): a mask-based (iota==idx select) write
             # does NOT avoid the SPMD cache gather here -- XLA computes the
             # select replicated and the gather just moves to the sharding
@@ -479,23 +509,34 @@ def _absorbed_q(params, cfg: ModelConfig, q_nope, q_rope):
 
 def _paged_mla_decode(params, cfg: ModelConfig, q_nope, q_rope, ckv, kr,
                       positions, cache, cache_offset, page_table, scale):
-    """Absorbed single-token MLA decode against the paged latent pool:
-    pages hold (ckv, kr) rows; scores and values stay in the
-    (rank + rope) latent space. Returns (o_lat (B,1,H,r), new_cache)."""
-    B = ckv.shape[0]
+    """Absorbed MLA decode against the paged latent pool (S == 1 plain
+    decode, S == k+1 spec verify): pages hold (ckv, kr) rows; scores and
+    values stay in the (rank + rope) latent space. Returns
+    (o_lat (B,S,H,r), new_cache)."""
+    B, S = ckv.shape[:2]
     be = backend_of(cfg, cache)
-    new_cache = be.write_decode(cache, (ckv, kr), positions, cache_offset)
-    q_cat = _absorbed_q(params, cfg, q_nope, q_rope)           # (B,1,H,r+rd)
+    new_cache = be.write_decode(cache, (ckv, kr), positions,
+                                _paged_offsets(cache_offset))
+    q_cat = _absorbed_q(params, cfg, q_nope, q_rope)           # (B,S,H,r+rd)
     if cfg.use_pallas_attention:
-        from repro.kernels.ops import paged_mla_decode_attention as _flash
-        o_lat = _flash(q_cat[:, 0], new_cache["ckv_pages"],
-                       new_cache["kr_pages"], new_cache["pos_pages"],
-                       page_table, positions[:, 0], scale=scale,
-                       window=cfg.sliding_window)[:, None]
+        if S == 1:
+            from repro.kernels.ops import (paged_mla_decode_attention
+                                           as _flash)
+            o_lat = _flash(q_cat[:, 0], new_cache["ckv_pages"],
+                           new_cache["kr_pages"], new_cache["pos_pages"],
+                           page_table, positions[:, 0], scale=scale,
+                           window=cfg.sliding_window)[:, None]
+        else:
+            from repro.kernels.ops import (paged_mla_verify_attention
+                                           as _flash)
+            o_lat = _flash(q_cat, new_cache["ckv_pages"],
+                           new_cache["kr_pages"], new_cache["pos_pages"],
+                           page_table, positions, scale=scale,
+                           window=cfg.sliding_window)
         return o_lat, new_cache
     ckv_all, kr_all, kp = be.gather(new_cache, page_table)
     k_cat = jnp.concatenate([ckv_all, kr_all], axis=-1)[:, :, None, :]
-    zeros = jnp.zeros((B, 1), jnp.int32)
+    zeros = jnp.zeros((B, S), jnp.int32)
     o_lat = chunked_attention(q_cat, k_cat, ckv_all[:, :, None, :],
                               positions, kp, zeros,
                               jnp.zeros(kp.shape, jnp.int32),
@@ -520,7 +561,7 @@ def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
     scale = (nd + rd) ** -0.5
 
     if cache is not None and is_paged_cache(cache):
-        assert S == 1, "paged latent cache is a decode-only path"
+        # S == 1: plain decode; S > 1: spec-decode verify block
         o_lat, new_cache = _paged_mla_decode(
             params, cfg, q_nope, q_rope, ckv, kr, positions, cache,
             cache_offset, page_table, scale)
@@ -531,9 +572,10 @@ def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
         return out, new_cache
 
     new_cache = None
+    verify = _is_verify(S, cache_offset)
     if cache is not None:
         be = backend_of(cfg, cache)
-        if S > 1 and S > be.L:
+        if S > 1 and S > be.L and not verify:
             # windowed prefill: ring-write trailing window, attend full
             # (mirrors gqa_attention's windowed-prefill path).
             new_cache = be.write_prefill(cache, (ckv, kr), positions,
@@ -541,7 +583,7 @@ def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
             ckv_all, kr_all = ckv, kr
             kp, ks = positions, segments
         else:
-            if S == 1:
+            if S == 1 or verify:
                 new_cache = be.write_decode(cache, (ckv, kr), positions,
                                             segments, cache_offset)
             else:
@@ -551,7 +593,7 @@ def mla_attention(params, cfg: ModelConfig, x, positions, segments, *,
     else:
         ckv_all, kr_all, kp, ks = ckv, kr, positions, segments
 
-    if S == 1 and cache is not None:
+    if (S == 1 or verify) and cache is not None:
         # absorbed decode: fold w_uk into q, attend in latent space.
         q_cat = _absorbed_q(params, cfg, q_nope, q_rope)        # (B,1,H,r+rd)
         k_cat = jnp.concatenate([ckv_all, kr_all], axis=-1)[:, :, None, :]

@@ -284,16 +284,24 @@ def forward_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
 
 
 def init_caches(params: dict, cfg: ModelConfig, batch: int, length: int, *,
-                ring: bool = True) -> dict:
+                ring: bool = True, ring_slack: int = 0) -> dict:
     """Build per-layer decode caches, stacked over layers to match scan.
 
     Sliding-window configs get the ring-buffer backend sized to the window
     (``ring=True``, the decode default); ``ring=False`` forces a full
     ``length`` dense cache regardless — the paged engine's prompt prefill
     uses it so every prompt token's KV is addressable for the page splice
-    (window masking still applies inside the attention)."""
+    (window masking still applies inside the attention).
+
+    ``ring_slack`` widens the ring beyond the window: the spec-decode
+    verify block writes up to k speculative tokens past the committed
+    frontier, and on an exactly-window-sized ring those writes would evict
+    entries the block's EARLIER queries can still see (q - pos < window).
+    A ring of window + k + 1 slots keeps every in-window entry resident
+    for the whole block; the window mask itself is position-driven and
+    unchanged (DESIGN.md §Spec-decode)."""
     dt = dtype_of(cfg.compute_dtype)
-    kv_len = (min(length, cfg.sliding_window)
+    kv_len = (min(length, cfg.sliding_window + ring_slack)
               if cfg.sliding_window and ring else length)
 
     def one_layer(_):

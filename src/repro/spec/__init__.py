@@ -1,0 +1,23 @@
+"""Speculative-decode plane (DESIGN.md §Spec-decode): draft/verify decode
+for the rollout pool and the serving path, distribution-exact by rejection
+sampling — the paper's Proposition 1 on-policy equality survives untouched,
+unlike staleness-based speedups.
+
+* ``verify.py``  — the exactness core: accept/reject drafted tokens against
+  the k+1 target distributions one multi-token forward produces, resample
+  rejections from the leftover distribution, bonus-sample after a clean
+  sweep. Greedy verification is token-identical to non-spec decode.
+* ``draft.py``   — pluggable draft providers: prompt-lookup n-gram reuse
+  (no extra model) and a small resident draft model.
+* ``sampler.py`` — ``SpecSampler``, the group-at-a-time spec engine (the
+  ``Sampler`` drop-in); the dense-slot and paged engines integrate spec
+  in ``core/cbatch.py`` / ``core/paged.py``.
+"""
+from repro.spec.draft import (ModelDraft, PromptLookupDraft, draft_config,
+                              make_draft_provider)
+from repro.spec.sampler import SpecSampler
+from repro.spec.verify import assemble_commit, verify_block
+
+__all__ = ["verify_block", "assemble_commit", "PromptLookupDraft",
+           "ModelDraft", "draft_config", "make_draft_provider",
+           "SpecSampler"]

@@ -1,0 +1,267 @@
+"""Draft providers for the spec-decode plane (DESIGN.md §Spec-decode).
+
+Both providers are DETERMINISTIC (point-mass proposals), which is what
+makes `spec/verify.py`'s accept-with-prob-p rule exact. The provider API is
+slot-oriented so all three decode engines share it:
+
+    start(slot, prompt_ids)   row admitted into a decode slot
+    commit(slot, tokens)      tokens the verify step committed for the slot
+    stop(slot)                row finished / evicted
+    propose(slots, k)         (num_slots, k) int32 drafts for active slots
+
+Correctness never depends on draft quality — a garbage draft is simply
+rejected and costs nothing beyond the (bandwidth-cheap) k+1-token verify —
+so providers are free to be heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import Tokenizer
+
+
+class PromptLookupDraft:
+    """Prompt-lookup n-gram drafting (PLD): propose the k tokens that
+    followed the most recent earlier occurrence of the current context
+    suffix (n-gram, longest first). No extra model, no extra memory
+    traffic — RL math/code responses copy prompt content heavily, and
+    greedy decode of a fixed policy falls into verbatim repetition loops,
+    both of which this provider turns into multi-token accepts. With
+    shared-prompt pages the prompt is already resident, so the lookup is
+    pure host-side index arithmetic."""
+
+    def __init__(self, num_slots: int, *, ngram_max: int = 3,
+                 ngram_min: int = 1):
+        self.B = num_slots
+        self.ngram_max = ngram_max
+        self.ngram_min = max(1, ngram_min)
+        self._ctx: List[Optional[list]] = [None] * num_slots
+
+    def start(self, slot: int, prompt_ids) -> None:
+        self._ctx[slot] = [int(t) for t in np.asarray(prompt_ids)]
+
+    def commit(self, slot: int, tokens) -> None:
+        self._ctx[slot].extend(int(t) for t in tokens)
+
+    def stop(self, slot: int) -> None:
+        self._ctx[slot] = None
+
+    def _lookup(self, ctx: list, k: int) -> np.ndarray:
+        arr = np.asarray(ctx, np.int32)
+        L = len(arr)
+        for n in range(min(self.ngram_max, L - 1), self.ngram_min - 1, -1):
+            pat = arr[-n:]
+            # windows over arr[:-1]: start positions 0..L-1-n — the suffix
+            # itself (start L-n) is excluded, overlapping starts are not
+            # (self-overlap is exactly the repetition-loop case)
+            win = np.lib.stride_tricks.sliding_window_view(arr[:-1], n)
+            hits = np.nonzero((win == pat).all(axis=1))[0]
+            if len(hits):
+                i = int(hits[-1])                  # most recent occurrence
+                cand = arr[i + n: i + n + k]
+                if len(cand):
+                    out = np.empty((k,), np.int32)
+                    out[: len(cand)] = cand
+                    out[len(cand):] = cand[-1]     # pad with the tail token
+                    return out
+        return np.full((k,), arr[-1], np.int32)    # no match: repeat last
+
+    def propose(self, slots, k: int) -> np.ndarray:
+        out = np.zeros((self.B, k), np.int32)
+        for s in slots:
+            out[s] = self._lookup(self._ctx[s], k)
+        return out
+
+
+def draft_config(cfg: ModelConfig) -> ModelConfig:
+    """Default resident-draft-model shape for ``cfg``: same family and
+    vocab (proposals must live in the target's token space), half the
+    depth. In a real deployment the draft is a distilled checkpoint; here
+    its params are independently initialised and held by the engine —
+    reusing the tri-model convention of several resident param trees per
+    process (core/trimodel.py)."""
+    return dataclasses.replace(cfg, name=cfg.name + "-draft",
+                               num_layers=max(1, cfg.num_layers // 2))
+
+
+class ModelDraft:
+    """Small resident draft model, greedy-decoding k proposals per step.
+
+    The draft model free-runs: its dense cache (one row per slot,
+    ``ring=False`` so every position is addressable) is advanced with the
+    COMMITTED tokens each step, while `propose` speculatively decodes k
+    greedy tokens from the committed frontier. Speculative entries written
+    past the frontier are never visible — slot index equals position, so a
+    stale entry always carries a position greater than any live query until
+    the commit feed overwrites it (same argument as the verify block's
+    rollback, DESIGN.md §Spec-decode)."""
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int, *,
+                 max_prompt_len: int, max_ctx: int,
+                 pad_id: int = Tokenizer.PAD):
+        from repro.models import forward_hidden, init_caches
+        from repro.models.layers import lm_head_weight
+        self.cfg = cfg
+        self.params = params
+        self.B = num_slots
+        self.Lp = max_prompt_len
+        self.L = max_ctx
+        self.pad_id = pad_id
+        self._fh = forward_hidden
+        self._head = lm_head_weight
+        self.caches = init_caches(params, cfg, num_slots, max_ctx,
+                                  ring=False)
+        self.logits = jnp.zeros((num_slots, cfg.vocab_size), jnp.float32)
+        self.off = np.zeros((num_slots,), np.int32)   # committed frontier
+        self._pending: List[list] = [[] for _ in range(num_slots)]
+        self._prefill_j = jax.jit(self._prefill, donate_argnums=(0,))
+        self._feed_j = jax.jit(self._feed, donate_argnums=(0,))
+        self._step_j = jax.jit(self._step, donate_argnums=(0,))
+
+    # -- jitted cores -------------------------------------------------------
+
+    def _prefill(self, caches, tokens, length, slot):
+        """tokens: (1, Lp) right-padded; splice the row cache into
+        ``slot`` and return the last-real-token logits."""
+        cfg = self.cfg
+        from repro.models import init_caches
+        ar = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        real = ar < length
+        positions = jnp.where(real, ar, 0).astype(jnp.int32)
+        segments = jnp.where(real, 0, -1).astype(jnp.int32)
+        row = init_caches(self.params, cfg, 1, self.L, ring=False)
+        h, row, _, _ = self._fh(self.params, cfg, tokens,
+                                positions=positions, segments=segments,
+                                caches=row, cache_offset=0)
+        W = self._head(self.params["embed"], cfg)
+        h_last = jnp.take_along_axis(
+            h, (length - 1)[None, :, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
+                            W.astype(jnp.float32))
+        splice = lambda pool, r: jax.lax.dynamic_update_slice_in_dim(
+            pool, r, slot, axis=1)
+        return jax.tree.map(splice, caches, row), logits[0]
+
+    def _feed(self, caches, logits, tokens, counts, offsets, active):
+        """Advance the committed frontier: tokens (B, C) right-padded
+        commit blocks, counts (B,) real lengths. Per-row multi-token
+        decode write; rows with count 0 keep their logits."""
+        cfg = self.cfg
+        B, C = tokens.shape
+        ar = jnp.arange(C, dtype=jnp.int32)[None, :]
+        real = active[:, None] & (ar < counts[:, None])
+        positions = jnp.where(real, offsets[:, None] + ar, 2**30)
+        segments = jnp.where(real, 0, -1).astype(jnp.int32)
+        h, caches, _, _ = self._fh(self.params, cfg, tokens,
+                                   positions=positions.astype(jnp.int32),
+                                   segments=segments, caches=caches,
+                                   cache_offset=offsets)
+        W = self._head(self.params["embed"], cfg)
+        h_last = jnp.take_along_axis(
+            h, jnp.maximum(counts - 1, 0)[:, None, None], axis=1)[:, 0]
+        new_logits = jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
+                                W.astype(jnp.float32))
+        logits = jnp.where((active & (counts > 0))[:, None], new_logits,
+                           logits)
+        return caches, logits
+
+    def _step(self, caches, logits, offsets, active):
+        """One greedy token for every active slot (speculative — written
+        past the frontier, masked until committed or overwritten)."""
+        cfg = self.cfg
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(active, tok, self.pad_id)
+        positions = jnp.where(active, offsets, 2**30).astype(
+            jnp.int32)[:, None]
+        segments = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
+        h, caches, _, _ = self._fh(self.params, cfg, tok[:, None],
+                                   positions=positions, segments=segments,
+                                   caches=caches,
+                                   cache_offset=jnp.where(
+                                       active, offsets, 0).astype(jnp.int32))
+        W = self._head(self.params["embed"], cfg)
+        logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                                 W.astype(jnp.float32))
+        return tok, caches, logits_next
+
+    # -- provider API -------------------------------------------------------
+
+    def start(self, slot: int, prompt_ids) -> None:
+        p = np.asarray(prompt_ids, np.int32)[-self.Lp:]
+        row = np.full((1, self.Lp), self.pad_id, np.int32)
+        row[0, : len(p)] = p
+        self.caches, lg = self._prefill_j(
+            self.caches, jnp.asarray(row),
+            jnp.asarray([len(p)], jnp.int32), slot)
+        self.logits = self.logits.at[slot].set(lg)
+        self.off[slot] = len(p)
+        self._pending[slot] = []
+
+    def commit(self, slot: int, tokens) -> None:
+        self._pending[slot].extend(int(t) for t in tokens)
+
+    def stop(self, slot: int) -> None:
+        self._pending[slot] = []
+
+    def propose(self, slots, k: int) -> np.ndarray:
+        B = self.B
+        # flush buffered commits in one fixed-width multi-token feed
+        C = max((len(p) for p in self._pending), default=0)
+        if C:
+            toks = np.full((B, C), self.pad_id, np.int32)
+            counts = np.zeros((B,), np.int32)
+            active = np.zeros((B,), bool)
+            for s in range(B):
+                n = len(self._pending[s])
+                if n:
+                    toks[s, :n] = self._pending[s]
+                    counts[s] = n
+                    active[s] = True
+                    self._pending[s] = []
+            self.caches, self.logits = self._feed_j(
+                self.caches, self.logits, jnp.asarray(toks),
+                jnp.asarray(counts), jnp.asarray(self.off),
+                jnp.asarray(active))
+            self.off += counts
+        # k speculative greedy steps from the committed frontier
+        active = np.zeros((B,), bool)
+        active[list(slots)] = True
+        out = np.zeros((B, k), np.int32)
+        logits, off = self.logits, self.off.copy()
+        for j in range(k):
+            tok, self.caches, logits = self._step_j(
+                self.caches, logits, jnp.asarray(off), jnp.asarray(active))
+            out[:, j] = np.asarray(tok)
+            off += active.astype(np.int32)
+        return out
+
+
+def make_draft_provider(kind: str, cfg: ModelConfig, num_slots: int, *,
+                        spec_k: int, ngram: int = 3,
+                        max_prompt_len: int, max_new_tokens: int,
+                        pad_id: int = Tokenizer.PAD, draft_params=None,
+                        draft_cfg: Optional[ModelConfig] = None, seed: int = 0):
+    """Build a draft provider for an engine with ``num_slots`` slots.
+
+    ``kind``: "prompt_lookup" (default, no extra model) or "model" (small
+    resident draft model; params independently initialised from ``seed``
+    unless supplied)."""
+    if kind == "prompt_lookup":
+        return PromptLookupDraft(num_slots, ngram_max=ngram)
+    if kind == "model":
+        dcfg = draft_cfg or draft_config(cfg)
+        if draft_params is None:
+            from repro.models import init
+            draft_params = init(jax.random.PRNGKey(seed ^ 0x5bec), dcfg)
+        max_ctx = max_prompt_len + max_new_tokens + spec_k + 2
+        return ModelDraft(dcfg, draft_params, num_slots,
+                          max_prompt_len=max_prompt_len, max_ctx=max_ctx,
+                          pad_id=pad_id)
+    raise KeyError(f"unknown draft provider {kind!r}; "
+                   f"known: prompt_lookup, model")

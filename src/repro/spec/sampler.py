@@ -1,0 +1,246 @@
+"""SpecSampler — the group-at-a-time speculative rollout engine
+(DESIGN.md §Spec-decode): the ``rl/rollout.py Sampler`` drop-in that
+decodes k+1 tokens per target forward instead of 1.
+
+Per step, each live row proposes k draft tokens (host-side provider), then
+ONE jitted k+1-token verify forward produces the k+1 conditional target
+distributions; `spec/verify.py` accepts a leading run of drafts and samples
+one tail token, so a row commits between 1 and k+1 tokens per forward.
+Greedy decode is bitwise token-identical to the Sampler (the argmax chain
+is the same chain); sampled decode draws exactly from the target policy.
+
+State invariant between steps (shared with the cbatch / paged spec paths):
+the cache holds every committed token EXCEPT the last one, which rides
+into the next verify block as its first fed token. A freshly prefilled row
+instead holds its last-prompt logits in hand (``fresh``), and its first
+block carries k drafts plus one masked pad slot — the same (k+1) shape, so
+one compiled program serves both phases. Rejected speculative cache
+entries need no explicit rollback: slot index equals position, every stale
+entry carries a position past the committed frontier (masked by causality)
+until the next block's writes cover it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, require_engine_support
+from repro.data.tokenizer import Tokenizer
+from repro.models import forward_hidden, init_caches
+from repro.models.attention import INVALID_POS
+from repro.models.layers import lm_head_weight
+from repro.rl.rollout import RolloutBatch, Sampler
+from repro.spec.draft import make_draft_provider
+from repro.spec.verify import assemble_commit, verify_block
+
+
+def pack_row_block(tokens_row, pos_row, seg_row, fresh: bool, draft_row,
+                   last_tok: int, pos_base: int, k: int) -> int:
+    """Fill ONE row of the (k+1) verify-block arrays in place and return
+    the row's cache-slot delta from its frontier: a fresh row packs
+    [d_1..d_k, masked pad] starting AT the frontier (delta 0); a steady
+    row packs [unfed last token, d_1..d_k] starting one before it
+    (delta -1). ``pos_base`` is the frontier's sequence position (prompt
+    len + committed count). Shared by every spec engine so the block
+    layout cannot drift between them."""
+    if fresh:
+        tokens_row[:k] = draft_row
+        pos_row[:k] = pos_base + np.arange(k)
+        seg_row[:k] = 0
+        return 0
+    tokens_row[0] = last_tok
+    tokens_row[1:] = draft_row
+    pos_row[:] = pos_base - 1 + np.arange(k + 1)
+    seg_row[:] = 0
+    return -1
+
+
+def truncate_commit(ct, cl, remaining: int, eos_id: int):
+    """Cap one row's committed tokens at its remaining budget and its
+    first EOS (inclusive, matching the Sampler's length rule). Returns
+    (tokens, logprobs, finished)."""
+    ct, cl = ct[:remaining], cl[:remaining]
+    if eos_id in ct:
+        n = ct.index(eos_id) + 1
+        ct, cl = ct[:n], cl[:n]
+    done = (bool(ct) and ct[-1] == eos_id) or len(ct) >= remaining
+    return ct, cl, done
+
+
+def dense_verify_step(cfg, temperature, top_p, capture, params, caches,
+                      tokens, positions, segs, offsets, prev_logits, fresh,
+                      draft, keys, folds):
+    """One k+1-token verify forward against a dense/ring cache — the step
+    both dense spec engines (this module's SpecSampler and
+    ``core/cbatch.py``'s spec path) jit with (cfg, temperature, top_p,
+    capture) bound. ``fresh`` rows use their prefill logits as p_0 (their
+    block's last slot is a masked pad); steady rows' p_0..p_k are all
+    outputs of this forward. Returns (accept, alt, lp_draft, lp_alt,
+    caches)."""
+    h, caches, _, _ = forward_hidden(
+        params, cfg, tokens, positions=positions, segments=segs,
+        caches=caches, cache_offset=offsets)
+    W = lm_head_weight(params["embed"], cfg)
+    out = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                     W.astype(jnp.float32))                # (B, k+1, V)
+    p = jnp.where(fresh[:, None, None],
+                  jnp.concatenate([prev_logits[:, None], out[:, :-1]],
+                                  axis=1),
+                  out)
+    accept, alt, lp_d, lp_a = verify_block(
+        p, draft, keys, folds, temperature=temperature, top_p=top_p,
+        capture=capture)
+    return accept, alt, lp_d, lp_a, caches
+
+
+class SpecSampler:
+    """generate(): (B, Lp) left-padded prompts -> (B, max_new) responses,
+    k+1 tokens per target forward. Same construction surface as Sampler
+    plus the spec knobs (RLConfig.spec_*)."""
+
+    def __init__(self, cfg: ModelConfig, max_prompt_len: int,
+                 max_new_tokens: int, *, spec_k: int = 4,
+                 draft: str = "prompt_lookup", ngram: int = 3,
+                 draft_params=None, draft_cfg: Optional[ModelConfig] = None,
+                 temperature: float = 1.0, top_p: float = 1.0,
+                 eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD,
+                 capture_logprobs: bool = True, seed: int = 0):
+        require_engine_support(cfg, "spec")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.cfg = cfg
+        self.Lp = self.max_prompt_len = max_prompt_len
+        self.T = self.max_new_tokens = max_new_tokens
+        self.k = spec_k
+        self.temperature = temperature
+        self.top_p = top_p
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.capture_logprobs = capture_logprobs
+        self._draft_kw = dict(kind=draft, cfg=cfg, spec_k=spec_k,
+                              ngram=ngram, max_prompt_len=max_prompt_len,
+                              max_new_tokens=max_new_tokens, pad_id=pad_id,
+                              draft_params=draft_params,
+                              draft_cfg=draft_cfg, seed=seed)
+        self._providers = {}           # batch size -> provider (jit reuse)
+        self._prefill = jax.jit(self._prefill_fn)
+        from functools import partial
+        self._vstep = jax.jit(
+            partial(dense_verify_step, cfg, temperature, top_p,
+                    capture_logprobs),
+            donate_argnums=(1,))
+        self.pad_prompts = Sampler.pad_prompts.__get__(self)
+        self.reset_stats()
+
+    # -- stats --------------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        self.spec_steps = 0            # verify forwards (row-steps)
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0       # drafts that survived verification
+        self.committed_tokens = 0      # tokens actually emitted
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
+
+    # -- jitted cores -------------------------------------------------------
+
+    def _prefill_fn(self, params, prompt_ids, prompt_lens):
+        """The Sampler's prefill, verbatim: left-padded prompts, cache
+        sized Lp + T + k + 1 (speculative slack; ring_slack widens windowed
+        rings the same way)."""
+        cfg = self.cfg
+        B, Lp = prompt_ids.shape
+        W = lm_head_weight(params["embed"], cfg)
+        pad = Lp - prompt_lens[:, None]
+        ar = jnp.arange(Lp, dtype=jnp.int32)[None, :]
+        is_real = ar >= pad
+        positions = jnp.where(is_real, ar - pad, 0).astype(jnp.int32)
+        segments = jnp.where(is_real, 0, -1).astype(jnp.int32)
+        caches = init_caches(params, cfg, B, Lp + self.T + self.k + 1,
+                             ring_slack=self.k + 1)
+        h, caches, _, _ = forward_hidden(
+            params, cfg, prompt_ids, positions=positions, segments=segments,
+            caches=caches, cache_offset=0)
+        logits0 = jnp.einsum("bd,dv->bv", h[:, -1].astype(jnp.float32),
+                             W.astype(jnp.float32))
+        return caches, logits0
+
+    # -- host loop ----------------------------------------------------------
+
+    def generate(self, params, prompts: list, key) -> RolloutBatch:
+        toks, lens = self.pad_prompts(prompts)
+        B = len(prompts)
+        k, T, Lp = self.k, self.T, self.Lp
+        caches, logits0 = self._prefill(params, toks, lens)
+        if B not in self._providers:
+            kw = dict(self._draft_kw)
+            self._providers[B] = make_draft_provider(
+                kw.pop("kind"), kw.pop("cfg"), B, **kw)
+        provider = self._providers[B]
+        plens = np.asarray(lens)
+        for b, p in enumerate(prompts):
+            provider.start(b, np.asarray(p, np.int32)[-Lp:])
+        row_keys = np.asarray(jax.random.split(key, B))
+        resp = [[] for _ in range(B)]
+        lps = [[] for _ in range(B)]
+        done = np.zeros((B,), bool)
+        fresh = np.ones((B,), bool)
+        step = 0
+        while not done.all():
+            active = [b for b in range(B) if not done[b]]
+            draft = provider.propose(active, k)               # (B, k)
+            tokens = np.full((B, k + 1), self.pad_id, np.int32)
+            positions = np.full((B, k + 1), int(INVALID_POS), np.int32)
+            segs = np.full((B, k + 1), -1, np.int32)
+            offs = np.full((B,), Lp, np.int32)
+            for b in active:
+                t = len(resp[b])
+                delta = pack_row_block(tokens[b], positions[b], segs[b],
+                                       fresh[b], draft[b],
+                                       resp[b][-1] if resp[b] else 0,
+                                       int(plens[b]) + t, k)
+                offs[b] = Lp + t + delta
+            folds = np.full((B,), step, np.int32)
+            accept, alt, lp_d, lp_a, caches = self._vstep(
+                params, caches, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(segs), jnp.asarray(offs), logits0,
+                jnp.asarray(fresh), jnp.asarray(draft),
+                jnp.asarray(row_keys), jnp.asarray(folds))
+            accept, alt, lp_d, lp_a = jax.device_get(
+                (accept, alt, lp_d, lp_a))
+            step += 1
+            for b in active:
+                ct, cl = assemble_commit(accept[b], alt[b], draft[b],
+                                         lp_d[b], lp_a[b])
+                self.spec_steps += 1
+                self.drafted_tokens += k
+                self.accepted_tokens += len(ct) - 1
+                ct, cl, row_done = truncate_commit(
+                    ct, cl, T - len(resp[b]), self.eos_id)
+                resp[b].extend(ct)
+                lps[b].extend(cl)
+                provider.commit(b, ct)
+                self.committed_tokens += len(ct)
+                fresh[b] = False
+                if row_done:
+                    done[b] = True
+                    provider.stop(b)
+        out = np.full((B, T), self.pad_id, np.int32)
+        out_lp = np.zeros((B, T), np.float32)
+        out_len = np.zeros((B,), np.int32)
+        for b in range(B):
+            n = len(resp[b])
+            out[b, :n] = resp[b]
+            out_lp[b, :n] = lps[b]
+            out_len[b] = n
+        return RolloutBatch(
+            response_ids=jnp.asarray(out),
+            response_len=jnp.asarray(out_len),
+            response_logprobs=(jnp.asarray(out_lp)
+                               if self.capture_logprobs else None))

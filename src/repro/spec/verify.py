@@ -1,0 +1,136 @@
+"""Rejection-sampling verification — the exactness core of the spec-decode
+plane (DESIGN.md §Spec-decode).
+
+One k+1-token target forward yields the k+1 conditional distributions
+p_0..p_k (p_j = p(. | context, d_1..d_j)). Every draft provider here is
+DETERMINISTIC (a point-mass proposal q = delta_d), so the standard
+speculative rejection rule specialises to:
+
+  * accept d_{j+1} with probability p_j(d_{j+1})  (min(1, p/q) with q = 1);
+  * on the first rejection at j, resample from the leftover distribution
+    norm(max(p_j - q, 0)) = p_j with d_{j+1} masked out, renormalised;
+  * after a clean sweep of all k drafts, draw a free "bonus" token from
+    p_k.
+
+The marginal of each committed token is exactly p_j — the target policy's
+own distribution (tests/test_spec_property.py proves it empirically under
+hypothesis) — so GRPO rollouts remain draws from the current policy and
+Proposition 1 is untouched. Greedy decode (temperature <= 0) degenerates to
+"accept iff the draft IS the argmax", which makes spec decode bitwise
+token-identical to non-spec greedy decode (tests/test_spec.py).
+
+Acceptance tests use the FILTERED distribution (temperature / top-p — the
+distribution the engines actually sample from), while the returned logprobs
+are RAW-distribution values: exactly what `capture_logprobs` ships to the
+trainer, now obtained from the verify pass for free (§Tri-model-capture).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.rollout import _filter_logits
+
+
+@partial(jax.jit, static_argnames=("temperature", "top_p", "capture"))
+def verify_block(logits, draft, keys, folds, *, temperature: float,
+                 top_p: float, capture: bool = True):
+    """Verify one k+1-token block for every row.
+
+    logits: (B, k+1, V) RAW target logits — logits[:, j] is p_j, the
+    distribution of the j-th candidate position; draft: (B, k) int32
+    deterministic proposals; keys: (B, 2) raw uint32 per-row step keys;
+    folds: (B,) int32 decorrelation values folded into each row's key (the
+    paged engine folds the GRPO row index — rows of a group share step
+    keys; the group engines fold the step counter).
+
+    Returns (accept, alt, lp_draft, lp_alt):
+      accept: (B, k) bool — draft j accepted under p_j;
+      alt:    (B, k+1) int32 — the leftover resample at j < k, the bonus
+              draw at j = k (valid wherever the commit walk lands on it);
+      lp_draft: (B, k) f32 raw log p_j(draft_j) (capture payload);
+      lp_alt:   (B, k+1) f32 raw log p_j(alt_j).
+
+    ``capture=False`` (serving: no trainer consumes behavior logprobs)
+    skips the full-vocab raw log-softmax and returns zero lp arrays —
+    the same deliberate saving the non-spec decode step makes
+    (§Tri-model-capture cost note).
+
+    ``assemble_commit`` below walks these on the host into the committed
+    token list (variable length per row — exactly what the token-level
+    SlotScheduler supports).
+    """
+    B, K1, V = logits.shape
+    k = K1 - 1
+    lg = logits.astype(jnp.float32)
+
+    if temperature <= 0.0:
+        # greedy: the target "distribution" is a point mass at the argmax —
+        # accept iff the draft is it, and every alternative IS the argmax.
+        alt = jnp.argmax(lg, axis=-1).astype(jnp.int32)        # (B, k+1)
+        accept = draft == alt[:, :k]
+    else:
+        filt = _filter_logits(lg.reshape(B * K1, V), temperature,
+                              top_p).reshape(B, K1, V)
+        logp_f = jax.nn.log_softmax(filt, axis=-1)
+
+        def row_keys(key, fold):
+            kr = jax.random.fold_in(key, fold)
+            return jax.vmap(
+                lambda j: jax.random.split(jax.random.fold_in(kr, j))
+            )(jnp.arange(K1))                                  # (K1, 2, 2)
+
+        ks = jax.vmap(row_keys)(keys, folds)
+        ku, kc = ks[:, :, 0], ks[:, :, 1]
+        u = jax.vmap(jax.vmap(jax.random.uniform))(ku)         # (B, K1)
+        p_draft = jnp.exp(jnp.take_along_axis(
+            logp_f[:, :k], draft[..., None], axis=-1))[..., 0]
+        accept = u[:, :k] < p_draft
+        # leftover distribution: p_j masked at the draft, renormalised by
+        # the categorical itself; position k (bonus) is unmasked (draft -1
+        # matches no vocab id). A fully-degenerate leftover (p_draft == 1)
+        # is never sampled — acceptance is certain.
+        draft_pad = jnp.concatenate(
+            [draft, jnp.full((B, 1), -1, jnp.int32)], axis=1)
+        iota = jnp.arange(V, dtype=jnp.int32)
+        masked = jnp.where(iota[None, None, :] == draft_pad[..., None],
+                           -jnp.inf, filt)
+        alt = jax.vmap(jax.vmap(jax.random.categorical))(
+            kc, masked).astype(jnp.int32)                      # (B, k+1)
+
+    if not capture:
+        return (accept, alt, jnp.zeros((B, k), jnp.float32),
+                jnp.zeros((B, K1), jnp.float32))
+    raw_lp = jax.nn.log_softmax(lg, axis=-1)
+    lp_draft = jnp.take_along_axis(raw_lp[:, :k], draft[..., None],
+                                   axis=-1)[..., 0]
+    lp_alt = jnp.take_along_axis(raw_lp, alt[..., None], axis=-1)[..., 0]
+    return accept, alt, lp_draft, lp_alt
+
+
+def assemble_commit(accept, alt, draft, lp_draft, lp_alt,
+                    n_forced: int = 0) -> Tuple[List[int], List[float]]:
+    """Walk ONE row's verify outputs into its committed tokens (host side).
+
+    The commit is the leading run of accepted drafts plus one sampled tail
+    token (the leftover resample at the first rejection, or the bonus draw
+    after a clean sweep) — between 1 and k+1 tokens. ``n_forced`` force-
+    accepts the first n proposals regardless of the verdict (teacher-forced
+    serving prefixes ride the verify block as drafts: the fed tokens ARE
+    the forced tokens, so the cache stays consistent and later positions'
+    accept tests remain valid — they condition on exactly what was fed).
+
+    Returns (tokens, raw_logprobs) of equal length; the caller truncates at
+    EOS / the per-row cap and rolls back speculative cache state past the
+    committed frontier.
+    """
+    k = len(draft)
+    n = min(int(n_forced), k)
+    while n < k and bool(accept[n]):
+        n += 1
+    toks = [int(t) for t in draft[:n]] + [int(alt[n])]
+    lps = [float(l) for l in lp_draft[:n]] + [float(lp_alt[n])]
+    return toks, lps

@@ -1,0 +1,439 @@
+"""Speculative-decode plane (DESIGN.md §Spec-decode): greedy spec decode
+must be bitwise token-identical to the non-spec engines (group Sampler,
+dense-slot cbatch, paged pool) across GQA / MLA-latent / sliding-window
+cache backends; speculative pages must pre-allocate against the per-row
+credits and roll back to the freelist on rejection; captured logprobs must
+be the TARGET model's raw logprobs; and the shared-system-prompt serving
+scenario must serve per-request suffixes off one refcounted prompt page
+set. (Distribution exactness of the sampled path is proven in
+tests/test_spec_property.py under hypothesis.)
+
+MLA identity runs with the MoE half disabled: expert-capacity ties couple
+rows across batch shapes (documented at table6/§Continuous-batching), so a
+k+1-token block changes routing pressure — an MoE property, not a spec
+bug.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RLConfig, engine_support
+from repro.core.cbatch import ContinuousBatchingSampler
+from repro.core.paged import FIRST_PAGE, PagedGroupEngine
+from repro.launch.train import build_pipeline
+from repro.models import init
+from repro.rl.rollout import Sampler
+from repro.spec import SpecSampler, assemble_commit, verify_block
+
+G, T, LP, K = 4, 10, 16, 3
+
+
+def _gqa():
+    return reduced_config(get_config("llama3.2-3b"))
+
+
+def _mla_nomoe():
+    c = reduced_config(get_config("deepseek-v2-lite-16b"))
+    return dataclasses.replace(c, num_experts=0, num_experts_per_tok=0,
+                               num_shared_experts=0, moe_d_ff=0,
+                               first_k_dense=0, dense_d_ff=0)
+
+
+def _swa():
+    return dataclasses.replace(_gqa(), sliding_window=8)
+
+
+VARIANTS = {"gqa": _gqa, "mla": _mla_nomoe, "swa": _swa}
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for name, mk in VARIANTS.items():
+        cfg = mk()
+        out[name] = (cfg, init(jax.random.PRNGKey(0), cfg))
+    return out
+
+
+PROMPT = np.asarray([1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 3, 4], np.int32)
+
+
+def _assert_group_identical(out, ref):
+    pr, pl = np.asarray(out.response_ids), np.asarray(out.response_len)
+    rr, rl = np.asarray(ref.response_ids), np.asarray(ref.response_len)
+    np.testing.assert_array_equal(pl, rl)
+    for i in range(rr.shape[0]):
+        np.testing.assert_array_equal(pr[i, : pl[i]], rr[i, : rl[i]])
+
+
+# =========================================================================
+# the exactness contract, engine by engine
+# =========================================================================
+
+@pytest.mark.parametrize("variant", ["gqa", "mla", "swa"])
+def test_spec_sampler_greedy_identical(setups, variant):
+    """Greedy SpecSampler == Sampler, bitwise, on every cache backend —
+    the argmax chain is the same chain, just verified k+1 at a time."""
+    cfg, params = setups[variant]
+    key = jax.random.PRNGKey(5)
+    ref = Sampler(cfg, LP, T, temperature=0.0).generate(
+        params, [PROMPT] * G, key)
+    spec = SpecSampler(cfg, LP, T, spec_k=K, temperature=0.0)
+    _assert_group_identical(spec.generate(params, [PROMPT] * G, key), ref)
+    assert spec.spec_steps > 0 and spec.committed_tokens == int(
+        np.asarray(ref.response_len).sum())
+
+
+def test_spec_sampler_model_draft_greedy_identical(setups):
+    """The resident draft-model provider: proposals come from a separate
+    half-depth model, exactness still holds (a bad draft is just
+    rejected)."""
+    cfg, params = setups["gqa"]
+    key = jax.random.PRNGKey(7)
+    ref = Sampler(cfg, LP, T, temperature=0.0).generate(
+        params, [PROMPT] * G, key)
+    spec = SpecSampler(cfg, LP, T, spec_k=K, temperature=0.0, draft="model")
+    _assert_group_identical(spec.generate(params, [PROMPT] * G, key), ref)
+
+
+def test_spec_sampler_capture_matches_sampler(setups):
+    """capture_logprobs through the verify pass: greedy spec emits the
+    same tokens as the Sampler, and the captured raw logprobs of those
+    tokens agree fp-close (§Tri-model-capture interplay: the trainer's
+    ratio sees TARGET-model behavior logprobs either way)."""
+    cfg, params = setups["gqa"]
+    key = jax.random.PRNGKey(11)
+    ref = Sampler(cfg, LP, T, temperature=0.0,
+                  capture_logprobs=True).generate(params, [PROMPT] * G, key)
+    out = SpecSampler(cfg, LP, T, spec_k=K, temperature=0.0).generate(
+        params, [PROMPT] * G, key)
+    _assert_group_identical(out, ref)
+    np.testing.assert_allclose(np.asarray(out.response_logprobs),
+                               np.asarray(ref.response_logprobs),
+                               atol=5e-5)
+
+
+def test_cbatch_spec_greedy_identical(setups):
+    """Dense-slot engine with spec: slots < requests force mid-batch
+    admission; per-request outputs still match the Sampler's rows."""
+    cfg, params = setups["gqa"]
+    prompts = [np.asarray([1, 9, 4, 7, 3], np.int32),
+               np.asarray([1, 5, 6, 7, 8, 9, 10, 11], np.int32),
+               np.asarray([1, 2, 3], np.int32),
+               np.asarray([4, 4, 2, 9], np.int32)]
+    key = jax.random.PRNGKey(13)
+    ref = Sampler(cfg, LP, T, temperature=0.0).generate(params, prompts, key)
+    rr, rl = np.asarray(ref.response_ids), np.asarray(ref.response_len)
+    eng = ContinuousBatchingSampler(cfg, num_slots=2, max_prompt_len=LP,
+                                    max_new_tokens=T, temperature=0.0,
+                                    spec_k=K)
+    done = eng.run(params, prompts, key)
+    assert len(done) == len(prompts)
+    for c in done:
+        np.testing.assert_array_equal(
+            c.response_ids, rr[c.request_id, : rl[c.request_id]])
+    assert eng.spec_steps > 0
+
+
+@pytest.mark.parametrize("variant", ["gqa", "mla", "swa"])
+def test_paged_spec_greedy_identical(setups, variant):
+    """Paged pool with spec: speculative pages pre-allocate against the
+    PR-3 per-row credits and roll back on rejection; output is bitwise
+    identical to the Sampler and EVERY page returns to the freelist."""
+    cfg, params = setups[variant]
+    key = jax.random.PRNGKey(5)
+    ref = Sampler(cfg, LP, T, temperature=0.0).generate(
+        params, [PROMPT] * G, key)
+    eng = PagedGroupEngine(cfg, num_slots=3, page_size=4, num_pages=0,
+                           max_prompt_len=LP, max_new_tokens=T,
+                           group_size=G, temperature=0.0, spec_k=K)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    h = eng.submit(PROMPT, key)
+    while eng.step():
+        pass
+    _assert_group_identical(h.result(1), ref)
+    assert eng.alloc.num_free == free0 and eng.idle
+    assert eng.rolled_back_pages > 0, \
+        "a greedy decode with imperfect drafts must roll back pages"
+    # spec must finish in fewer engine steps than tokens per row
+    assert eng.decode_steps < int(np.asarray(ref.response_len).max()) * 2
+
+
+def test_paged_spec_sampled_rows_decorrelated(setups):
+    """Sampled spec decode: rows of a group share step keys, so the verify
+    draws must fold the row index — otherwise all G rollouts of a prompt
+    would commit identical tokens. Also: finite captured logprobs, full
+    freelist restore."""
+    cfg, params = setups["gqa"]
+    eng = PagedGroupEngine(cfg, num_slots=2, page_size=4, num_pages=0,
+                           max_prompt_len=LP, max_new_tokens=12,
+                           group_size=G, temperature=1.0, top_p=0.9,
+                           spec_k=K)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    h = eng.submit(PROMPT, jax.random.PRNGKey(7))
+    while eng.step():
+        pass
+    out = h.result(1)
+    ids = np.asarray(out.response_ids)
+    lens = np.asarray(out.response_len)
+    lps = np.asarray(out.response_logprobs)
+    assert (lens >= 1).all() and np.isfinite(lps).all()
+    assert not all(np.array_equal(ids[0], ids[i]) for i in range(1, G)), \
+        "group rows identical: per-row key fold is broken"
+    assert eng.alloc.num_free == free0 and eng.idle
+
+
+def test_paged_spec_tight_pool_backpressure(setups):
+    """Credit safety under speculation: a pool sized for barely more than
+    one group must still serve three groups (rows trickle in as pages
+    free), with speculative allocation never outrunning the credits and
+    all pages returning."""
+    cfg, params = setups["gqa"]
+    eng = PagedGroupEngine(cfg, num_slots=8, page_size=4,
+                           num_pages=FIRST_PAGE + 13, max_prompt_len=LP,
+                           max_new_tokens=8, group_size=G, temperature=0.0,
+                           spec_k=K)
+    eng.set_params(params)
+    prompts = [np.asarray([1, 9, 4, 7, 2], np.int32),
+               np.asarray([1, 5, 6, 7, 8, 9], np.int32),
+               np.asarray([1, 2, 3], np.int32)]
+    keys = jax.random.split(jax.random.PRNGKey(21), 3)
+    handles = [eng.submit(p, k) for p, k in zip(prompts, keys)]
+    while eng.step():
+        pass
+    ref = Sampler(cfg, LP, 8, temperature=0.0)
+    for p, k, h in zip(prompts, keys, handles):
+        _assert_group_identical(h.result(1), ref.generate(params, [p] * G, k))
+    assert eng.alloc.num_free == 13 and eng.idle
+
+
+def test_paged_spec_windowed_long_decode_o_window(setups):
+    """Sliding window + speculation: out-of-window pages still reclaim
+    mid-flight, the widened spec budget stays O(window), and a pool too
+    small for the full history completes."""
+    cfg, params = setups["swa"]
+    T_long, page = 32, 4
+    eng0 = PagedGroupEngine(cfg, num_slots=G, page_size=page, num_pages=0,
+                            max_prompt_len=LP, max_new_tokens=T_long,
+                            group_size=G, temperature=0.0, spec_k=K)
+    budget = eng0._row_budget(T_long)
+    assert budget < T_long // page, "budget must be O(window), not total"
+    num_pages = FIRST_PAGE + 2 + G * budget
+    eng = PagedGroupEngine(cfg, num_slots=G, page_size=page,
+                           num_pages=num_pages, max_prompt_len=LP,
+                           max_new_tokens=T_long, group_size=G,
+                           temperature=0.0, spec_k=K)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    key = jax.random.PRNGKey(23)
+    h = eng.submit(np.asarray([1, 9, 4, 7, 3, 8, 2], np.int32), key)
+    while eng.step():
+        pass
+    ref = Sampler(cfg, LP, T_long, temperature=0.0).generate(
+        params, [np.asarray([1, 9, 4, 7, 3, 8, 2], np.int32)] * G, key)
+    _assert_group_identical(h.result(1), ref)
+    assert eng.reclaimed_pages > 0
+    assert eng.peak_pages_used <= 2 + G * budget
+    assert eng.alloc.num_free == free0 and eng.idle
+
+
+def test_pipeline_async_paged_spec_zero_staleness():
+    """Periodic-asynchrony contract with spec decode: the verify plane is
+    distribution-exact, so weight sync stays an iteration-boundary event
+    and OnPolicyMonitor still sees staleness 0."""
+    cfg = _gqa()
+    rl = RLConfig(mode="async", batch_prompts=2, group_size=3, micro_batch=3,
+                  num_inference_instances=1, max_prompt_len=24,
+                  max_response_len=6, learning_rate=1e-3,
+                  rollout_engine="paged", cbatch_slots=4, kv_page_size=8,
+                  spec_decode=True, spec_k=2)
+    sched, parts = build_pipeline(cfg, rl)
+    hist = sched.run(2)
+    assert len(hist) == 2
+    for s in hist:
+        assert s.trained_tokens > 0
+        assert s.max_staleness == 0
+    assert parts["queue"].outstanding == 0
+    for inst in parts["pool"].instances:
+        assert inst.paged_engine.idle
+
+
+# =========================================================================
+# shared-system-prompt serving (forced prefixes over refcounted pages)
+# =========================================================================
+
+@pytest.mark.parametrize("spec_k", [0, K])
+def test_forced_prefixes_shared_prompt(setups, spec_k):
+    """Requests sharing a system prompt through refcounted shared pages:
+    each row teacher-forces its own suffix before free decode, with and
+    without the spec plane (forced tokens ride the verify block as
+    force-accepted drafts)."""
+    cfg, params = setups["gqa"]
+    eng = PagedGroupEngine(cfg, num_slots=3, page_size=4, num_pages=0,
+                           max_prompt_len=LP, max_new_tokens=12,
+                           group_size=3, temperature=0.7, spec_k=spec_k)
+    eng.set_params(params)
+    free0 = eng.alloc.num_free
+    system = np.asarray([1, 2, 3, 4, 5, 6], np.int32)
+    sufs = [np.asarray([10, 11], np.int32),
+            np.asarray([20, 21, 22, 23, 24], np.int32),
+            np.asarray([30], np.int32)]
+    h = eng.submit(system, jax.random.PRNGKey(9), forced=sufs)
+    while eng.step():
+        pass
+    out = h.result(1)
+    ids, lens = np.asarray(out.response_ids), np.asarray(out.response_len)
+    for i, suf in enumerate(sufs):
+        assert lens[i] >= len(suf)
+        np.testing.assert_array_equal(ids[i, : len(suf)], suf)
+    assert eng.alloc.num_free == free0 and eng.idle
+
+
+def test_serve_shared_strips_suffix_and_shares_pages(setups):
+    """serve_shared: one refcounted prompt page set serves N requests; the
+    returned completions exclude the forced suffix and the stats report
+    the prompt pages sharing saved."""
+    from repro.launch.serve import serve_shared
+    cfg, _ = setups["gqa"]
+    system = np.arange(1, 9, dtype=np.int32)
+    sufs = [np.asarray([10, 11], np.int32), np.asarray([20], np.int32),
+            np.asarray([30, 31, 32], np.int32)]
+    done, stats = serve_shared(cfg, system, sufs, max_prompt_len=LP,
+                               max_new=10, page_size=4, seed=0, spec_k=2)
+    assert len(done) == 3
+    for c, suf in zip(done, sufs):
+        assert len(c.response_ids) <= 10 - len(suf)
+    n_pp = -(-len(system) // 4)
+    assert stats["prompt_pages_saved"] == 2 * n_pp
+    # shared storage: ONE prompt copy + per-row response pages, not three
+    # private prompt copies
+    assert stats["peak_pages"] <= n_pp + 3 * (-(-10 // 4))
+    assert stats["acceptance_rate"] >= 0.0
+
+
+# =========================================================================
+# verify-core units + kernel oracle
+# =========================================================================
+
+def test_verify_block_greedy_semantics():
+    """Greedy: accept iff the draft IS the argmax; every alternative IS
+    the argmax — the property that makes spec greedy bitwise-identical."""
+    logits = jnp.asarray([[[0., 5., 0., 0.],     # argmax 1
+                           [0., 0., 5., 0.],     # argmax 2
+                           [5., 0., 0., 0.]]])   # argmax 3 -> 0
+    draft = jnp.asarray([[1, 0]], jnp.int32)     # accept, reject
+    keys = jnp.zeros((1, 2), jnp.uint32)
+    accept, alt, lp_d, lp_a = verify_block(
+        logits, draft, keys, jnp.zeros((1,), jnp.int32),
+        temperature=0.0, top_p=1.0)
+    np.testing.assert_array_equal(np.asarray(accept), [[True, False]])
+    np.testing.assert_array_equal(np.asarray(alt), [[1, 2, 0]])
+    toks, lps = assemble_commit(np.asarray(accept)[0], np.asarray(alt)[0],
+                                np.asarray(draft)[0], np.asarray(lp_d)[0],
+                                np.asarray(lp_a)[0])
+    assert toks == [1, 2]            # accepted draft + argmax at rejection
+    np.testing.assert_allclose(
+        lps, np.asarray(jax.nn.log_softmax(logits[0])[
+            jnp.arange(2), jnp.asarray(toks)]), rtol=1e-6)
+
+
+def test_assemble_commit_walk_and_forced():
+    accept = np.asarray([True, True, False])
+    alt = np.asarray([7, 8, 9, 10])
+    draft = np.asarray([1, 2, 3])
+    lp_d = np.asarray([-1., -2., -3.])
+    lp_a = np.asarray([-7., -8., -9., -10.])
+    toks, lps = assemble_commit(accept, alt, draft, lp_d, lp_a)
+    assert toks == [1, 2, 9] and lps == [-1., -2., -9.]
+    # clean sweep -> bonus token
+    toks, _ = assemble_commit(np.asarray([True] * 3), alt, draft, lp_d, lp_a)
+    assert toks == [1, 2, 3, 10]
+    # forced: the rejected first draft commits anyway, walk resumes after
+    toks, _ = assemble_commit(np.asarray([False, True, False]), alt, draft,
+                              lp_d, lp_a, n_forced=1)
+    assert toks == [1, 2, 9]
+
+
+def test_verify_kernels_match_ref_oracle():
+    """The q_len=k+1 flash-verify kernels (dense + paged + MLA latent)
+    against the pure-JAX oracle, windowed and full, interpret mode."""
+    from repro.kernels.decode_attention import (paged_mla_verify_attention,
+                                                paged_verify_attention,
+                                                verify_attention)
+    from repro.kernels.ref import verify_attention_ref
+    rng = np.random.RandomState(0)
+    B, S, H, Hkv, D, L = 2, 3, 4, 2, 8, 24
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, L, Hkv, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, L, Hkv, D), jnp.float32)
+    kv_pos = jnp.asarray(rng.randint(0, 14, size=(B, L)), jnp.int32)
+    q_pos = jnp.asarray([[7, 8, 9], [9, 10, 11]], jnp.int32)
+    for window in (None, 5):
+        out = verify_attention(q, k, v, kv_pos, q_pos, block_l=8,
+                               window=window, interpret=True)
+        ref = verify_attention_ref(q, k, v, kv_pos, q_pos, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    # paged wrappers agree with the oracle on the gathered context
+    P, page, n_max = 6, 4, 3
+    Lg = n_max * page
+    k_pages = jnp.asarray(rng.randn(P, page, Hkv, D), jnp.float32)
+    v_pages = jnp.asarray(rng.randn(P, page, Hkv, D), jnp.float32)
+    pos_pages = jnp.asarray(rng.randint(0, 10, size=(P, page)),
+                            jnp.int32).at[0].set(2 ** 30)
+    table = jnp.asarray([[1, 2, 0], [3, 4, 5]], jnp.int32)
+    qp = jnp.asarray([[7, 8, 9], [9, 10, 11]], jnp.int32)
+    out = paged_verify_attention(q, k_pages, v_pages, pos_pages, table, qp,
+                                 block_l=4, interpret=True)
+    ref = verify_attention_ref(q, k_pages[table].reshape(B, Lg, Hkv, D),
+                               v_pages[table].reshape(B, Lg, Hkv, D),
+                               pos_pages[table].reshape(B, Lg), qp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    r, rd = 16, 8
+    ckv_pages = jnp.asarray(rng.randn(P, page, r), jnp.float32)
+    kr_pages = jnp.asarray(rng.randn(P, page, rd), jnp.float32)
+    q_lat = jnp.asarray(rng.randn(B, S, H, r + rd), jnp.float32)
+    out = paged_mla_verify_attention(q_lat, ckv_pages, kr_pages, pos_pages,
+                                     table, qp, block_l=4, interpret=True)
+    kk = jnp.concatenate([ckv_pages[table].reshape(B, Lg, r),
+                          kr_pages[table].reshape(B, Lg, rd)],
+                         -1)[:, :, None, :]
+    vv = ckv_pages[table].reshape(B, Lg, r)[:, :, None, :]
+    ref = verify_attention_ref(q_lat, kk, vv,
+                               pos_pages[table].reshape(B, Lg), qp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# =========================================================================
+# support matrix
+# =========================================================================
+
+def test_spec_support_matrix():
+    """The spec plane rides the engine_support matrix: SSM/hybrid (no
+    reversible per-token cache), enc-dec and VLM (group-path-only) are
+    excluded with architectural reasons; everything else verifies."""
+    spec_ok = {"llama3.2-3b": True, "deepseek-v2-lite-16b": True,
+               "internlm2-20b": True, "qwen3-moe-235b-a22b": True,
+               "mamba2-2.7b": False, "hymba-1.5b": False,
+               "whisper-tiny": False, "internvl2-76b": False}
+    for arch, ok in spec_ok.items():
+        got, reason = engine_support(get_config(arch), "spec")
+        assert got == ok, f"{arch}: expected spec={ok}, got {got} ({reason})"
+        assert reason
+    win = dataclasses.replace(get_config("llama3.2-3b"), sliding_window=8192)
+    ok, reason = engine_support(win, "spec")
+    assert ok and "window" in reason
+    from repro.configs.base import engine_support_matrix
+    assert "spec" in engine_support_matrix(get_config("llama3.2-3b"))
+    # construction sites consult the matrix
+    with pytest.raises(ValueError, match="recurrent"):
+        SpecSampler(reduced_config(get_config("mamba2-2.7b")), LP, T,
+                    spec_k=2)
