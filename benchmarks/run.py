@@ -20,15 +20,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: the continuous-batching table (slot "
                          "engine + pool-level paged-vs-group), the "
-                         "weight-plane sync-gap table, and the spec-decode "
-                         "table, skipping the slow training-side tables")
+                         "weight-plane sync-gap table, the spec-decode "
+                         "table, and the serving-latency table, skipping "
+                         "the slow training-side tables")
     args = ap.parse_args()
     if args.smoke and args.only:
         ap.error("--smoke picks its own table set; drop --only")
 
     from benchmarks import (table1_async, table2_trimodel, table3_spa,
                             table4_dp_baselines, table5_scaling,
-                            table6_cbatch, table7_transfer, table8_specdec)
+                            table6_cbatch, table7_transfer, table8_specdec,
+                            table9_serving)
     tables = {
         "table1": table1_async.main,
         "table2": table2_trimodel.main,
@@ -38,12 +40,14 @@ def main() -> None:
         "table6": table6_cbatch.main,   # beyond-paper: continuous batching
         "table7": table7_transfer.main,  # beyond-paper: weight-plane sync-gap
         "table8": table8_specdec.main,   # beyond-paper: speculative decode
+        "table9": table9_serving.main,   # beyond-paper: radix-cache serving
     }
     if args.smoke:
         tables = {"table6": table6_cbatch.main,
                   "table6_pool": table6_cbatch.pool_mode,
                   "table7": table7_transfer.main,
-                  "table8": table8_specdec.main}
+                  "table8": table8_specdec.main,
+                  "table9": table9_serving.main}
     print("table,name,value,derived")
     failures = 0
     for name, fn in tables.items():

@@ -1,0 +1,118 @@
+"""Beyond-paper table: request-driven serving latency with the radix
+prefix cache (DESIGN.md §Radix-prefix-cache, §Continuous-batching).
+
+The workload is the shared-system-prompt stream every RL-adjacent serving
+deployment runs: N requests arrive as an open-loop Poisson process, each
+one system prompt + a short private suffix, served greedily through the
+paged engine by the ``RequestDriver`` (streaming per-token timestamps).
+Cold (no prefix cache) vs warm (radix cache): the warm engine retains the
+system pages in the tree and prefills only each request's suffix, so
+time-to-first-token drops by roughly the shared-prefix fraction of the
+prefill; time-per-output-token is unchanged (decode is identical).
+
+The exactness contract is asserted every repetition: warm serving is
+TOKEN-IDENTICAL to cold serving per request (a cached page is bitwise the
+page a cold prefill would write), and the warm run actually hit the cache
+— the latency win is never bought with a behavior change.
+
+Measurement caveat: CPU prefill is compute-bound and ~linear in prompt
+tokens, so the TTFT win tracks the prefix fraction; on accelerators the
+same saving shows up as freed FLOPs and admission headroom.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save
+from repro.configs import get_config, reduced_config
+from repro.models import init
+
+N_REQ, SLOTS = 8, 4
+LP, T, PAGE = 128, 32, 8
+RATE = 4.0                  # req/s — arrivals spread over ~N/RATE seconds
+SYS_TOKENS = 120            # 15 full shared pages of 8: prefill-dominated
+REPS = 3
+
+
+def _workload(seed: int = 0):
+    """One system prompt + short per-request suffixes, Poisson arrivals."""
+    rng = np.random.RandomState(seed)
+    system = rng.randint(2, 500, size=SYS_TOKENS)
+    prompts = [np.asarray(list(system) + list(rng.randint(2, 500, size=6)),
+                          np.int32) for _ in range(N_REQ)]
+    from repro.launch.serve import poisson_arrivals
+    return prompts, poisson_arrivals(N_REQ, RATE, seed=seed)
+
+
+def _run(cfg, params, prompts, arrivals, *, prefix_cache: bool):
+    """Warmup pass (jit compile; fills the radix tree when caching), then
+    REPS measured passes on the same engine; returns the per-request token
+    streams and the best-latency metrics/stats."""
+    from repro.launch.serve import build_paged_engine, serve_requests
+    eng = build_paged_engine(cfg, max_prompt_len=LP, max_new=T,
+                             num_slots=SLOTS, page_size=PAGE,
+                             temperature=0.0, seed=0,
+                             prefix_cache=prefix_cache)
+    best = None
+    for rep in range(REPS + 1):
+        eng.reset_stats()
+        reqs, metrics, stats = serve_requests(
+            cfg, prompts, max_prompt_len=LP, max_new=T, arrivals=arrivals,
+            params=params, engine=eng)
+        streams = [r.tokens for r in sorted(reqs, key=lambda r: r.rid)]
+        if rep == 0:
+            continue                    # untimed: compile + tree warmup
+        if best is None or metrics["ttft_p50_s"] < best[1]["ttft_p50_s"]:
+            best = (streams, metrics, stats)
+    return best
+
+
+def main() -> dict:
+    import dataclasses
+    # reduced family config, scaled up enough that prefill FLOPs are
+    # visible over per-step dispatch overhead (the regime the cache
+    # targets) while staying CPU-benchable
+    cfg = dataclasses.replace(reduced_config(get_config("llama3.2-3b")),
+                              num_layers=4, d_model=512, d_ff=1536)
+    params = init(jax.random.PRNGKey(0), cfg)
+    prompts, arrivals = _workload()
+    cold_ids, cold, _ = _run(cfg, params, prompts, arrivals,
+                             prefix_cache=False)
+    warm_ids, warm, wstats = _run(cfg, params, prompts, arrivals,
+                                  prefix_cache=True)
+    # exactness: greedy warm serving == greedy cold serving, per request
+    assert cold_ids == warm_ids, \
+        "radix-cached serving diverged from cold serving"
+    assert wstats["prefix_hit_rate"] > 0 and wstats["prefix_hit_pages"] > 0
+    out = {
+        "config": {"n_req": N_REQ, "slots": SLOTS, "max_prompt_len": LP,
+                   "max_new": T, "page_size": PAGE, "rate_req_s": RATE,
+                   "system_tokens": SYS_TOKENS, "reps": REPS},
+        "cold": cold, "warm": warm,
+        "warm_stats": {k: wstats[k] for k in
+                       ("prefix_hit_rate", "prefix_hit_pages",
+                        "prefix_evicted_pages", "peak_pages")},
+        "ttft_p50_speedup": cold["ttft_p50_s"] / warm["ttft_p50_s"]
+        if warm["ttft_p50_s"] else 0.0,
+    }
+    for mode, m in (("cold", cold), ("warm", warm)):
+        emit("table9", f"{mode}_ttft_p50_ms", f"{m['ttft_p50_s'] * 1e3:.0f}")
+        emit("table9", f"{mode}_ttft_p99_ms", f"{m['ttft_p99_s'] * 1e3:.0f}")
+        emit("table9", f"{mode}_tpot_p50_ms", f"{m['tpot_p50_s'] * 1e3:.1f}")
+        emit("table9", f"{mode}_tpot_p99_ms", f"{m['tpot_p99_s'] * 1e3:.1f}")
+        emit("table9", f"{mode}_tok_s", f"{m['tok_per_s']:.1f}")
+    emit("table9", "prefix_hit_rate", f"{wstats['prefix_hit_rate']:.2f}",
+         "prompt pages served from the radix tree")
+    emit("table9", "ttft_p50_speedup", f"{out['ttft_p50_speedup']:.2f}x",
+         "cold / warm, token-identical asserted")
+    save("table9_serving", out)
+    return out
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    main()
+    print(f"# table9 done in {time.time() - t0:.0f}s")

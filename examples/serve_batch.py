@@ -46,8 +46,9 @@ def main() -> None:
                     choices=["prompt_lookup", "model"])
     ap.add_argument("--shared-system", type=int, default=0, metavar="N",
                     help="serve N requests sharing one system prompt "
-                         "through refcounted shared pages (per-request "
-                         "suffixes teacher-forced, then free decode)")
+                         "through the radix prefix cache (cached system "
+                         "pages, suffix-only prefill — DESIGN.md "
+                         "§Radix-prefix-cache)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -87,7 +88,7 @@ def main() -> None:
               f"{stats['generated_tokens']} tokens in "
               f"{stats['wall_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
               f"{stats['prompt_pages_saved']} prompt pages saved by "
-              f"sharing{extra})")
+              f"the prefix cache{extra})")
         for c in done[:4]:
             print(f"  req {c.request_id}: "
                   f"{tok.decode(c.response_ids.tolist())!r}")

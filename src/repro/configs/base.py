@@ -195,6 +195,11 @@ ROLLOUT_ENGINES = ("group", "cbatch", "paged")
 # through the same matrix so the exclusion list lives in one place.
 SPEC_PLANE = "spec"
 
+# The radix prefix cache (DESIGN.md §Radix-prefix-cache) likewise rides the
+# paged engine rather than being an engine of its own: it shares cached
+# prompt pages across requests, so it needs per-token paged KV to share.
+PREFIX_PLANE = "prefix"
+
 
 def engine_support(cfg: ModelConfig, engine: str) -> Tuple[bool, str]:
     """(supported, reason) for running ``cfg`` on a decode engine:
@@ -204,13 +209,17 @@ def engine_support(cfg: ModelConfig, engine: str) -> Tuple[bool, str]:
     * ``paged``  — the token-level paged pool (GQA K/V pages or MLA
       latent pages; sliding-window configs reclaim out-of-window pages);
     * ``spec``   — the draft/verify speculative-decode plane layered on
-      any of the engines (src/repro/spec/).
+      any of the engines (src/repro/spec/);
+    * ``prefix`` — the radix prefix cache layered on the paged pool
+      (core/radix.py: cached prompt pages shared across requests).
     """
     if engine == SPEC_PLANE:
         return _spec_support(cfg)
+    if engine == PREFIX_PLANE:
+        return _prefix_support(cfg)
     if engine not in ROLLOUT_ENGINES:
         raise KeyError(f"unknown engine {engine!r}; known: "
-                       f"{ROLLOUT_ENGINES + (SPEC_PLANE,)}")
+                       f"{ROLLOUT_ENGINES + (SPEC_PLANE, PREFIX_PLANE)}")
     if engine == "group":
         return True, "reference decode path for every family"
     if cfg.is_encoder_decoder:
@@ -257,10 +266,27 @@ def _spec_support(cfg: ModelConfig) -> Tuple[bool, str]:
     return True, f"k+1-token verify through the {kind} cache{win}"
 
 
+def _prefix_support(cfg: ModelConfig) -> Tuple[bool, str]:
+    """The radix prefix cache shares PAGES, so it inherits exactly the
+    paged engine's applicability: per-token cache rows that are a pure
+    function of (token, position) — which is also why a cached page is
+    bitwise identical to a cold prefill of the same span (core/radix.py,
+    tests/test_radix.py)."""
+    ok, reason = engine_support(cfg, "paged")
+    if not ok:
+        return False, reason
+    kind = "MLA latent" if cfg.use_mla else "per-head K/V"
+    win = (" (window-dead leading pages are never cached)"
+           if cfg.sliding_window is not None else "")
+    return True, (f"radix tree shares cached {kind} prompt pages across "
+                  f"any common token-span prefix{win}")
+
+
 def engine_support_matrix(cfg: ModelConfig) -> dict:
-    """{engine: (supported, reason)} for one config (+ the spec plane)."""
+    """{engine: (supported, reason)} for one config (+ the spec and
+    prefix planes)."""
     return {e: engine_support(cfg, e)
-            for e in ROLLOUT_ENGINES + (SPEC_PLANE,)}
+            for e in ROLLOUT_ENGINES + (SPEC_PLANE, PREFIX_PLANE)}
 
 
 def require_engine_support(cfg: ModelConfig, engine: str) -> None:
@@ -343,6 +369,14 @@ class RLConfig:
     # tokens — no extra model) or "model" (small resident draft model)
     spec_draft: str = "prompt_lookup"
     spec_ngram: int = 3                # longest n-gram the lookup tries
+    # --- radix prefix cache (DESIGN.md §Radix-prefix-cache) -----------
+    # Share cached prompt pages across requests with any common
+    # token-span prefix (paged engine only): admission walks a radix
+    # tree, retains matched pages, and prefills only the suffix. Cached
+    # page content is bitwise what a cold prefill writes (per-token KV),
+    # so rollouts stay token-identical (tests/test_radix.py). Idle cached
+    # pages are LRU-evicted by the admission gate on a page deficit.
+    prefix_cache: bool = False
     # --- weight-plane (DESIGN.md §Weight-plane) -----------------------
     # The iteration-boundary trainer->pool weight push streams the param
     # tree as fixed-size buckets through repro.transfer instead of one

@@ -30,7 +30,16 @@ The KV cache is paged (``models/attention.py PagedCacheBackend``):
     (``q_pos - last_pos >= window``) the page leaves the row's table and
     its reference returns to the freelist (refcount-aware for shared
     prompt pages — a page another row still sees stays resident). A 500k
-    decode therefore occupies O(window) pages per row, not O(context).
+    decode therefore occupies O(window) pages per row, not O(context);
+  * ``prefix_cache=True`` layers the radix prefix cache (``core/radix.py``,
+    DESIGN.md §Radix-prefix-cache) over the pool: admission walks the tree
+    for the longest cached page-aligned prefix, retains the matched pages
+    into the group's table, prefills ONLY the suffix into private pages,
+    and inserts the completed prompt pages back — page sharing across
+    byte-identical prompts becomes sharing across any common token-span
+    prefix, across groups and across time. LRU eviction of idle cached
+    pages rides the admission gate, so the page-credit deadlock-freedom
+    argument is unchanged.
 
 Sampling is token-identical to the group-at-a-time ``Sampler`` under the
 same PRNG key — greedy and sampled (``rl/rollout.py stepwise_keys`` +
@@ -89,6 +98,23 @@ class PageAllocator:
         self.min_free = min(self.min_free, len(self._free))
         return pages
 
+    def retain(self, pages: List[int], n: int = 1) -> None:
+        """Add ``n`` references to already-live pages — the radix prefix
+        cache shares a cached prompt page into a new group's table (one
+        reference per row, plus the tree's own at insert)."""
+        for p in pages:
+            assert p in self._ref, f"retain of dead page {p}"
+            self._ref[p] += n
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    @property
+    def num_live(self) -> int:
+        """Pages currently referenced (freelist + live == pool capacity —
+        the conservation invariant tests/test_radix_property.py checks)."""
+        return len(self._ref)
+
     def release(self, pages: List[int]) -> int:
         """Drop one reference per page; returns how many pages actually
         went back to the freelist (a shared prompt page frees only when
@@ -96,6 +122,7 @@ class PageAllocator:
         freed = 0
         for p in pages:
             self._ref[p] -= 1
+            assert self._ref[p] >= 0, f"negative refcount on page {p}"
             if self._ref[p] == 0:
                 del self._ref[p]
                 self._free.append(p)
@@ -113,6 +140,12 @@ class _Group:
     prompt_pages: Optional[List[int]] = None    # LIVE pages (window-visible)
     prompt_last: Optional[List[int]] = None     # last token pos per live page
     prompt_logits: Optional[jax.Array] = None   # (V,) f32 last-prompt logits
+    # radix-cache match stashed by the admission gate for _admit_row:
+    # (m, pages) — prompt page indices j0..m-1 already cached as `pages`
+    match: Optional[tuple] = None
+    # streaming delivery: called as on_token(row_idx, token_id) for every
+    # committed token, in commit order (launch/serve.py RequestDriver)
+    on_token: Optional[object] = None
     done_rows: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     done_lps: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     finish_step: int = 0
@@ -132,9 +165,6 @@ class _Row:
     # its prefill logits in hand; a steady row's last committed token is
     # unfed and rides into the next verify block
     fresh: bool = True
-    # teacher-forced continuation (shared-system-prompt serving): tokens
-    # committed verbatim before free decoding starts
-    forced: list = dataclasses.field(default_factory=list)
 
 
 class GroupHandle:
@@ -167,7 +197,7 @@ class PagedGroupEngine:
                  eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD,
                  capture_logprobs: bool = True, spec_k: int = 0,
                  spec_draft: str = "prompt_lookup", spec_ngram: int = 3,
-                 seed: int = 0):
+                 prefix_cache: bool = False, seed: int = 0):
         if num_slots < 1 or page_size < 1:
             raise ValueError(f"paged engine needs num_slots >= 1 and "
                              f"page_size >= 1, got {num_slots}/{page_size}")
@@ -214,6 +244,11 @@ class PagedGroupEngine:
         self.caches = None           # built lazily at first set_params
         self.logits = None           # (B, V) f32 per-slot next-token logits
         self.alloc = PageAllocator(num_pages)
+        self.radix = None
+        if prefix_cache:
+            require_engine_support(cfg, "prefix")
+            from repro.core.radix import RadixCache
+            self.radix = RadixCache(page_size, self.alloc)
         self.sched = SlotScheduler(num_slots)
         self._ptab = np.zeros((num_slots, self.n_max), np.int32)  # NULL rows
         self._mutex = threading.RLock()
@@ -225,21 +260,35 @@ class PagedGroupEngine:
         self.reclaimed_pages = 0
 
         self._prefill = jax.jit(self._prefill_group, donate_argnums=(1,))
+        self._prefill_sfx = jax.jit(self._prefill_suffix, donate_argnums=(1,))
         self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
         self._invalidate = jax.jit(self._invalidate_pages, donate_argnums=(0,))
         self._verify = jax.jit(self._verify_step, donate_argnums=(1,))
         self.reset_spec_stats()
+        self.reset_prefix_stats()
 
     def reset_spec_stats(self) -> None:
         self.spec_steps = 0            # verify forwards x live rows
-        self.drafted_tokens = 0        # free (non-forced) drafts proposed
-        self.accepted_tokens = 0       # free drafts that survived verify
+        self.drafted_tokens = 0        # drafts proposed
+        self.accepted_tokens = 0       # drafts that survived verify
         self.rolled_back_pages = 0     # speculative pages returned on reject
+
+    def reset_prefix_stats(self) -> None:
+        self.prefix_hit_pages = 0      # prompt pages served from the tree
+        self.prefix_miss_pages = 0     # prompt pages prefilled cold
+        self.prefix_inserted_pages = 0  # pages newly cached into the tree
+        self.prefix_evicted_pages = 0  # cached pages reclaimed by the gate
 
     @property
     def acceptance_rate(self) -> float:
         return (self.accepted_tokens / self.drafted_tokens
                 if self.drafted_tokens else 0.0)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of cacheable prompt pages served from the radix tree."""
+        tot = self.prefix_hit_pages + self.prefix_miss_pages
+        return self.prefix_hit_pages / tot if tot else 0.0
 
     # -- page geometry ------------------------------------------------------
 
@@ -263,6 +312,16 @@ class PagedGroupEngine:
         spec = ((self.spec_k + self.page - 1) // self.page + 1
                 if self.spec_k else 0)
         return min(n, self.window // self.page + 3 + spec)
+
+    def _suffix_bucket(self, n_sfx_pages: int) -> int:
+        """Pad a radix-miss suffix to a power-of-two page count so the
+        suffix-prefill jit cache holds O(log n_prompt_pages) traces while a
+        warm hit still prefills genuinely fewer tokens than a cold start
+        (padding to the full prompt length would erase the FLOP saving)."""
+        b = 1
+        while b < n_sfx_pages:
+            b *= 2
+        return min(b, self.n_prompt_pages)
 
     def _prompt_page_range(self, plen: int):
         """(j0, n_pp): prompt pages j0..n_pp-1 are window-visible to at
@@ -317,21 +376,38 @@ class PagedGroupEngine:
             new_caches[grp] = {"kv": new}
         return new_caches, logits
 
+    def _prefill_suffix(self, params, caches, tokens, positions, segs,
+                        wslots, ptab, last):
+        """Prefill ONLY a prompt's uncached suffix through the paged pool
+        (radix-cache warm admission): the (1, S) block writes into the
+        group's freshly allocated private pages via flat write slots while
+        attending through the page table — which already lists the matched
+        cached pages, so the suffix conditions on the shared prefix
+        exactly as a cold full prefill would (attention.py routes S > 1 +
+        per-token slots through the same multi-token decode path the spec
+        verify block uses). Returns (caches, last-real-token logits)."""
+        cfg = self.cfg
+        h, caches, _, _ = forward_hidden(
+            params, cfg, tokens, positions=positions, segments=segs,
+            caches=caches, cache_offset=wslots, page_table=ptab)
+        W = lm_head_weight(params["embed"], cfg)
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
+                            W.astype(jnp.float32))[0]
+        return caches, logits
+
     def _decode_step(self, params, caches, logits, keys, rows, positions,
-                     wslot, ptab, active, forced, use_forced):
+                     wslot, ptab, active):
         """One token for every slot: sample from the slot's current logits
         with its row's own step key, then advance through the paged cache.
         Inactive slots feed PAD at pos 2^30 and write into the trash page.
-        Rows with a pending teacher-forced prefix (shared-system-prompt
-        serving) commit ``forced`` instead of the sample. With capture
-        enabled, also returns log p(emitted id) under the raw distribution
-        — the rollout-time behavior logprob (DESIGN.md §Tri-model-capture);
-        disabled engines skip both the log-softmax and the extra
-        device->host transfer."""
+        With capture enabled, also returns log p(emitted id) under the raw
+        distribution — the rollout-time behavior logprob (DESIGN.md
+        §Tri-model-capture); disabled engines skip both the log-softmax
+        and the extra device->host transfer."""
         cfg = self.cfg
         tok = _sample_token_rows(keys, logits, rows, self.G,
                                  self.temperature, self.top_p)
-        tok = jnp.where(use_forced, forced, tok)
         tok = jnp.where(active, tok, self.pad_id)
         lp = (jnp.where(active, sampled_token_logprob(logits, tok), 0.0)
               if self.capture_logprobs else None)
@@ -398,27 +474,20 @@ class PagedGroupEngine:
                                         jnp.float32)
 
     def submit(self, prompt, key, *, max_new: Optional[int] = None,
-               forced: Optional[List[np.ndarray]] = None) -> GroupHandle:
+               on_token=None) -> GroupHandle:
         """Register one GRPO group (G rollouts of one prompt). Returns a
         handle; drive ``step`` until it resolves. Raises immediately when
         the group could never be admitted — a prompt whose window-visible
         pages plus one row's page budget exceed what the pool can EVER free
         would otherwise sit in the admission queue forever.
 
-        ``forced`` (len G, one int array per row) teacher-forces each
-        row's leading response tokens — the shared-system-prompt serving
-        scenario: all rows share the prompt's refcounted pages, then each
-        row feeds its own request suffix verbatim before decoding freely.
-        Forced tokens count against ``max_new`` and are returned as part
-        of the response (the caller strips them)."""
+        ``on_token(row_idx, token_id)`` streams every committed token in
+        commit order (the serving tier's per-token delivery — TTFT/TPOT
+        are measured at these calls); it runs under the engine mutex, so
+        keep it cheap."""
         assert self.params is not None, "set_params before submit"
         p = np.asarray(prompt, np.int32)[-self.Lp:]   # Sampler keeps the tail
         max_new = self.T if max_new is None else min(max_new, self.T)
-        if forced is not None:
-            assert len(forced) == self.G, \
-                f"forced needs one token list per row ({self.G})"
-            assert all(len(f) < max_new for f in forced), \
-                "forced prefix must leave room to decode (len < max_new)"
         j0, n_pp = self._prompt_page_range(len(p))
         need = (n_pp - j0) + self._row_budget(max_new)
         avail = self.P - FIRST_PAGE
@@ -431,14 +500,12 @@ class PagedGroupEngine:
         keys = np.asarray(stepwise_keys(key, max_new))
         with self._mutex:
             g = _Group(gid=self._next_gid, prompt=p, G=self.G, keys=keys,
-                       max_new=max_new)
+                       max_new=max_new, on_token=on_token)
             self._next_gid += 1
             h = GroupHandle(g)
             self._handles[g.gid] = h
             for i in range(self.G):
-                f = ([] if forced is None
-                     else [int(t) for t in np.asarray(forced[i])])
-                self.sched.submit(_Row(group=g, idx=i, forced=f))
+                self.sched.submit(_Row(group=g, idx=i))
             return h
 
     @property
@@ -457,6 +524,7 @@ class PagedGroupEngine:
         self.reclaimed_pages = 0
         self.alloc.min_free = self.alloc.num_free
         self.reset_spec_stats()
+        self.reset_prefix_stats()
 
     # -- engine step --------------------------------------------------------
 
@@ -464,30 +532,106 @@ class PagedGroupEngine:
         """The freelist must cover this row's worst-case resident pages ON
         TOP of every admitted row's outstanding credit — credits make lazy
         allocation deadlock-free (an admitted row can always take its next
-        page), so the gate reads free - outstanding, not raw free."""
+        page), so the gate reads free - outstanding, not raw free.
+
+        With the radix prefix cache, matched pages cost nothing (they are
+        retained, not allocated — the gate stashes the match on the group
+        for ``_admit_row``, which runs back-to-back under the mutex with
+        ``admit(limit=1)``), and a deficit first evicts idle cached pages
+        — cached-but-unreferenced pages are as good as free."""
         need = self._row_budget(row.group.max_new)
+        mpages = []
         if row.group.prompt_pages is None:
             j0, n_pp = self._prompt_page_range(len(row.group.prompt))
-            need += n_pp - j0
-        return self.alloc.num_free - self._outstanding >= need
+            m = j0
+            if self.radix is not None:
+                m, mpages = self.radix.lookup(row.group.prompt, j0=j0)
+                row.group.match = (m, mpages)
+            need += n_pp - m
+        free = self.alloc.num_free - self._outstanding
+        if free < need and self.radix is not None:
+            self.prefix_evicted_pages += len(
+                self.radix.evict(need - free, protect=set(mpages)))
+            free = self.alloc.num_free - self._outstanding
+        return free >= need
+
+    def _warm_prefill(self, g: _Group, m: int, new: List[int],
+                      j0: int, n_pp: int) -> None:
+        """Prefill a radix-hit prompt's uncached tail (page indices
+        ``m..n_pp-1``) into its freshly allocated private pages ``new``,
+        attending through the matched cached pages via the group's page
+        table. The block is padded to a power-of-two page count
+        (``_suffix_bucket``) so the jit cache stays warm without erasing
+        the FLOP saving; pad slots are masked (segment -1, trash page)."""
+        page = self.page
+        m_tok = m * page
+        sfx = g.prompt[m_tok:]
+        S = max(2, self._suffix_bucket(len(new)) * page)
+        ar = np.arange(S)
+        real = ar < len(sfx)
+        toks = np.full((1, S), self.pad_id, np.int32)
+        toks[0, : len(sfx)] = sfx
+        pos = np.where(real, m_tok + ar, 0).astype(np.int32)[None]
+        segs = np.where(real, 0, -1).astype(np.int32)[None]
+        wsl = np.full((S,), TRASH_PAGE * page, np.int32)
+        for t in range(len(sfx)):
+            a = m_tok + t
+            wsl[t] = new[a // page - m] * page + a % page
+        tab = np.zeros((1, self.n_max), np.int32)
+        tab[0, : n_pp - j0] = g.prompt_pages
+        inval = np.full((self.n_max,), TRASH_PAGE, np.int32)
+        inval[: len(new)] = new
+        self.caches = self._invalidate(self.caches, jnp.asarray(inval))
+        self.caches, g.prompt_logits = self._prefill_sfx(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(segs), jnp.asarray(wsl[None]), jnp.asarray(tab),
+            jnp.asarray([len(sfx) - 1], jnp.int32))
 
     def _admit_row(self, slot: int, row: _Row) -> None:
         g = row.group
         if g.prompt_pages is None:
             j0, n_pp = self._prompt_page_range(len(g.prompt))
-            g.prompt_pages = self.alloc.alloc(n_pp - j0, refcount=g.G)
-            assert g.prompt_pages is not None, "admission gate let a row " \
-                "in without pages for its prompt"
+            m, mpages = g.match if g.match is not None else (j0, [])
+            g.match = None
+            if m > j0:
+                # radix warm start: the matched cached pages join the
+                # group's table with one reference per row (their KV is
+                # bitwise what a cold prefill would write — core/radix.py);
+                # only the uncached suffix is prefilled, into private pages
+                self.alloc.retain(mpages, n=g.G)
+                new = self.alloc.alloc(n_pp - m, refcount=g.G)
+                assert new is not None, "admission gate let a row in " \
+                    "without pages for its prompt suffix"
+                g.prompt_pages = list(mpages) + new
+                self.prefix_hit_pages += m - j0
+                self.prefix_miss_pages += n_pp - m
+            else:
+                g.prompt_pages = self.alloc.alloc(n_pp - j0, refcount=g.G)
+                assert g.prompt_pages is not None, "admission gate let a " \
+                    "row in without pages for its prompt"
+                if self.radix is not None:
+                    self.prefix_miss_pages += n_pp - j0
             g.prompt_last = [min((j + 1) * self.page, len(g.prompt)) - 1
                              for j in range(j0, n_pp)]
-            dest = np.full((self.n_prompt_pages,), TRASH_PAGE, np.int32)
-            dest[j0:n_pp] = g.prompt_pages
-            row_arr = np.full((1, self.n_prompt_pages * self.page),
-                              self.pad_id, np.int32)
-            row_arr[0, : len(g.prompt)] = g.prompt
-            self.caches, g.prompt_logits = self._prefill(
-                self.params, self.caches, jnp.asarray(row_arr),
-                jnp.asarray([len(g.prompt)], jnp.int32), jnp.asarray(dest))
+            if m > j0:
+                self._warm_prefill(g, m, g.prompt_pages[m - j0:], j0, n_pp)
+            else:
+                dest = np.full((self.n_prompt_pages,), TRASH_PAGE, np.int32)
+                dest[j0:n_pp] = g.prompt_pages
+                row_arr = np.full((1, self.n_prompt_pages * self.page),
+                                  self.pad_id, np.int32)
+                row_arr[0, : len(g.prompt)] = g.prompt
+                self.caches, g.prompt_logits = self._prefill(
+                    self.params, self.caches, jnp.asarray(row_arr),
+                    jnp.asarray([len(g.prompt)], jnp.int32),
+                    jnp.asarray(dest))
+            if self.radix is not None:
+                # cache every COMPLETE prompt page (cold and warm alike —
+                # insert skips spans already cached); a trailing partial
+                # page is row-private and never enters the tree
+                self.prefix_inserted_pages += self.radix.insert(
+                    g.prompt, {j: g.prompt_pages[j - j0]
+                               for j in range(j0, len(g.prompt) // self.page)})
         row.pages = []
         row.credit = self._row_budget(g.max_new)
         self._outstanding += row.credit
@@ -625,8 +769,6 @@ class PagedGroupEngine:
             pos = np.full((B,), INVALID_POS, np.int32)
             wslot = np.full((B,), TRASH_PAGE * self.page, np.int32)
             active = np.zeros((B,), bool)
-            forced = np.zeros((B,), np.int32)
-            use_forced = np.zeros((B,), bool)
             fresh = np.full((B,), TRASH_PAGE, np.int32)   # pages to wipe
             n_fresh = 0
             for s in act:
@@ -644,9 +786,6 @@ class PagedGroupEngine:
                 pos[s] = q_pos
                 wslot[s] = row.pages[k] * self.page + t % self.page
                 active[s] = True
-                if row.forced:
-                    forced[s] = row.forced[0]
-                    use_forced[s] = True
             if n_fresh:
                 # one fixed-shape (B,) invalidation for every page freshly
                 # allocated this step (trash-page padding keeps the jit
@@ -657,8 +796,7 @@ class PagedGroupEngine:
             tok, lp, self.caches, self.logits = self._decode(
                 self.params, self.caches, self.logits, jnp.asarray(keys),
                 jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(wslot),
-                jnp.asarray(self._ptab), jnp.asarray(active),
-                jnp.asarray(forced), jnp.asarray(use_forced))
+                jnp.asarray(self._ptab), jnp.asarray(active))
             # one host transfer for the step's outputs (lp is None when
             # capture is off) — this sync sits in the per-token hot loop
             tok, lp = jax.device_get((tok, lp))
@@ -668,10 +806,10 @@ class PagedGroupEngine:
             for s in act:
                 row = self.sched.slot_req[s]
                 row.toks.append(int(tok[s]))
-                if row.forced:
-                    row.forced.pop(0)
                 if self.capture_logprobs:
                     row.lps.append(float(lp[s]))
+                if row.group.on_token is not None:
+                    row.group.on_token(row.idx, int(tok[s]))
                 if (tok[s] == self.eos_id
                         or len(row.toks) >= row.group.max_new):
                     self._finish_row(s, row, step)
@@ -683,9 +821,7 @@ class PagedGroupEngine:
         row, pre-allocate the block's speculative pages against the row
         credits, run ONE k+1-token verify forward, commit 1..k+1 tokens
         per row on the host, and roll rejected speculative pages back to
-        the freelist. A row with a pending teacher-forced prefix proposes
-        its forced tokens as drafts and force-accepts them — the fed
-        tokens ARE the forced tokens, so later accept tests stay valid."""
+        the freelist."""
         from repro.spec.sampler import truncate_commit
         from repro.spec.verify import assemble_commit
         B, k, page = self.B, self.spec_k, self.page
@@ -703,9 +839,6 @@ class PagedGroupEngine:
             row = self.sched.slot_req[s]
             g = row.group
             rc = len(row.toks)
-            nf = min(len(row.forced), k)
-            if nf:
-                drafts[s, :nf] = row.forced[:nf]
             start_rp = rc if row.fresh else rc - 1
             if self.window is not None:
                 self._reclaim_row(s, row, len(g.prompt) + start_rp)
@@ -745,23 +878,19 @@ class PagedGroupEngine:
             row = self.sched.slot_req[s]
             g = row.group
             rc = len(row.toks)
-            nf = min(len(row.forced), k)
             ct, cl = assemble_commit(accept[s], alt[s], drafts[s],
-                                     lp_d[s], lp_a[s], n_forced=nf)
-            if len(row.forced) > k:
-                # more forced tokens pending than the block carried:
-                # commit exactly the k fed forced tokens; the last one is
-                # already fed and simply re-fed by the next steady block
-                ct, cl = ct[:k], cl[:k]
+                                     lp_d[s], lp_a[s])
             self.spec_steps += 1
-            self.drafted_tokens += k - nf
-            self.accepted_tokens += max(len(ct) - 1 - nf, 0)
+            self.drafted_tokens += k
+            self.accepted_tokens += max(len(ct) - 1, 0)
             ct, cl, row_done = truncate_commit(ct, cl, g.max_new - rc,
                                                self.eos_id)
-            del row.forced[: min(len(ct), len(row.forced))]
             row.toks.extend(ct)
             if self.capture_logprobs:
                 row.lps.extend(cl)
+            if g.on_token is not None:
+                for tv in ct:
+                    g.on_token(row.idx, int(tv))
             self._draft.commit(s, ct)
             self.generated_tokens += len(ct)
             row.fresh = False

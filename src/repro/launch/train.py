@@ -86,7 +86,8 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
             temperature=rl.temperature, top_p=rl.top_p,
             capture_logprobs=rl.capture_logprobs,
             spec_k=rl.spec_k if rl.spec_decode else 0,
-            spec_draft=rl.spec_draft, spec_ngram=rl.spec_ngram, seed=seed)
+            spec_draft=rl.spec_draft, spec_ngram=rl.spec_ngram,
+            prefix_cache=rl.prefix_cache, seed=seed)
 
     instances = [InferenceInstance(i, cfg, sampler, latency_fn=latency_fn,
                                    scripted_fn=scripted_fn,
@@ -147,6 +148,11 @@ def main() -> None:
                     choices=["prompt_lookup", "model"],
                     help="draft provider: n-gram prompt lookup (no extra "
                          "model) or a small resident draft model")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache on the paged rollout engine "
+                         "(DESIGN.md §Radix-prefix-cache): prompts sharing "
+                         "a token prefix across groups/iterations share "
+                         "its pages, suffix-only prefill")
     ap.add_argument("--max-prompt-len", type=int, default=48)
     ap.add_argument("--max-response-len", type=int, default=16)
     ap.add_argument("--prompt-pad", type=int, default=0)
@@ -195,7 +201,7 @@ def main() -> None:
         rollout_engine=args.rollout_engine, cbatch_slots=args.cbatch_slots,
         kv_page_size=args.kv_page_size,
         spec_decode=args.spec, spec_k=args.spec_k,
-        spec_draft=args.spec_draft,
+        spec_draft=args.spec_draft, prefix_cache=args.prefix_cache,
         capture_logprobs=not args.no_capture_logprobs,
         transfer_overlap=not args.no_transfer_overlap,
         transfer_bucket_bytes=args.transfer_bucket_bytes,

@@ -111,24 +111,20 @@ def verify_block(logits, draft, keys, folds, *, temperature: float,
     return accept, alt, lp_draft, lp_alt
 
 
-def assemble_commit(accept, alt, draft, lp_draft, lp_alt,
-                    n_forced: int = 0) -> Tuple[List[int], List[float]]:
+def assemble_commit(accept, alt, draft, lp_draft,
+                    lp_alt) -> Tuple[List[int], List[float]]:
     """Walk ONE row's verify outputs into its committed tokens (host side).
 
     The commit is the leading run of accepted drafts plus one sampled tail
     token (the leftover resample at the first rejection, or the bonus draw
-    after a clean sweep) — between 1 and k+1 tokens. ``n_forced`` force-
-    accepts the first n proposals regardless of the verdict (teacher-forced
-    serving prefixes ride the verify block as drafts: the fed tokens ARE
-    the forced tokens, so the cache stays consistent and later positions'
-    accept tests remain valid — they condition on exactly what was fed).
+    after a clean sweep) — between 1 and k+1 tokens.
 
     Returns (tokens, raw_logprobs) of equal length; the caller truncates at
     EOS / the per-row cap and rolls back speculative cache state past the
     committed frontier.
     """
     k = len(draft)
-    n = min(int(n_forced), k)
+    n = 0
     while n < k and bool(accept[n]):
         n += 1
     toks = [int(t) for t in draft[:n]] + [int(alt[n])]

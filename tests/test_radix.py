@@ -1,0 +1,211 @@
+"""Radix prefix cache — the oracle token-identity battery (DESIGN.md
+§Radix-prefix-cache).
+
+The exactness contract, extended to the serving tier: requests served
+through the radix cache (shared prompt pages + suffix-only prefill) must
+be BITWISE token-identical to cold-cache serving under the same keys,
+across GQA / MLA-latent / sliding-window cache backends, with and without
+the spec plane riding on top. This holds because a paged cache entry is a
+pure function of (token, position) — a cached page IS the page a cold
+prefill would write — and because sampling is scheduling-order-invariant
+(per-request fold_in keys + stepwise step keys), so the warm engine's
+different admission timing cannot perturb the draws.
+
+Also here: the regression proof for the deleted teacher-forced serving
+path — the old forced path was proven token-identical to greedy decode of
+the full prompt (system + suffix) by the previous test generation, so the
+new radix path showing the same identity chains the two implementations.
+
+Structural invariants (refcounts, conservation, LRU eviction) are fuzzed
+in tests/test_radix_property.py; this file goes through the real model.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import engine_support
+from repro.core.paged import FIRST_PAGE, PagedGroupEngine
+from repro.core.radix import RadixCache
+from repro.models import init
+
+K = 3            # spec depth when the spec plane rides along
+LP, T = 24, 10   # engine prompt/response caps
+PAGE = 4
+
+
+def _gqa():
+    return reduced_config(get_config("llama3.2-3b"))
+
+
+def _mla_nomoe():
+    c = reduced_config(get_config("deepseek-v2-lite-16b"))
+    return dataclasses.replace(c, num_experts=0, num_experts_per_tok=0,
+                               num_shared_experts=0, moe_d_ff=0,
+                               first_k_dense=0, dense_d_ff=0)
+
+
+def _swa():
+    return dataclasses.replace(_gqa(), sliding_window=8)
+
+
+VARIANTS = {"gqa": _gqa, "mla": _mla_nomoe, "swa": _swa}
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for name, mk in VARIANTS.items():
+        cfg = mk()
+        out[name] = (cfg, init(jax.random.PRNGKey(0), cfg))
+    return out
+
+
+SYSTEM = [1, 5, 6, 7, 8, 9, 10, 11, 12, 13, 3, 4]      # three full pages
+
+
+def _prompts(n_reqs, tail=2):
+    return [np.asarray(SYSTEM + [40 + tail * i + d for d in range(tail)],
+                       np.int32) for i in range(n_reqs)]
+
+
+def _serve(cfg, params, prompts, *, prefix_cache, spec_k=0,
+           temperature=0.7, num_pages=64, num_slots=3):
+    eng = PagedGroupEngine(cfg, num_slots=num_slots, page_size=PAGE,
+                           num_pages=num_pages, max_prompt_len=LP,
+                           max_new_tokens=T, group_size=1,
+                           temperature=temperature, capture_logprobs=False,
+                           spec_k=spec_k, prefix_cache=prefix_cache, seed=0)
+    eng.set_params(params)
+    hs = [eng.submit(p, jax.random.fold_in(jax.random.PRNGKey(3), i))
+          for i, p in enumerate(prompts)]
+    while eng.step():
+        pass
+    outs = []
+    for h in hs:
+        r = h.result(timeout=1)
+        n = int(np.asarray(r.response_len)[0])
+        outs.append(np.asarray(r.response_ids)[0, :n].tolist())
+    return outs, eng
+
+
+# =========================================================================
+# the exactness contract, backend by backend
+# =========================================================================
+
+@pytest.mark.parametrize("variant", ["gqa", "mla", "swa"])
+@pytest.mark.parametrize("spec_k", [0, K])
+def test_radix_token_identity(setups, variant, spec_k):
+    """Radix-served sampled decode == cold-cache sampled decode, bitwise,
+    on every paged backend, with and without spec decode — and the warm
+    run actually hit the cache (the identity is not vacuous)."""
+    cfg, params = setups[variant]
+    prompts = _prompts(4)
+    cold, _ = _serve(cfg, params, prompts, prefix_cache=False,
+                     spec_k=spec_k)
+    warm, eng = _serve(cfg, params, prompts, prefix_cache=True,
+                       spec_k=spec_k)
+    assert cold == warm
+    assert eng.prefix_hit_pages > 0 and eng.prefix_hit_rate > 0
+    # drained pool: free + referenced == capacity, tree holds one
+    # reference per cached page and nothing else does
+    assert eng.idle
+    assert eng.alloc.num_free + eng.alloc.num_live == eng.P - FIRST_PAGE
+    tree = eng.radix.pages()
+    assert sorted(tree) == sorted(set(tree))
+    assert all(eng.alloc.refcount(p) == 1 for p in tree)
+
+
+def test_radix_cross_time_reuse(setups):
+    """Pages cached by a DRAINED first wave serve a later wave: the tree
+    reference outlives every row that wrote the pages (the cross-time
+    sharing the per-group refcount machinery alone cannot do)."""
+    cfg, params = setups["gqa"]
+    eng = PagedGroupEngine(cfg, num_slots=2, page_size=PAGE, num_pages=64,
+                           max_prompt_len=LP, max_new_tokens=T,
+                           group_size=1, temperature=0.0,
+                           capture_logprobs=False, prefix_cache=True, seed=0)
+    eng.set_params(params)
+    waves = []
+    for w in range(2):
+        hs = [eng.submit(p, jax.random.fold_in(jax.random.PRNGKey(w), i))
+              for i, p in enumerate(_prompts(2))]
+        while eng.step():
+            pass
+        waves.append([h.result(1) for h in hs])
+        if w == 0:
+            hits_wave1 = eng.prefix_hit_pages
+    assert eng.idle
+    # wave 2's requests hit the pages wave 1 cached — all three system
+    # pages for both requests, despite every wave-1 row being long gone
+    assert eng.prefix_hit_pages - hits_wave1 >= 2 * (len(SYSTEM) // PAGE)
+    # greedy: identical prompts across waves emit identical tokens
+    for a, b in zip(waves[0], waves[1]):
+        np.testing.assert_array_equal(np.asarray(a.response_ids),
+                                      np.asarray(b.response_ids))
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_serve_shared_matches_cold_full_prompt_greedy(setups, spec_k):
+    """Regression for the deleted teacher-forced serve_shared: greedily,
+    the radix path must emit exactly what cold full-prompt serving emits
+    (which is what the forced path was previously proven identical to)."""
+    from repro.launch.serve import serve_paged, serve_shared
+    cfg, _ = setups["gqa"]
+    system = np.arange(1, 10, dtype=np.int32)
+    sufs = [np.asarray([20, 21], np.int32), np.asarray([30], np.int32),
+            np.asarray([40, 41, 42], np.int32)]
+    done, stats = serve_shared(cfg, system, sufs, max_prompt_len=LP,
+                               max_new=T, page_size=PAGE, seed=0,
+                               temperature=0.0, spec_k=spec_k)
+    full = [np.concatenate([system, s]) for s in sufs]
+    ref, _ = serve_paged(cfg, full, max_prompt_len=LP, max_new=T,
+                         num_slots=len(sufs), page_size=PAGE, seed=0,
+                         temperature=0.0, spec_k=spec_k)
+    by_rid = {c.request_id: c.response_ids for c in ref}
+    for c in done:
+        np.testing.assert_array_equal(c.response_ids, by_rid[c.request_id])
+    assert stats["prefix_hit_rate"] > 0
+
+
+def test_window_dead_prompt_pages_never_cached(setups):
+    """Sliding-window geometry: prompt pages before j0 are never
+    allocated, so the tree holds placeholders there and caches only the
+    window-visible tail — and a second identical prompt still matches it
+    (the walk navigates placeholders by token content)."""
+    cfg, params = setups["swa"]          # window 8, page 4 -> j0 = 1
+    prompts = _prompts(2, tail=2)        # 14 tokens: j0=1, full pages 0..2
+    _, eng = _serve(cfg, params, prompts, prefix_cache=True)
+    # cached: pages j0..(len-1)//PAGE-1 = indices 1, 2 only
+    assert eng.radix.cached_pages == 2
+    assert eng.prefix_hit_pages == 2     # second request matched both
+
+
+def test_prefix_plane_support_matrix():
+    """The prefix plane inherits exactly the paged exclusions — SSM,
+    hybrid, enc-dec and VLM families are rejected at construction with
+    the architectural reason."""
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        ok_paged, _ = engine_support(cfg, "paged")
+        ok_prefix, reason = engine_support(cfg, "prefix")
+        assert ok_prefix == ok_paged, (arch, reason)
+    bad = get_config("mamba2-2.7b")
+    with pytest.raises(ValueError, match="not applicable"):
+        PagedGroupEngine(bad, num_slots=1, page_size=4, num_pages=16,
+                         max_prompt_len=8, max_new_tokens=8, group_size=1,
+                         prefix_cache=True)
+
+
+def test_radix_rejects_partial_page_insert():
+    """The tree only caches COMPLETE page spans — a partial trailing page
+    is row-private by construction, and handing one to insert is a bug."""
+    from repro.core.paged import PageAllocator
+    alloc = PageAllocator(8)
+    radix = RadixCache(4, alloc)
+    pages = alloc.alloc(1)
+    with pytest.raises(AssertionError):
+        radix.insert(np.asarray([1, 2, 3], np.int32), {0: pages[0]})

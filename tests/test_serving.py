@@ -1,0 +1,277 @@
+"""Serving tier: latency metrics, the request driver, and streaming
+delivery (DESIGN.md §Continuous-batching, serve.py).
+
+Three layers, cheapest first:
+
+  * ``compute_latency_metrics`` against an independent numpy recompute
+    over a hand-scripted timestamp trace (no engine, no model);
+  * ``RequestDriver`` over a VIRTUAL clock and a scripted stub engine,
+    with analytically derived TTFT/TPOT — queueing delay included in
+    TTFT, sleep-to-next-arrival when the engine drains, submission in
+    arrival order;
+  * streaming through the REAL paged engine (± spec decode): ``on_token``
+    must deliver every committed token exactly once, in commit order,
+    while decode is still in flight — the driver separately asserts
+    stream == final response for every request it runs.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.launch.serve import (RequestDriver, ServedRequest,
+                                compute_latency_metrics, poisson_arrivals,
+                                serve_requests)
+from repro.models import init
+
+
+# =========================================================================
+# metrics vs independent recompute
+# =========================================================================
+
+
+def _scripted_requests():
+    """Hand-written timestamp traces (seconds); values chosen so every
+    percentile interpolation actually interpolates."""
+    mk = lambda rid, arr, tt: ServedRequest(
+        rid=rid, prompt=np.zeros(4, np.int32), arrival=arr,
+        tokens=list(range(len(tt))), token_t=list(tt),
+        done_t=tt[-1] if tt else None)
+    return [
+        mk(0, 0.0, [0.30, 0.40, 0.55, 0.60]),
+        mk(1, 0.2, [0.90, 1.00]),
+        mk(2, 0.5, [0.80, 1.10, 1.25]),
+        mk(3, 1.0, [1.70]),              # single token: no TPOT sample
+        mk(4, 2.0, []),                  # never served: no samples at all
+    ]
+
+
+def test_latency_metrics_match_numpy_recompute():
+    reqs = _scripted_requests()
+    m = compute_latency_metrics(reqs)
+    # recompute from the raw timestamps, not via the properties under test
+    ttft = np.asarray([0.30 - 0.0, 0.90 - 0.2, 0.80 - 0.5, 1.70 - 1.0])
+    tpot = np.asarray([(0.60 - 0.30) / 3, (1.00 - 0.90) / 1,
+                       (1.25 - 0.80) / 2])
+    assert m["n_requests"] == 5
+    assert m["generated_tokens"] == 4 + 2 + 3 + 1 + 0
+    np.testing.assert_allclose(m["ttft_mean_s"], ttft.mean())
+    np.testing.assert_allclose(m["ttft_p50_s"], np.percentile(ttft, 50))
+    np.testing.assert_allclose(m["ttft_p99_s"], np.percentile(ttft, 99))
+    np.testing.assert_allclose(m["tpot_mean_s"], tpot.mean())
+    np.testing.assert_allclose(m["tpot_p50_s"], np.percentile(tpot, 50))
+    np.testing.assert_allclose(m["tpot_p99_s"], np.percentile(tpot, 99))
+    np.testing.assert_allclose(m["makespan_s"], 1.70)
+    np.testing.assert_allclose(m["tok_per_s"], 10 / 1.70)
+
+
+def test_latency_metrics_empty_and_degenerate():
+    assert compute_latency_metrics([])["tok_per_s"] == 0.0
+    only_unserved = [_scripted_requests()[4]]
+    m = compute_latency_metrics(only_unserved)
+    assert m["ttft_p50_s"] == 0.0 and m["tpot_p99_s"] == 0.0
+
+
+def test_poisson_arrivals():
+    a = poisson_arrivals(64, rate=4.0, seed=7)
+    b = poisson_arrivals(64, rate=4.0, seed=7)
+    c = poisson_arrivals(64, rate=4.0, seed=8)
+    np.testing.assert_array_equal(a, b)          # deterministic in seed
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0) and a[0] > 0  # cumulative offsets
+    gaps = np.diff(np.concatenate([[0.0], a]))
+    assert 0.1 < gaps.mean() < 0.6               # ~1/rate = 0.25
+    np.testing.assert_array_equal(poisson_arrivals(5, rate=0.0), np.zeros(5))
+
+
+# =========================================================================
+# the driver on a virtual clock + scripted engine
+# =========================================================================
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def time(self) -> float:
+        return self.t
+
+    def sleep(self, seconds: float) -> None:
+        assert seconds >= 0
+        self.t += seconds
+
+
+@dataclasses.dataclass
+class _StubRow:
+    script: list
+    on_token: object
+    emitted: list
+
+
+class StubEngine:
+    """Deterministic engine double with the driver-facing surface of the
+    paged engine: 1-row groups, limited slots with FIFO admission at step
+    start, one committed token per active row per step, each step costing
+    ``dt`` seconds on the injected clock."""
+    G = 1
+
+    def __init__(self, clock, *, num_slots: int, dt: float):
+        self.clock, self.slots, self.dt = clock, num_slots, dt
+        self.queue, self.active, self.steps = [], [], 0
+
+    @property
+    def idle(self):
+        return not self.queue and not self.active
+
+    def submit(self, prompt, key, *, max_new=None, on_token=None):
+        # the stub "generates" prompt[i] + 1 for max_new tokens
+        n = max_new if max_new is not None else len(prompt)
+        row = _StubRow([int(t) + 1 for t in prompt[:n]], on_token, [])
+        self.queue.append(row)
+
+        class _H:
+            def result(_, timeout=None):
+                assert row not in self.active and row not in self.queue
+                ids = np.asarray([row.emitted], np.int32)
+                return dataclasses.make_dataclass(
+                    "Out", ["response_ids", "response_len"])(
+                        ids, np.asarray([ids.shape[1]]))
+        return _H()
+
+    def step(self) -> bool:
+        while self.queue and len(self.active) < self.slots:
+            self.active.append(self.queue.pop(0))
+        if not self.active:
+            return False
+        self.steps += 1
+        self.clock.t += self.dt          # the step's compute time
+        for row in list(self.active):
+            tok = row.script[len(row.emitted)]
+            row.emitted.append(tok)
+            if row.on_token is not None:
+                row.on_token(0, tok)
+            if len(row.emitted) == len(row.script):
+                self.active.remove(row)
+        return True
+
+
+def test_driver_virtual_clock_analytic_latencies():
+    """Single slot, 0.5 s/step: queueing shows up in TTFT, the driver
+    sleeps the gap to a far-future arrival, and every request's stream
+    equals its final response (asserted inside run())."""
+    clock = VirtualClock()
+    eng = StubEngine(clock, num_slots=1, dt=0.5)
+    driver = RequestDriver(eng, clock=clock)
+    reqs = [
+        ServedRequest(rid=0, prompt=np.asarray([10, 11], np.int32),
+                      arrival=0.0),
+        ServedRequest(rid=1, prompt=np.asarray([20, 21], np.int32),
+                      arrival=0.1),
+        ServedRequest(rid=2, prompt=np.asarray([30], np.int32),
+                      arrival=10.0),
+    ]
+    out = driver.run(reqs, jax.random.PRNGKey(0))
+    # r0: steps at t=0.5, 1.0; r1 queued behind it: tokens at 1.5, 2.0;
+    # engine drains, driver sleeps 8 s to r2's arrival, serves it at 10.5
+    assert [r.token_t for r in out] == [[0.5, 1.0], [1.5, 2.0], [10.5]]
+    assert out[0].ttft == 0.5
+    assert out[1].ttft == pytest.approx(1.5 - 0.1)   # queueing included
+    assert out[2].ttft == pytest.approx(0.5)
+    assert out[0].tpot == out[1].tpot == pytest.approx(0.5)
+    assert out[2].tpot is None
+    m = compute_latency_metrics(out)
+    assert m["generated_tokens"] == 5
+    np.testing.assert_allclose(m["makespan_s"], 10.5)
+    np.testing.assert_allclose(m["ttft_p50_s"], 0.5)
+    assert eng.steps == 5                            # no busy-wait steps
+
+
+def test_driver_submits_in_arrival_order_and_batches():
+    """Two slots: overlapping arrivals decode concurrently; a request
+    arriving mid-flight is admitted the step its arrival comes due."""
+    clock = VirtualClock()
+    eng = StubEngine(clock, num_slots=2, dt=1.0)
+    driver = RequestDriver(eng, clock=clock)
+    reqs = [ServedRequest(rid=i, prompt=np.asarray([i, i], np.int32),
+                          arrival=a)
+            for i, a in enumerate([0.0, 0.0, 1.5])]
+    out = driver.run(reqs, jax.random.PRNGKey(0))
+    assert [r.token_t for r in out] == [[1.0, 2.0], [1.0, 2.0], [3.0, 4.0]]
+    assert out[2].ttft == pytest.approx(3.0 - 1.5)
+    assert eng.steps == 4
+
+
+def test_driver_rejects_grouped_engine():
+    class _G4:
+        G = 4
+    with pytest.raises(AssertionError, match="1-row"):
+        RequestDriver(_G4())
+
+
+# =========================================================================
+# streaming through the real engine
+# =========================================================================
+
+
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    return cfg, init(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_streaming_matches_final_response(gqa_setup, spec_k):
+    """on_token delivers every committed token exactly once, in commit
+    order, INCREMENTALLY (mid-decode snapshots grow), on both the plain
+    and the multi-token spec commit paths."""
+    from repro.core.paged import PagedGroupEngine
+    cfg, params = gqa_setup
+    T = 10
+    eng = PagedGroupEngine(cfg, num_slots=2, page_size=4, num_pages=32,
+                           max_prompt_len=8, max_new_tokens=T, group_size=1,
+                           temperature=0.7, capture_logprobs=False,
+                           spec_k=spec_k, seed=0)
+    eng.set_params(params)
+    prompts = [np.asarray([1, 5, 6, 7, 2 + i], np.int32) for i in range(3)]
+    streams = [[] for _ in prompts]
+
+    def sink(s):
+        return lambda row_idx, token_id: s.append(int(token_id))
+
+    hs = [eng.submit(p, jax.random.fold_in(jax.random.PRNGKey(9), i),
+                     on_token=sink(streams[i]))
+          for i, p in enumerate(prompts)]
+    partial = False
+    while eng.step():
+        ns = [len(s) for s in streams]
+        partial = partial or any(0 < n < T for n in ns)
+    assert partial, "tokens only appeared after drain — not streaming"
+    for i, h in enumerate(hs):
+        out = h.result(timeout=1)
+        n = int(np.asarray(out.response_len)[0])
+        assert streams[i] == np.asarray(out.response_ids)[0, :n].tolist()
+
+
+def test_serve_requests_end_to_end(gqa_setup):
+    """The full serving stack on the real engine with an explicit arrival
+    trace: per-request streams are verified inside the driver; metrics and
+    prefix stats come back coherent."""
+    cfg, params = gqa_setup
+    system = [1, 5, 6, 7, 8, 9, 10, 11]
+    prompts = [np.asarray(system + [40 + i], np.int32) for i in range(4)]
+    reqs, metrics, stats = serve_requests(
+        cfg, prompts, max_prompt_len=12, max_new=8, num_slots=2,
+        page_size=4, temperature=0.0, seed=0, prefix_cache=True,
+        arrivals=np.asarray([0.0, 0.0, 0.0, 0.05]), params=params)
+    assert metrics["n_requests"] == 4
+    assert metrics["generated_tokens"] == sum(len(r.tokens) for r in reqs)
+    assert metrics["generated_tokens"] > 0
+    assert metrics["ttft_p99_s"] >= metrics["ttft_p50_s"] > 0
+    assert metrics["makespan_s"] > 0 and metrics["tok_per_s"] > 0
+    assert stats["prefix_hit_rate"] > 0          # shared 2-page system
+    # greedy + shared system prompt: identical rids -> distinct suffixes,
+    # but every request decoded SOMETHING and the stream survived the
+    # driver's stream-vs-final assertion
+    assert all(r.done_t is not None for r in reqs)
