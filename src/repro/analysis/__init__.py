@@ -1,0 +1,20 @@
+"""repro-check: repo-specific static analysis (DESIGN.md §Static-analysis).
+
+Five AST-based checkers guard the invariants the paper's exactness
+contract depends on:
+
+  * host-sync        device->host transfers reachable from decode hot paths
+  * lock-discipline  cross-thread attribute access outside the owning lock
+  * refcount-pairing PageAllocator/RadixCache retain/release symmetry
+  * trace-purity     impurities inside jit/pallas-traced functions
+  * support-matrix   configs/base.py engine_support vs the actual guards
+
+Stdlib-only (``ast``); findings are suppressible exclusively via
+``# repro: allow(<checker>): <justification>`` pragmas. CLI: ``repro-check``
+(console script) or ``python -m repro.analysis.cli``.
+"""
+from repro.analysis.framework import Finding, Module, run_checkers
+from repro.analysis.registry import ALL_CHECKERS, CHECKER_NAMES
+
+__all__ = ["Finding", "Module", "run_checkers", "ALL_CHECKERS",
+           "CHECKER_NAMES"]

@@ -1,0 +1,168 @@
+"""Shared AST utilities: function index, name-heuristic call graph.
+
+Resolution is deliberately name-based (no import tracking, no types):
+``self.m()`` resolves within the enclosing class, a bare ``f()`` to the
+module-level ``f``, and ``obj.m()`` to every analyzed method named ``m``
+anywhere (cross-module). That over-approximates reachability — the right
+bias for checkers whose job is "could this be on the hot path / called
+while locked", and cheap enough to run on every commit.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.framework import Module
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.split' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class FuncInfo:
+    module: Module
+    node: ast.FunctionDef
+    qualname: str                 # "Cls.meth", "func", "Cls.meth.inner"
+    cls: Optional[str]            # innermost enclosing class name
+    parent: Optional[str] = None  # qualname of enclosing function, if any
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    @property
+    def ref(self) -> str:
+        """Global id: '<module path>::<qualname>'."""
+        return "%s::%s" % (self.module.path, self.qualname)
+
+
+def iter_functions(mod: Module) -> Iterator[FuncInfo]:
+    """Every def in the module, with class context and nesting."""
+    def walk(node, cls, qual, parent):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name,
+                                qual + [child.name], parent)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = ".".join(qual + [child.name])
+                yield FuncInfo(module=mod, node=child, qualname=q,
+                               cls=cls, parent=parent)
+                yield from walk(child, cls, qual + [child.name], q)
+            else:
+                yield from walk(child, cls, qual, parent)
+    yield from walk(mod.tree, None, [], None)
+
+
+def own_statements(fn: ast.FunctionDef) -> Iterator[ast.AST]:
+    """Walk fn's body, NOT descending into nested defs (which are their
+    own FuncInfo nodes) — nested lambdas/comprehensions are included."""
+    stack: List[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            stack.append(child)
+
+
+@dataclass
+class CallGraph:
+    funcs: Dict[str, FuncInfo] = field(default_factory=dict)  # by ref
+    edges: Dict[str, Set[str]] = field(default_factory=dict)  # ref -> refs
+
+    def callees(self, ref: str) -> Set[str]:
+        return self.edges.get(ref, set())
+
+    def bfs_depth(self, roots: List[str]) -> Dict[str, int]:
+        """Min call depth from any root, over the edge relation."""
+        depth = {r: 0 for r in roots if r in self.funcs}
+        frontier = list(depth)
+        while frontier:
+            nxt = []
+            for ref in frontier:
+                for cal in self.callees(ref):
+                    if cal not in depth:
+                        depth[cal] = depth[ref] + 1
+                        nxt.append(cal)
+            frontier = nxt
+        return depth
+
+
+def _callee_names(fn: ast.FunctionDef) -> Iterator[Tuple[str, bool]]:
+    """(name, is_self_call) for every call AND bound-method reference in
+    fn's own statements. ``self.m(...)`` and a bare ``m`` defined locally
+    both count; ``Thread(target=self._run)`` yields ('_run', True)."""
+    for node in own_statements(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                base = dotted(f.value)
+                yield f.attr, base == "self"
+            elif isinstance(f, ast.Name):
+                yield f.id, False
+        elif isinstance(node, ast.Attribute):
+            # bound-method reference passed around (thread targets,
+            # callbacks): only self.X references, to bound the fan-out
+            if dotted(node) is not None and \
+                    dotted(node).startswith("self."):
+                yield node.attr, True
+
+
+# Method names so common on stdlib/numpy/jax objects that a non-self
+# ``obj.m()`` call is almost never the repo function of the same name —
+# following them by name creates bogus edges (``x.at[i].add(v)`` is not
+# GradAccumulator.add, ``state.get(k)`` is not RolloutQueue.get).
+_COMMON_METHODS = {
+    "get", "put", "add", "update", "pop", "append", "extend", "clear",
+    "items", "keys", "values", "copy", "join", "start", "set", "sort",
+    "remove", "discard", "index", "count", "split", "strip", "close",
+    "read", "write", "mean", "sum", "max", "min", "all", "any", "wait",
+    "notify", "notify_all", "acquire", "result", "done", "insert",
+}
+
+
+def build_callgraph(modules: List[Module]) -> CallGraph:
+    g = CallGraph()
+    by_name: Dict[str, List[str]] = {}        # bare name -> refs
+    by_cls: Dict[Tuple[str, str, str], str] = {}  # (mod, cls, name) -> ref
+    for mod in modules:
+        for fi in iter_functions(mod):
+            g.funcs[fi.ref] = fi
+            by_name.setdefault(fi.name, []).append(fi.ref)
+            if fi.cls is not None:
+                by_cls[(mod.path, fi.cls, fi.name)] = fi.ref
+
+    for ref, fi in g.funcs.items():
+        out: Set[str] = set()
+        for name, is_self in _callee_names(fi.node):
+            if is_self and fi.cls is not None:
+                hit = by_cls.get((fi.module.path, fi.cls, name))
+                if hit:
+                    out.add(hit)
+                    continue
+            # nested function defined in this function?
+            nested = "%s::%s.%s" % (fi.module.path, fi.qualname, name)
+            if nested in g.funcs:
+                out.add(nested)
+                continue
+            # module-level / any-class name heuristic (skipped for
+            # ubiquitous container/array method names — see above)
+            if name in _COMMON_METHODS:
+                continue
+            for cand in by_name.get(name, ()):
+                out.add(cand)
+        out.discard(ref)
+        g.edges[ref] = out
+    return g

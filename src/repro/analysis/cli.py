@@ -1,0 +1,93 @@
+"""``repro-check``: run the static-analysis pass over the repo.
+
+Usage::
+
+    repro-check src/                     # human-readable, exit 1 on
+                                         # unsuppressed findings
+    repro-check src/ --json report.json  # plus a JSON report (CI artifact)
+    repro-check src/ --checker host-sync --show-suppressed
+
+Exit code 0 iff every finding is suppressed by a justified
+``# repro: allow(<checker>): <why>`` pragma (DESIGN.md §Static-analysis).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.framework import Finding, discover, run_checkers
+from repro.analysis.registry import ALL_CHECKERS, CHECKER_NAMES
+
+
+def build_arg_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro-check",
+        description="repo-specific static analysis "
+                    "(DESIGN.md §Static-analysis)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--checker", action="append", default=None,
+                    choices=CHECKER_NAMES, metavar="NAME",
+                    help="run only the named checker(s); repeatable "
+                         "(default: all of %s)" % ", ".join(CHECKER_NAMES))
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write the full findings report as JSON")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="print suppressed findings too (the inventory "
+                         "view)")
+    ap.add_argument("--root", default=".",
+                    help="path findings are reported relative to "
+                         "(default: cwd)")
+    return ap
+
+
+def summarize(findings: List[Finding]) -> str:
+    open_f = [f for f in findings if not f.suppressed]
+    supp = [f for f in findings if f.suppressed]
+    per = Counter(f.checker for f in open_f)
+    parts = ["%d finding(s): %d open, %d suppressed"
+             % (len(findings), len(open_f), len(supp))]
+    if per:
+        parts.append("open by checker: " + ", ".join(
+            "%s=%d" % kv for kv in sorted(per.items())))
+    return "; ".join(parts)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_arg_parser().parse_args(argv)
+    checkers = ALL_CHECKERS if not args.checker else \
+        [c for c in ALL_CHECKERS if c.name in args.checker]
+
+    modules = discover([Path(p) for p in args.paths], Path(args.root))
+    findings = run_checkers(modules, checkers, known_names=CHECKER_NAMES)
+
+    shown = 0
+    for f in findings:
+        if f.suppressed and not args.show_suppressed:
+            continue
+        print(f.render())
+        shown += 1
+    if shown:
+        print()
+    print(summarize(findings))
+
+    if args.json:
+        report = {
+            "tool": "repro-check",
+            "checkers": [c.name for c in checkers],
+            "findings": [f.to_json() for f in findings],
+            "open": sum(1 for f in findings if not f.suppressed),
+            "suppressed": sum(1 for f in findings if f.suppressed),
+        }
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(report, indent=2) + "\n")
+
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

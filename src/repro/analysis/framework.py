@@ -1,0 +1,145 @@
+"""Checker harness: module loading, pragma application, finding model.
+
+A checker is any object with ``name: str`` and
+``run(modules) -> List[Finding]``. The harness parses every module once,
+hands the same list to each checker, then applies suppression pragmas
+and emits the ``pragma`` meta-findings (bare allow / unknown checker /
+unused pragma) — those are not themselves suppressible, so the pragma
+layer can't be used to silence its own rot.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.pragmas import Pragma, match_pragma, parse_pragmas
+
+# Severity is informational tiering (host-sync call-depth etc.); the CLI
+# exit code counts every unsuppressed finding regardless of severity.
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclass
+class Finding:
+    checker: str
+    path: str            # repo-relative, '/'-separated
+    line: int
+    message: str
+    severity: str = "error"
+    suppressed: bool = False
+    justification: Optional[str] = None
+
+    def key(self):
+        return (self.path, self.line, self.checker, self.message)
+
+    def to_json(self) -> dict:
+        return {"checker": self.checker, "path": self.path,
+                "line": self.line, "severity": self.severity,
+                "message": self.message, "suppressed": self.suppressed,
+                "justification": self.justification}
+
+    def render(self) -> str:
+        tag = " [suppressed: %s]" % self.justification \
+            if self.suppressed else ""
+        return "%s:%d: %s(%s): %s%s" % (self.path, self.line,
+                                        self.checker, self.severity,
+                                        self.message, tag)
+
+
+@dataclass
+class Module:
+    path: str            # repo-relative, '/'-separated (id for findings)
+    source: str
+    tree: ast.Module = field(repr=False)
+    lines: List[str] = field(repr=False)
+    pragmas: List[Pragma] = field(repr=False)
+
+    @classmethod
+    def from_source(cls, path: str, source: str) -> "Module":
+        tree = ast.parse(source, filename=path)
+        lines = source.splitlines()
+        return cls(path=path, source=source, tree=tree, lines=lines,
+                   pragmas=parse_pragmas(lines, tree))
+
+    @classmethod
+    def from_file(cls, file: Path, root: Path) -> "Module":
+        rel = file.relative_to(root).as_posix() if root in file.parents \
+            or file == root else file.as_posix()
+        return cls.from_source(rel, file.read_text())
+
+
+def discover(paths: Sequence[Path], root: Optional[Path] = None
+             ) -> List[Module]:
+    """Load every ``*.py`` under the given paths (files or directories)."""
+    root = (root or Path.cwd()).resolve()
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p).resolve()
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    mods = []
+    for f in dict.fromkeys(files):  # dedupe, keep order
+        try:
+            mods.append(Module.from_file(f, root))
+        except SyntaxError as e:  # surface as a finding, don't crash
+            rel = f.relative_to(root).as_posix() if root in f.parents \
+                else f.as_posix()
+            mods.append(Module.from_source(rel, ""))
+            mods[-1].pragmas = []
+            mods[-1]._syntax_error = e  # type: ignore[attr-defined]
+    return mods
+
+
+def run_checkers(modules: List[Module], checkers: Iterable,
+                 known_names: Optional[Sequence[str]] = None
+                 ) -> List[Finding]:
+    """Run checkers, apply pragmas, append pragma meta-findings."""
+    findings: List[Finding] = []
+    for mod in modules:
+        err = getattr(mod, "_syntax_error", None)
+        if err is not None:
+            findings.append(Finding("parse", mod.path,
+                                    err.lineno or 1,
+                                    "syntax error: %s" % err.msg))
+    for chk in checkers:
+        findings.extend(chk.run(modules))
+
+    known = set(known_names or [c.name for c in checkers])
+    by_path = {m.path: m for m in modules}
+    for f in findings:
+        mod = by_path.get(f.path)
+        if mod is None or f.checker == "pragma":
+            continue
+        p = match_pragma(mod.pragmas, f.checker, f.line)
+        if p is not None:
+            p.used = True
+            if p.justification:
+                f.suppressed = True
+                f.justification = p.justification
+            # A bare allow matches but does NOT suppress — it becomes a
+            # pragma finding below, and the original stays open.
+
+    for mod in modules:
+        for p in mod.pragmas:
+            if not p.justification:
+                findings.append(Finding(
+                    "pragma", mod.path, p.line,
+                    "bare allow(%s) without a justification — write "
+                    "'# repro: allow(%s): <why>'" % (p.checker, p.checker)))
+            elif p.checker not in known:
+                findings.append(Finding(
+                    "pragma", mod.path, p.line,
+                    "unknown checker %r in allow() — known: %s"
+                    % (p.checker, ", ".join(sorted(known)))))
+            elif not p.used:
+                findings.append(Finding(
+                    "pragma", mod.path, p.line,
+                    "unused allow(%s) pragma — nothing it suppresses; "
+                    "delete it" % p.checker, severity="warning"))
+
+    findings.sort(key=lambda f: (f.path, f.line, f.checker))
+    return findings

@@ -1,0 +1,212 @@
+"""host-sync: device->host transfers reachable from decode hot paths.
+
+Explicit syncs (``jax.device_get``, ``jax.block_until_ready``,
+``.item()``) are flagged wherever they appear; implicit ones
+(``np.asarray`` / ``int()`` / ``float()``) only when the operand is
+*traced-tainted* — assigned from a jit-compiled handle, a
+``jax.random`` producer, or an attribute known to carry device arrays
+(``RolloutBatch`` fields etc., DEVICE_ATTRS).
+
+Severity = min call depth from the per-token entry points
+(HOT_ENTRY_POINTS): depth 0 is ``hot`` (error), 1-2 ``warm`` (warning),
+deeper or unreachable ``cold`` (info). Every site is reported either
+way — the full inventory is the scoping artifact for the
+device-resident decode loop (ROADMAP).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import (FuncInfo, build_callgraph, dotted,
+                                      iter_functions, own_statements)
+from repro.analysis.framework import Finding, Module
+from repro.analysis.repo_config import DEVICE_ATTRS, HOT_ENTRY_POINTS
+
+_EXPLICIT = {
+    "jax.device_get": "jax.device_get",
+    "jax.block_until_ready": "jax.block_until_ready",
+}
+_RANDOM_PRODUCERS = {"jax.random.split", "jax.random.fold_in"}
+_IMPLICIT_CASTS = {"int", "float"}
+_ASARRAY = {"np.asarray", "numpy.asarray", "np.array", "numpy.array"}
+
+
+def _jit_handle_attrs(mod: Module) -> Dict[str, Set[str]]:
+    """class name -> attr names assigned ``self._x = jax.jit(...)``."""
+    out: Dict[str, Set[str]] = {}
+    for fi in iter_functions(mod):
+        if fi.cls is None:
+            continue
+        for node in own_statements(fi.node):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            callee = dotted(node.value.func)
+            if callee not in ("jax.jit", "pl.pallas_call", "pallas_call"):
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and \
+                        dotted(tgt.value) == "self":
+                    out.setdefault(fi.cls, set()).add(tgt.attr)
+    return out
+
+
+def _jitted_module_funcs(modules: List[Module]) -> Set[str]:
+    """Bare names of functions carrying a jax.jit decorator."""
+    names: Set[str] = set()
+    for mod in modules:
+        for fi in iter_functions(mod):
+            for dec in fi.node.decorator_list:
+                d = dotted(dec.func if isinstance(dec, ast.Call) else dec)
+                if d == "jax.jit" or (isinstance(dec, ast.Call)
+                                      and _mentions_jit(dec)):
+                    names.add(fi.name)
+    return names
+
+
+def _mentions_jit(node: ast.AST) -> bool:
+    return any(dotted(n) == "jax.jit" for n in ast.walk(node)
+               if isinstance(n, (ast.Attribute, ast.Name)))
+
+
+class _FnScan:
+    """One pass over a function: taint propagation + sync sites."""
+
+    def __init__(self, fi: FuncInfo, jit_attrs: Set[str],
+                 jit_funcs: Set[str]):
+        self.fi = fi
+        self.jit_attrs = jit_attrs
+        self.jit_funcs = jit_funcs
+        self.tainted: Set[str] = set()
+        self.sites: List[Tuple[int, str]] = []
+
+    def is_tainted_expr(self, node: ast.AST) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and n.id in self.tainted:
+                return True
+            if isinstance(n, ast.Attribute) and n.attr in DEVICE_ATTRS:
+                return True
+            if isinstance(n, ast.Call):
+                d = dotted(n.func)
+                if d in _RANDOM_PRODUCERS:
+                    return True
+                if d is not None and d.startswith("self.") and \
+                        n.func.attr in self.jit_attrs:  # type: ignore
+                    return True
+                if d in self.jit_funcs:
+                    return True
+                if d in _EXPLICIT or d in _ASARRAY:
+                    return False  # result is host-side
+        return False
+
+    def _names_in(self, target: ast.AST) -> List[str]:
+        """Binding names of an assignment target: plain names and
+        tuple/list elements — NOT the base or index of a subscript /
+        attribute store (``keys[s] = v`` binds neither ``keys`` nor
+        ``s``; ``self.caches = v`` binds nothing local)."""
+        if isinstance(target, ast.Name):
+            return [target.id]
+        if isinstance(target, (ast.Tuple, ast.List)):
+            out = []
+            for el in target.elts:
+                out.extend(self._names_in(el))
+            return out
+        if isinstance(target, ast.Starred):
+            return self._names_in(target.value)
+        return []
+
+    def run(self) -> List[Tuple[int, str]]:
+        stmts = sorted(own_statements(self.fi.node),
+                       key=lambda n: getattr(n, "lineno", 0))
+        seen: Set[int] = set()
+
+        def site(line, msg):
+            if line not in seen:
+                seen.add(line)
+                self.sites.append((line, msg))
+
+        # Two lexical passes (loop-carried taint); implicit-transfer sites
+        # are recorded on the final pass, BEFORE the assignment untaints
+        # its target — so ``tok = np.asarray(tok)`` flags the cast and
+        # then treats tok as host-side downstream.
+        for final in (False, True):
+            self.tainted = set(self.tainted) if not final else self.tainted
+            if final:
+                for node in stmts:
+                    if not isinstance(node, ast.Call):
+                        continue
+                    d = dotted(node.func)
+                    if d in _EXPLICIT:
+                        site(node.lineno, "explicit sync: %s" % d)
+                    elif d is not None and d.endswith(".item") \
+                            and not node.args:
+                        site(node.lineno, "explicit sync: .item()")
+            for node in stmts:
+                if final and isinstance(node, ast.Call):
+                    d = dotted(node.func)
+                    if (d in _ASARRAY or d in _IMPLICIT_CASTS) \
+                            and node.args \
+                            and self.is_tainted_expr(node.args[0]):
+                        site(node.lineno,
+                             "implicit transfer: %s on a traced value" % d)
+                if isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)) and \
+                        getattr(node, "value", None) is not None:
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    val = node.value
+                    if final:
+                        # check embedded casts BEFORE the untaint below
+                        for c in ast.walk(val):
+                            if isinstance(c, ast.Call) and \
+                                    dotted(c.func) in \
+                                    _ASARRAY | _IMPLICIT_CASTS \
+                                    and c.args and \
+                                    self.is_tainted_expr(c.args[0]):
+                                site(c.lineno,
+                                     "implicit transfer: %s on a traced "
+                                     "value" % dotted(c.func))
+                    host = isinstance(val, ast.Call) and \
+                        dotted(val.func) in set(_EXPLICIT) | _ASARRAY
+                    if host:
+                        for t in targets:
+                            for nm in self._names_in(t):
+                                self.tainted.discard(nm)
+                    elif self.is_tainted_expr(val):
+                        for t in targets:
+                            self.tainted.update(self._names_in(t))
+        return self.sites
+
+
+class HostSyncChecker:
+    name = "host-sync"
+
+    def run(self, modules: List[Module]) -> List[Finding]:
+        graph = build_callgraph(modules)
+        roots = []
+        for suffix, qual in HOT_ENTRY_POINTS:
+            for ref, fi in graph.funcs.items():
+                if fi.module.path.endswith(suffix) and fi.qualname == qual:
+                    roots.append(ref)
+        depth = graph.bfs_depth(roots)
+        jit_funcs = _jitted_module_funcs(modules)
+
+        findings: List[Finding] = []
+        for mod in modules:
+            jit_attrs = _jit_handle_attrs(mod)
+            for fi in iter_functions(mod):
+                attrs = jit_attrs.get(fi.cls or "", set())
+                for line, msg in _FnScan(fi, attrs, jit_funcs).run():
+                    d = depth.get(fi.ref)
+                    tier, sev = ("hot", "error") if d == 0 else \
+                        ("warm", "warning") if d is not None and d <= 2 \
+                        else ("cold", "info")
+                    where = "depth %s from step loop" % d \
+                        if d is not None else "not on a decode path"
+                    findings.append(Finding(
+                        self.name, mod.path, line,
+                        "%s in %s [%s: %s]" % (msg, fi.qualname, tier,
+                                               where),
+                        severity=sev))
+        return findings

@@ -1,0 +1,261 @@
+"""lock-discipline: cross-thread attribute access outside the owning lock.
+
+For each class in a THREADED_MODULES module:
+
+  * thread roots = every ``Thread(target=...)`` function the class spawns,
+    plus its public API. A class that owns a lock is a *concurrent class*
+    — each public method is its own root (two public methods racing on
+    the same attribute is exactly the PR-4 torn-read shape). A lockless
+    class keeps its public API as one collective root (callers are
+    assumed externally serialized) but still races it against any thread
+    it spawns.
+  * a *shared* attribute is written at least once outside ``__init__``
+    and accessed (read or write) from >= 2 distinct roots.
+  * every access to a shared attribute must be inside ``with self.<lock>``
+    or in a function inferred lock-held: name ends in ``_locked``, or
+    every intra-class call site is itself lock-held (fixed point) — the
+    documented atomic-snapshot pattern (`VersionedParamStore`) passes
+    because all its accesses sit under the condition variable.
+
+One finding per (function, attribute), at the first unlocked access.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import dotted, iter_functions, own_statements
+from repro.analysis.framework import Finding, Module
+from repro.analysis.repo_config import THREADED_MODULES, module_matches
+
+_LOCK_CTORS = {"threading.Lock", "threading.RLock", "threading.Condition",
+               "threading.Semaphore", "threading.BoundedSemaphore"}
+# Methods that mutate their receiver: self.X.append(...) is a write to X.
+# queue.Queue.put/get are internally synchronized, so NOT here.
+_MUTATORS = {"append", "extend", "pop", "popleft", "appendleft", "add",
+             "update", "clear", "remove", "discard", "insert",
+             "setdefault", "sort"}
+
+
+@dataclass
+class _Access:
+    attr: str
+    line: int
+    write: bool
+    func: str          # qualname within the class
+    held: bool
+
+
+@dataclass
+class _ClassInfo:
+    name: str
+    lock_attrs: Set[str] = field(default_factory=set)
+    funcs: Dict[str, ast.FunctionDef] = field(default_factory=dict)
+    thread_targets: Set[str] = field(default_factory=set)  # func qualnames
+    accesses: List[_Access] = field(default_factory=list)
+    call_sites: Dict[str, List[Tuple[str, bool]]] = \
+        field(default_factory=dict)   # callee -> [(caller, site_held)]
+
+
+def _held_ranges(fn: ast.FunctionDef, lock_attrs: Set[str]
+                 ) -> List[Tuple[int, int]]:
+    spans = []
+    for node in own_statements(fn):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                d = dotted(item.context_expr)
+                if d and d.startswith("self.") and \
+                        d.split(".", 1)[1] in lock_attrs:
+                    end = max((getattr(n, "end_lineno", 0) or 0
+                               for n in ast.walk(node)), default=node.lineno)
+                    spans.append((node.lineno, end))
+    return spans
+
+
+def _in_spans(line: int, spans: List[Tuple[int, int]]) -> bool:
+    return any(a <= line <= b for a, b in spans)
+
+
+def _collect_class(mod: Module, cls_name: str,
+                   funcs: List) -> _ClassInfo:
+    info = _ClassInfo(name=cls_name)
+    for fi in funcs:
+        info.funcs[fi.qualname] = fi.node
+
+    # lock attributes (assigned anywhere, conventionally __init__)
+    for fi in funcs:
+        for node in own_statements(fi.node):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    dotted(node.value.func) in _LOCK_CTORS:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Attribute) and \
+                            dotted(tgt.value) == "self":
+                        info.lock_attrs.add(tgt.attr)
+
+    local_names = {fi.node.name: fi.qualname for fi in funcs}
+
+    for fi in funcs:
+        spans = _held_ranges(fi.node, info.lock_attrs)
+        for node in own_statements(fi.node):
+            # Thread(target=...) roots
+            if isinstance(node, ast.Call):
+                d = dotted(node.func) or ""
+                if d.split(".")[-1] == "Thread":
+                    for kw in node.keywords:
+                        if kw.arg != "target":
+                            continue
+                        t = dotted(kw.value)
+                        if t and t.startswith("self."):
+                            q = "%s.%s" % (cls_name, t.split(".", 1)[1])
+                            if q in info.funcs:
+                                info.thread_targets.add(q)
+                        elif t in local_names:
+                            info.thread_targets.add(local_names[t])
+            # intra-class call sites (calls AND bound references)
+            held_here = None
+            name: Optional[str] = None
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    dotted(node.func.value) == "self":
+                name = node.func.attr
+            elif isinstance(node, ast.Attribute) and \
+                    dotted(node) and dotted(node).startswith("self.") and \
+                    dotted(node).count(".") == 1:
+                name = node.attr
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in local_names:
+                name = node.func.id
+            if name is not None:
+                q = local_names.get(name) or "%s.%s" % (cls_name, name)
+                if q in info.funcs and q != fi.qualname:
+                    held_here = _in_spans(node.lineno, spans)
+                    info.call_sites.setdefault(q, []).append(
+                        (fi.qualname, held_here))
+            # attribute accesses on self
+            if isinstance(node, ast.Attribute) and \
+                    dotted(node.value) == "self":
+                attr, line = node.attr, node.lineno
+                if attr in info.lock_attrs or \
+                        "%s.%s" % (cls_name, attr) in info.funcs:
+                    continue  # the lock itself / method references
+                write = isinstance(node.ctx, (ast.Store, ast.Del))
+                info.accesses.append(_Access(
+                    attr=attr, line=line, write=write, func=fi.qualname,
+                    held=_in_spans(line, spans)))
+            # subscript store: self.X[...] = ...  /  mutator calls
+            if isinstance(node, ast.Subscript) and \
+                    isinstance(node.ctx, (ast.Store, ast.Del)) and \
+                    isinstance(node.value, ast.Attribute) and \
+                    dotted(node.value.value) == "self":
+                info.accesses.append(_Access(
+                    attr=node.value.attr, line=node.lineno, write=True,
+                    func=fi.qualname,
+                    held=_in_spans(node.lineno, spans)))
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _MUTATORS and \
+                    isinstance(node.func.value, ast.Attribute) and \
+                    dotted(node.func.value.value) == "self":
+                info.accesses.append(_Access(
+                    attr=node.func.value.attr, line=node.lineno,
+                    write=True, func=fi.qualname,
+                    held=_in_spans(node.lineno, spans)))
+    return info
+
+
+def _whole_held(info: _ClassInfo) -> Set[str]:
+    """Functions executed with the lock held at every call site."""
+    held = {q for q in info.funcs if q.split(".")[-1].endswith("_locked")}
+    changed = True
+    while changed:
+        changed = False
+        for q in info.funcs:
+            if q in held:
+                continue
+            sites = info.call_sites.get(q, [])
+            if sites and all(h or caller in held for caller, h in sites):
+                held.add(q)
+                changed = True
+    return held
+
+
+def _reachable(info: _ClassInfo, root: str) -> Set[str]:
+    seen = {root}
+    frontier = [root]
+    while frontier:
+        q = frontier.pop()
+        for callee, sites in info.call_sites.items():
+            if callee not in seen and any(c == q for c, _ in sites):
+                seen.add(callee)
+                frontier.append(callee)
+    return seen
+
+
+class LockDisciplineChecker:
+    name = "lock-discipline"
+
+    def run(self, modules: List[Module]) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in modules:
+            if not module_matches(mod.path, THREADED_MODULES):
+                continue
+            by_cls: Dict[str, List] = {}
+            for fi in iter_functions(mod):
+                if fi.cls is not None:
+                    by_cls.setdefault(fi.cls, []).append(fi)
+            for cls_name, funcs in by_cls.items():
+                findings.extend(self._check_class(mod, cls_name, funcs))
+        return findings
+
+    def _check_class(self, mod, cls_name, funcs) -> List[Finding]:
+        info = _collect_class(mod, cls_name, funcs)
+        init = "%s.__init__" % cls_name
+
+        roots: Dict[str, Set[str]] = {}   # root id -> reachable funcs
+        public = [q for q in info.funcs
+                  if not q.split(".")[-1].startswith("_")
+                  and "." not in q[len(cls_name) + 1:]]
+        if info.lock_attrs:
+            for q in public:
+                roots[q] = _reachable(info, q)
+        elif public:
+            api: Set[str] = set()
+            for q in public:
+                api |= _reachable(info, q)
+            roots["public-api"] = api
+        for q in sorted(info.thread_targets):
+            roots["thread:" + q] = _reachable(info, q)
+        if len(roots) < 2:
+            return []
+
+        whole = _whole_held(info)
+        post_init = [a for a in info.accesses if a.func != init
+                     and not a.func.startswith(init + ".")]
+
+        # shared = written post-init somewhere, touched from >= 2 roots
+        findings: List[Finding] = []
+        attrs = {a.attr for a in post_init if a.write}
+        for attr in sorted(attrs):
+            acc = [a for a in post_init if a.attr == attr]
+            owners = {rid for rid, reach in roots.items()
+                      if any(a.func in reach for a in acc)}
+            if len(owners) < 2:
+                continue
+            flagged: Set[str] = set()
+            for a in sorted(acc, key=lambda a: a.line):
+                if a.held or a.func in whole or a.func in flagged:
+                    continue
+                flagged.add(a.func)
+                how = "written" if a.write else "read"
+                lock = "with self.%s" % sorted(info.lock_attrs)[0] \
+                    if info.lock_attrs else "a lock (class owns none)"
+                findings.append(Finding(
+                    self.name, mod.path, a.line,
+                    "%s.%s %s in %s without holding %s; it is shared "
+                    "across thread roots [%s]"
+                    % (cls_name, attr, how, a.func, lock,
+                       ", ".join(sorted(owners)))))
+        return findings

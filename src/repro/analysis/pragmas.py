@@ -1,0 +1,93 @@
+"""Suppression pragmas (DESIGN.md §Static-analysis).
+
+Grammar, one pragma per comment::
+
+    # repro: allow(<checker>): <justification>
+
+Placement decides scope:
+
+  * on the flagged line, or on the line directly above it -> suppresses
+    findings of that checker on that line only;
+  * on a ``def`` line -> suppresses that checker for the whole function
+    body (decorators excluded);
+  * on a ``class`` line -> the whole class body.
+
+A bare ``allow`` with no justification, an unknown checker name, and a
+pragma that suppresses nothing are themselves findings (checker
+``pragma``) — suppressions must stay justified and live.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+# One comment may carry several pragmas (rare; keeps multi-checker
+# suppressions on one line — each "repro: allow(<name>): <why>" clause is
+# matched separately).
+_PRAGMA_RE = re.compile(
+    r"#\s*repro:\s*allow\(\s*([A-Za-z0-9_-]*)\s*\)\s*(?::\s*(.*?))?\s*"
+    r"(?=(?:repro:\s*allow\()|$)")
+
+
+@dataclass
+class Pragma:
+    checker: str                 # checker name inside allow(...)
+    justification: Optional[str]  # None or "" for a bare allow
+    line: int                    # 1-based line the comment sits on
+    span: Tuple[int, int]        # inclusive line range it suppresses
+    used: bool = field(default=False, compare=False)
+
+
+def _scope_spans(tree: ast.AST) -> dict:
+    """Map header line -> body end line for every def/class, so a pragma
+    on a ``def``/``class`` line can cover the whole body."""
+    spans = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            # node.lineno is the def/class keyword line (decorators have
+            # their own linenos), which is where the pragma comment lives.
+            spans[node.lineno] = node.end_lineno or node.lineno
+    return spans
+
+
+def parse_pragmas(lines: List[str], tree: ast.AST) -> List[Pragma]:
+    spans = _scope_spans(tree)
+    out: List[Pragma] = []
+    for i, text in enumerate(lines, start=1):
+        if "repro:" not in text:
+            continue
+        for m in _PRAGMA_RE.finditer(text):
+            checker = m.group(1)
+            just = m.group(2)
+            if just is not None:
+                just = just.strip() or None
+            end = spans.get(i)
+            if end is not None:
+                # scope pragma: the whole def/class body
+                span = (i, end)
+            else:
+                # line pragma: its own line, the rest of a comment block
+                # it opens, and the first code line after it
+                j = i + 1
+                while j <= len(lines) and \
+                        lines[j - 1].lstrip().startswith("#"):
+                    j += 1
+                span = (i, j)
+            out.append(Pragma(checker=checker, justification=just,
+                              line=i, span=span))
+    return out
+
+
+def match_pragma(pragmas: List[Pragma], checker: str,
+                 line: int) -> Optional[Pragma]:
+    """Innermost (narrowest-span) matching pragma, or None."""
+    best = None
+    for p in pragmas:
+        if p.checker == checker and p.span[0] <= line <= p.span[1]:
+            if best is None or (p.span[1] - p.span[0]) < \
+                    (best.span[1] - best.span[0]):
+                best = p
+    return best

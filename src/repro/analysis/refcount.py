@@ -1,0 +1,226 @@
+"""refcount-pairing: PageAllocator / RadixCache reference symmetry.
+
+Two rules, over REFCOUNT_MODULES (the paged pool and the radix cache):
+
+R1 *acquire must be handed off*. A call to ``*.alloc(...)`` /
+``*.retain(...)`` acquires references. An ``alloc`` whose result is
+discarded, or whose result never reaches persistent state (attribute /
+subscript store, a mutator push into an attribute-rooted container,
+being passed to a callee, released, or returned) leaks its pages. A
+``retain`` on a *local* list is held to the same handoff bar; retaining
+an already-persistent container (``g.prompt_pages``) is inherently
+paired. A bare ``return``/``raise`` between the acquire and its first
+handoff is a leak-on-early-exit (the rollback paths must release first).
+
+R2 *drop must release*. Removing entries from a page-tracking container
+(``.pop()/.popleft()/.clear()/del`` on PAGE_CONTAINERS attributes, or
+``<node>.page = None``) in a function that never calls
+``release``/``free``/``evict`` silently drops references — the page can
+never be freed (or was freed elsewhere with no local evidence; either
+way the site needs a pragma explaining the protocol).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.callgraph import dotted, iter_functions, own_statements
+from repro.analysis.framework import Finding, Module
+from repro.analysis.repo_config import (ACQUIRE_METHODS, PAGE_CONTAINERS,
+                                        REFCOUNT_MODULES, RELEASE_METHODS,
+                                        module_matches)
+
+
+def _acquire_kind(node: ast.Call) -> Optional[str]:
+    if isinstance(node.func, ast.Attribute) and \
+            node.func.attr in ACQUIRE_METHODS:
+        return node.func.attr
+    return None
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _root_name(node: ast.AST) -> Optional[ast.AST]:
+    """Innermost base of an attribute/subscript chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node
+
+
+class RefcountChecker:
+    name = "refcount-pairing"
+
+    def run(self, modules: List[Module]) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in modules:
+            if not module_matches(mod.path, REFCOUNT_MODULES):
+                continue
+            for fi in iter_functions(mod):
+                # the allocator's own implementation manages the freelist
+                # directly; pairing applies to its *clients*
+                if fi.cls == "PageAllocator":
+                    continue
+                findings.extend(self._check_fn(mod, fi))
+        return findings
+
+    def _check_fn(self, mod: Module, fi) -> List[Finding]:
+        stmts = sorted(own_statements(fi.node),
+                       key=lambda n: getattr(n, "lineno", 0))
+        findings: List[Finding] = []
+
+        has_release = any(
+            isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+            and n.func.attr in RELEASE_METHODS for n in stmts)
+
+        # ---- R1: acquires ------------------------------------------------
+        # aliases: name -> the acquire name it derives from
+        tracked: dict = {}   # local name -> acquire line
+        for node in stmts:
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    _acquire_kind(node.value) == "alloc":
+                names = [t.id for t in node.targets
+                         if isinstance(t, ast.Name)]
+                if not names:
+                    # allocated straight into persistent state: handoff
+                    continue
+                for nm in names:
+                    tracked[nm] = node.lineno
+            elif isinstance(node, ast.Expr) and \
+                    isinstance(node.value, ast.Call):
+                kind = _acquire_kind(node.value)
+                if kind == "alloc":
+                    findings.append(Finding(
+                        self.name, mod.path, node.lineno,
+                        "alloc() result discarded in %s — pages leak"
+                        % fi.qualname))
+                elif kind == "retain" and node.value.args:
+                    root = _root_name(node.value.args[0])
+                    if isinstance(root, ast.Name) and \
+                            root.id in self._unhandled_locals(fi, stmts):
+                        findings.append(Finding(
+                            self.name, mod.path, node.lineno,
+                            "retain() on local %r in %s with no handoff "
+                            "to persistent state — reference can never "
+                            "be released" % (root.id, fi.qualname)))
+
+        for nm, line in tracked.items():
+            handoff = self._first_handoff(stmts, nm)
+            if handoff is None:
+                findings.append(Finding(
+                    self.name, mod.path, line,
+                    "pages from alloc() into %r never handed off or "
+                    "released in %s" % (nm, fi.qualname)))
+                continue
+            # early exit between acquire and handoff leaks the pages
+            for node in stmts:
+                if isinstance(node, (ast.Return, ast.Raise)) and \
+                        line < node.lineno < handoff and \
+                        nm not in _names_in(node):
+                    findings.append(Finding(
+                        self.name, mod.path, node.lineno,
+                        "early %s between alloc() of %r (line %d) and "
+                        "its handoff (line %d) in %s — release on this "
+                        "path first"
+                        % (type(node).__name__.lower(), nm, line,
+                           handoff, fi.qualname)))
+                    break
+
+        # ---- R2: drops ---------------------------------------------------
+        for node in stmts:
+            drop = None
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("pop", "popleft", "clear") and \
+                    isinstance(node.func.value, ast.Attribute) and \
+                    node.func.value.attr in PAGE_CONTAINERS:
+                drop = "%s.%s()" % (node.func.value.attr, node.func.attr)
+            elif isinstance(node, (ast.Assign,)) and \
+                    isinstance(node.value, ast.Constant) and \
+                    node.value.value is None:
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) and t.attr == "page":
+                        drop = "%s.page = None" % (dotted(t.value) or "?")
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    base = t.value if isinstance(t, ast.Subscript) else t
+                    if isinstance(base, ast.Attribute) and \
+                            base.attr in PAGE_CONTAINERS:
+                        drop = "del on %s" % base.attr
+            if drop and not has_release:
+                findings.append(Finding(
+                    self.name, mod.path, node.lineno,
+                    "%s in %s which never calls release()/free() — "
+                    "dropped page references" % (drop, fi.qualname)))
+        return findings
+
+    # -- helpers -----------------------------------------------------------
+
+    def _first_handoff(self, stmts, nm: str) -> Optional[int]:
+        """Line of the first statement that persists or releases nm."""
+        best = None
+
+        def note(line):
+            nonlocal best
+            if best is None or line < best:
+                best = line
+
+        for node in stmts:
+            if isinstance(node, ast.Assign):
+                stores_persistent = any(
+                    isinstance(t, (ast.Attribute, ast.Subscript))
+                    for t in node.targets)
+                if stores_persistent and nm in _names_in(node.value):
+                    note(node.lineno)
+                # alias: track via plain rename too (pid = new[0])
+                if not stores_persistent and nm in _names_in(node.value) \
+                        and any(isinstance(t, ast.Name)
+                                for t in node.targets):
+                    # treat the alias as the same obligation by scanning
+                    # for ITS handoff transitively (one level is enough
+                    # for this codebase)
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            sub = self._first_handoff(
+                                [s for s in stmts
+                                 if getattr(s, "lineno", 0)
+                                 > node.lineno], t.id)
+                            if sub is not None:
+                                note(sub)
+            if isinstance(node, ast.Call):
+                attr = node.func.attr \
+                    if isinstance(node.func, ast.Attribute) else None
+                if attr in ACQUIRE_METHODS:
+                    pass  # acquiring is not a handoff of its own argument
+                elif attr in RELEASE_METHODS | {"extend", "append"} and \
+                        any(nm in _names_in(a) for a in node.args):
+                    note(node.lineno)
+                elif isinstance(node.func, (ast.Name, ast.Attribute)) and \
+                        any(nm in _names_in(a) for a in
+                            list(node.args) +
+                            [k.value for k in node.keywords]):
+                    # passed to a callee: ownership transferred
+                    note(node.lineno)
+            if isinstance(node, ast.Return) and node.value is not None \
+                    and nm in _names_in(node.value):
+                note(node.lineno)
+        return best
+
+    def _unhandled_locals(self, fi, stmts) -> Set[str]:
+        """Local names with no persistent handoff anywhere in fi."""
+        out = set()
+        params = {a.arg for a in fi.node.args.args}
+        assigned = set()
+        for node in stmts:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        assigned.add(t.id)
+        for nm in assigned | params:
+            if nm == "self":
+                continue
+            if self._first_handoff(stmts, nm) is None:
+                out.add(nm)
+        return out

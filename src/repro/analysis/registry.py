@@ -1,0 +1,20 @@
+"""Checker registry: the five repo-specific checkers plus the implicit
+``pragma``/``parse`` meta-checkers emitted by the harness."""
+from repro.analysis.host_sync import HostSyncChecker
+from repro.analysis.lock_discipline import LockDisciplineChecker
+from repro.analysis.refcount import RefcountChecker
+from repro.analysis.support_matrix import SupportMatrixChecker
+from repro.analysis.trace_purity import TracePurityChecker
+
+ALL_CHECKERS = [
+    HostSyncChecker(),
+    LockDisciplineChecker(),
+    RefcountChecker(),
+    TracePurityChecker(),
+    SupportMatrixChecker(),
+]
+
+# names valid inside allow(...) — meta-checkers aren't suppressible but
+# "pragma" is listed so an allow(pragma) is reported as unused, not
+# unknown
+CHECKER_NAMES = [c.name for c in ALL_CHECKERS] + ["pragma"]

@@ -1,0 +1,75 @@
+"""Repo-specific knowledge the checkers are parameterized on.
+
+Kept in one place so the checkers themselves stay generic AST passes;
+paths are matched by suffix against Module.path so the CLI works from
+the repo root (``src/repro/core/paged.py``) and in tests (fixtures use
+the bare suffix).
+"""
+
+# --- host-sync ------------------------------------------------------------
+
+# Per-token decode/serve loops: call depth from these tiers the severity
+# (0 = hot -> error, 1-2 = warm -> warning, deeper/unreachable = cold ->
+# info). Format: (module path suffix, qualname).
+HOT_ENTRY_POINTS = [
+    ("core/paged.py", "PagedGroupEngine.step"),
+    ("core/paged.py", "PagedGroupEngine._spec_step"),
+    ("core/paged.py", "PagedGroupEngine.serve"),
+    ("core/cbatch.py", "ContinuousBatchingSampler.run"),
+    ("core/engine.py", "InferenceInstance.generate_group"),
+    ("launch/serve.py", "RequestDriver.run"),
+    ("launch/serve.py", "serve_batch"),
+    ("launch/serve.py", "serve_paged"),
+    ("launch/serve.py", "serve_shared"),
+    ("spec/sampler.py", "run_spec"),
+]
+
+# Attribute names that carry device arrays in this codebase (RolloutBatch
+# fields, forward outputs): reading them taints the value for the
+# implicit-transfer rules (np.asarray/int/float on traced values).
+DEVICE_ATTRS = {
+    "response_ids", "response_len", "response_logprobs",
+    "logits", "prompt_logits", "caches",
+}
+
+# --- lock-discipline ------------------------------------------------------
+
+# Modules with real cross-thread traffic (ISSUE 7). Classes here get
+# per-public-method thread roots when they own a lock ("concurrent
+# class"), plus one root per Thread(target=...) they spawn.
+THREADED_MODULES = [
+    "transfer/service.py",
+    "core/engine.py",
+    "core/queue.py",
+    "core/generator.py",
+    "core/paged.py",
+]
+
+# --- refcount-pairing -----------------------------------------------------
+
+REFCOUNT_MODULES = ["core/paged.py", "core/radix.py"]
+# Containers that track live page ids: removal without a release in the
+# same function is a drop-without-release finding.
+PAGE_CONTAINERS = {"pages", "live", "prompt_pages"}
+ACQUIRE_METHODS = {"alloc", "retain"}
+RELEASE_METHODS = {"release", "free", "evict"}
+
+# --- support-matrix -------------------------------------------------------
+
+SUPPORT_CONFIG_MODULE = "configs/base.py"
+# ModelConfig fields that gate engine capability; a hand-rolled
+# assert/raise on these outside configs/ must agree with the matrix.
+CAPABILITY_FIELDS = {
+    "family", "is_encoder_decoder", "vision_prefix_len", "hybrid",
+    "attention_free",
+}
+
+# --- shared ---------------------------------------------------------------
+
+# Paths never analyzed (generated reports, the analysis package's own
+# fixture strings live in tests/).
+EXCLUDE_SUFFIXES = []
+
+
+def module_matches(path: str, suffixes) -> bool:
+    return any(path.endswith(s) for s in suffixes)

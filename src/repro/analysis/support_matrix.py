@@ -1,0 +1,181 @@
+"""support-matrix: configs/base.py engine_support vs the actual guards.
+
+The engine x family exclusion list is supposed to live in exactly one
+place (``engine_support``), consulted via ``require_engine_support`` at
+every engine construction site. Drift shows up three ways:
+
+S1  a *restricted* engine/plane (one with a ``return False`` path in its
+    support function) that no call site outside configs/ ever enforces —
+    the matrix says "unsupported" but nothing would stop you;
+S2  an enforcement call with an engine literal the matrix doesn't
+    declare (typo'd plane name), or a non-literal engine argument the
+    checker can't tie to the matrix;
+S3  a hand-rolled capability guard — ``assert``/conditional ``raise`` on
+    a capability field (``family``, ``is_encoder_decoder``, ...) outside
+    configs/ — re-growing the per-site asserts the matrix replaced.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import dotted, iter_functions, own_statements
+from repro.analysis.framework import Finding, Module
+from repro.analysis.repo_config import (CAPABILITY_FIELDS,
+                                        SUPPORT_CONFIG_MODULE)
+
+_ENFORCERS = {"require_engine_support", "engine_support"}
+
+
+def _declared_engines(mod: Module) -> Dict[str, int]:
+    """engine/plane name -> declaration line, from ROLLOUT_ENGINES and
+    the *_PLANE constants."""
+    out: Dict[str, int] = {}
+    for node in mod.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        for tgt in node.targets:
+            if not isinstance(tgt, ast.Name):
+                continue
+            if tgt.id == "ROLLOUT_ENGINES" and \
+                    isinstance(node.value, ast.Tuple):
+                for el in node.value.elts:
+                    if isinstance(el, ast.Constant) and \
+                            isinstance(el.value, str):
+                        out[el.value] = node.lineno
+            elif tgt.id.endswith("_PLANE") and \
+                    isinstance(node.value, ast.Constant) and \
+                    isinstance(node.value.value, str):
+                out[node.value.value] = node.lineno
+    return out
+
+
+def _restricted_engines(mod: Module, declared: Set[str]) -> Set[str]:
+    """Engines whose support path can return False. An engine whose
+    ``return True`` in engine_support precedes every ``return False``
+    (the 'group' shape) is unrestricted; planes with their own
+    ``_<x>_support`` function are restricted iff that function has a
+    ``return False``."""
+    funcs = {fi.name: fi.node for fi in iter_functions(mod)}
+
+    def false_lines(fn):
+        return [n.lineno for n in own_statements(fn)
+                if isinstance(n, ast.Return)
+                and isinstance(n.value, ast.Tuple) and n.value.elts
+                and isinstance(n.value.elts[0], ast.Constant)
+                and n.value.elts[0].value is False]
+
+    restricted: Set[str] = set()
+    main = funcs.get("engine_support")
+    if main is not None:
+        falses = false_lines(main)
+        # anything declared without an early ``return True`` preceding
+        # every ``return False`` inherits the fall-through: restricted
+        # whenever the function has a False path. Planes with their own
+        # ``_<x>_support`` helper are restricted iff the helper has one.
+        for nm in declared:
+            helper = funcs.get("_%s_support" % nm)
+            if helper is not None:
+                if false_lines(helper):
+                    restricted.add(nm)
+            elif nm not in restricted and falses:
+                early_true = _early_true_line(main, nm)
+                if early_true is None or \
+                        any(f < early_true for f in falses):
+                    restricted.add(nm)
+    return restricted
+
+
+def _early_true_line(fn, engine: str) -> Optional[int]:
+    for node in own_statements(fn):
+        if isinstance(node, ast.If) and \
+                any(isinstance(n, ast.Constant) and n.value == engine
+                    for n in ast.walk(node.test)):
+            for s in ast.walk(node):
+                if isinstance(s, ast.Return):
+                    return s.lineno
+    return None
+
+
+def _raises(body: List[ast.stmt]) -> bool:
+    return any(isinstance(n, ast.Raise) for st in body
+               for n in ast.walk(st))
+
+
+class SupportMatrixChecker:
+    name = "support-matrix"
+
+    def run(self, modules: List[Module]) -> List[Finding]:
+        cfg_mod = next((m for m in modules
+                        if m.path.endswith(SUPPORT_CONFIG_MODULE)), None)
+        findings: List[Finding] = []
+        declared: Dict[str, int] = {}
+        restricted: Set[str] = set()
+        if cfg_mod is not None:
+            declared = _declared_engines(cfg_mod)
+            restricted = _restricted_engines(cfg_mod, set(declared))
+
+        enforced: Dict[str, List[Tuple[str, int]]] = {}
+        for mod in modules:
+            if cfg_mod is not None and mod.path == cfg_mod.path:
+                continue
+            in_configs = "/configs/" in ("/" + mod.path)
+            for fi in iter_functions(mod):
+                for node in own_statements(fi.node):
+                    # S2: enforcement calls
+                    if isinstance(node, ast.Call):
+                        d = (dotted(node.func) or "").split(".")[-1]
+                        if d in _ENFORCERS and len(node.args) >= 2:
+                            arg = node.args[1]
+                            if isinstance(arg, ast.Constant) and \
+                                    isinstance(arg.value, str):
+                                if declared and arg.value not in declared:
+                                    findings.append(Finding(
+                                        self.name, mod.path, node.lineno,
+                                        "%s(..., %r): engine not declared "
+                                        "in configs/base.py matrix (%s)"
+                                        % (d, arg.value, ", ".join(
+                                            sorted(declared)))))
+                                else:
+                                    enforced.setdefault(
+                                        arg.value, []).append(
+                                        (mod.path, node.lineno))
+                            else:
+                                findings.append(Finding(
+                                    self.name, mod.path, node.lineno,
+                                    "%s() with a non-literal engine "
+                                    "argument — the matrix cross-check "
+                                    "cannot see this site" % d,
+                                    severity="warning"))
+                    # S3: hand-rolled capability guards
+                    if in_configs:
+                        continue
+                    guard = None
+                    if isinstance(node, ast.Assert):
+                        guard = ("assert", node.test, node.lineno)
+                    elif isinstance(node, ast.If) and _raises(node.body):
+                        guard = ("raise-under-if", node.test, node.lineno)
+                    if guard is not None:
+                        kind, test, line = guard
+                        caps = sorted({n.attr for n in ast.walk(test)
+                                       if isinstance(n, ast.Attribute)
+                                       and n.attr in CAPABILITY_FIELDS})
+                        if caps:
+                            findings.append(Finding(
+                                self.name, mod.path, line,
+                                "hand-rolled capability guard (%s on "
+                                ".%s) outside configs/ — route through "
+                                "require_engine_support or justify why "
+                                "this exclusion is not an engine-matrix "
+                                "row" % (kind, ", .".join(caps))))
+
+        # S1: restricted engines nobody enforces
+        if cfg_mod is not None:
+            for nm in sorted(restricted):
+                if not enforced.get(nm):
+                    findings.append(Finding(
+                        self.name, cfg_mod.path, declared.get(nm, 1),
+                        "engine %r has unsupported configs in the matrix "
+                        "but no call site outside configs/ enforces it "
+                        "(require_engine_support)" % nm))
+        return findings

@@ -1,0 +1,232 @@
+"""trace-purity: impurities inside jit/pallas-traced functions.
+
+Trace roots:
+  * ``self._x = jax.jit(self._meth, ...)`` handles (the engines' pattern),
+  * ``@jax.jit`` / ``@partial(jax.jit, static_arg...)`` decorated defs,
+  * positional callables handed to ``pallas_call`` / ``pl.pallas_call``,
+  * ``jax.jit(fn)`` / ``jax.jit(partial(fn, ...))`` value expressions.
+
+Roots and their repo-resolved transitive callees are scanned for:
+  * wall-clock / RNG calls (``time.time``, stdlib ``random``,
+    ``np.random`` — NOT ``jax.random``) and ``print``: these run once at
+    trace time and freeze, silently breaking what they claim to measure;
+  * ``global`` declarations with writes;
+  * attribute stores on ``self`` or on a parameter (outside
+    ``__init__``), and subscript stores whose base IS a parameter —
+    trace-time mutation of caller state. Fresh locals (the backends'
+    ``new = {}; new[k] = ...`` rebuild idiom) are pure and allowed.
+
+Only *direct* roots are additionally checked for Python ``if``/``while``
+branching on a comparison over bare parameters (traced values raise
+ConcretizationTypeError at best, silently specialize at worst);
+``is``/``is not`` tests and parameters named in ``static_argnames`` /
+``static_argnums`` are exempt, as are bare-name truthiness tests
+(``if capture:`` — the static-flag pattern).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import (build_callgraph, dotted,
+                                      iter_functions, own_statements)
+from repro.analysis.framework import Finding, Module
+
+_IMPURE_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "datetime.datetime.now", "print",
+}
+_IMPURE_PREFIXES = ("random.", "np.random.", "numpy.random.")
+
+
+def _static_params(fn: ast.FunctionDef, jit_call: Optional[ast.Call]
+                   ) -> Set[str]:
+    """Parameter names declared static in a jax.jit(...) call/decorator."""
+    out: Set[str] = set()
+    if jit_call is None:
+        return out
+    params = [a.arg for a in fn.args.args]
+    for kw in jit_call.keywords:
+        v = kw.value
+        if kw.arg == "static_argnames":
+            for n in ast.walk(v):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+        elif kw.arg in ("static_argnums", "donate_argnums"):
+            if kw.arg != "static_argnums":
+                continue
+            for n in ast.walk(v):
+                if isinstance(n, ast.Constant) and \
+                        isinstance(n.value, int) and n.value < len(params):
+                    out.add(params[n.value])
+    return out
+
+
+def _find_roots(modules: List[Module]) -> Dict[str, Tuple[str, Optional[ast.Call]]]:
+    """func ref -> (how it is traced, the jit Call node if any)."""
+    roots: Dict[str, Tuple[str, Optional[ast.Call]]] = {}
+    by_name: Dict[str, List[str]] = {}
+    by_cls: Dict[Tuple[str, str, str], str] = {}
+    infos = {}
+    for mod in modules:
+        for fi in iter_functions(mod):
+            infos[fi.ref] = fi
+            by_name.setdefault(fi.name, []).append(fi.ref)
+            if fi.cls:
+                by_cls[(mod.path, fi.cls, fi.name)] = fi.ref
+
+    def mark(ref, how, call):
+        if ref in infos:
+            roots.setdefault(ref, (how, call))
+
+    for mod in modules:
+        for fi in iter_functions(mod):
+            # decorators
+            for dec in fi.node.decorator_list:
+                call = dec if isinstance(dec, ast.Call) else None
+                names = {dotted(n) for n in ast.walk(dec)
+                         if isinstance(n, (ast.Attribute, ast.Name))}
+                if "jax.jit" in names:
+                    jit_call = None
+                    if call is not None and dotted(call.func) in \
+                            ("partial", "functools.partial", "jax.jit"):
+                        jit_call = call
+                    mark(fi.ref, "@jax.jit", jit_call)
+            # value expressions: jax.jit(<target>) and pallas_call(kernel)
+            for node in own_statements(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d == "jax.jit" and node.args:
+                    for tref in _resolve_targets(node.args[0], fi, mod,
+                                                 by_cls, by_name):
+                        mark(tref, "jax.jit(...)", node)
+                elif d in ("pl.pallas_call", "pallas_call") and node.args:
+                    for tref in _resolve_targets(node.args[0], fi, mod,
+                                                 by_cls, by_name):
+                        mark(tref, "pallas_call", None)
+    return roots
+
+
+def _resolve_targets(arg: ast.AST, fi, mod, by_cls, by_name) -> List[str]:
+    """The function(s) an expression like self._m / fn / partial(fn, ..)
+    refers to."""
+    if isinstance(arg, ast.Call) and \
+            dotted(arg.func) in ("partial", "functools.partial") and \
+            arg.args:
+        arg = arg.args[0]
+    d = dotted(arg)
+    if d is None:
+        return []
+    if d.startswith("self.") and fi.cls:
+        hit = by_cls.get((mod.path, fi.cls, d.split(".", 1)[1]))
+        return [hit] if hit else []
+    if "." not in d:
+        # prefer same module, else unique global name
+        local = [r for r in by_name.get(d, ()) if r.startswith(mod.path)]
+        if local:
+            return local
+        cands = by_name.get(d, [])
+        return cands if len(cands) == 1 else cands
+    return []
+
+
+class TracePurityChecker:
+    name = "trace-purity"
+
+    def run(self, modules: List[Module]) -> List[Finding]:
+        graph = build_callgraph(modules)
+        roots = _find_roots(modules)
+        # transitive closure over repo-resolved callees
+        traced: Dict[str, bool] = {}  # ref -> is_direct_root
+        frontier = list(roots)
+        for r in roots:
+            traced[r] = True
+        while frontier:
+            ref = frontier.pop()
+            for cal in graph.callees(ref):
+                if cal not in traced:
+                    fi = graph.funcs[cal]
+                    # don't cross into obvious host-side helpers: traced
+                    # closure stays within functions that look jax-pure
+                    traced[cal] = False
+                    frontier.append(cal)
+
+        findings: List[Finding] = []
+        for ref, direct in traced.items():
+            fi = graph.funcs[ref]
+            how, jit_call = roots.get(ref, ("transitively traced", None))
+            findings.extend(self._check_fn(fi, direct, how, jit_call))
+        return findings
+
+    def _check_fn(self, fi, direct: bool, how: str,
+                  jit_call) -> List[Finding]:
+        mod = fi.module
+        fn = fi.node
+        out: List[Finding] = []
+        in_init = fn.name == "__init__"
+        params = {a.arg for a in fn.args.args} - {"self"}
+        static = _static_params(fn, jit_call)
+
+        def flag(line, msg, sev="error"):
+            out.append(Finding(self.name, mod.path, line,
+                               "%s in %s (%s)" % (msg, fi.qualname, how),
+                               severity=sev))
+
+        for node in own_statements(fn):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d in _IMPURE_CALLS or (
+                        d and d.startswith(_IMPURE_PREFIXES)):
+                    flag(node.lineno,
+                         "impure call %s() freezes at trace time" % d)
+            elif isinstance(node, ast.Global):
+                flag(node.lineno, "global declaration (trace-time "
+                     "mutation of module state)")
+            elif isinstance(node, ast.Assign) and not in_init:
+                for t in node.targets:
+                    base = t.value if isinstance(
+                        t, (ast.Attribute, ast.Subscript)) else None
+                    d = dotted(base) if base is not None else None
+                    if isinstance(t, ast.Attribute) and \
+                            (d == "self" or d in params):
+                        flag(t.lineno, "attribute store on %r mutates "
+                             "caller state at trace time" % d)
+                    elif isinstance(t, ast.Subscript) and d in params \
+                            and how != "pallas_call":
+                        # pallas kernels WRITE their output Refs by
+                        # subscript store — that is the kernel contract,
+                        # not an impurity
+                        flag(t.lineno, "subscript store into parameter "
+                             "%r mutates caller state at trace time" % d)
+            elif isinstance(node, ast.AugAssign) and not in_init:
+                t = node.target
+                base = t.value if isinstance(
+                    t, (ast.Attribute, ast.Subscript)) else None
+                d = dotted(base) if base is not None else None
+                if d == "self" or d in params:
+                    flag(t.lineno,
+                         "augmented store on %r at trace time" % d)
+            elif direct and isinstance(node, (ast.If, ast.While)):
+                bad = self._traced_branch(node.test, params - static)
+                if bad:
+                    flag(node.lineno,
+                         "Python branch on traced parameter %r "
+                         "(use lax.cond/jnp.where or mark it static)"
+                         % bad, sev="warning")
+        return out
+
+    @staticmethod
+    def _traced_branch(test: ast.AST, dyn_params: Set[str]
+                       ) -> Optional[str]:
+        """A Compare/BoolOp whose leaf is a bare dynamic parameter."""
+        for n in ast.walk(test):
+            if isinstance(n, ast.Compare):
+                if any(isinstance(op, (ast.Is, ast.IsNot))
+                       for op in n.ops):
+                    continue
+                for leaf in [n.left] + list(n.comparators):
+                    if isinstance(leaf, ast.Name) and \
+                            leaf.id in dyn_params:
+                        return leaf.id
+        return None

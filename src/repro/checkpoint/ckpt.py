@@ -31,6 +31,8 @@ def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
     flat = _flatten(tree)
     arrays, dtypes = {}, {}
     for k, v in flat.items():
+        # repro: allow(host-sync): checkpointing serialises params to host
+        # storage by definition; never on a decode path
         a = np.asarray(jax.device_get(v))
         dtypes[k] = str(a.dtype) if a.dtype != jnp.bfloat16 else "bfloat16"
         if a.dtype == jnp.bfloat16:

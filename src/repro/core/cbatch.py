@@ -252,7 +252,12 @@ class ContinuousBatchingSampler:
             tok, caches, logits, off_new = self._decode(
                 params, caches, logits, jnp.asarray(offsets),
                 jnp.asarray(active), k)
+            # repro: allow(host-sync): the one per-step readback (commit/
+            # eos bookkeeping is host-side) — ROADMAP device-resident
+            # decode loop
             tok = np.asarray(tok)
+            # repro: allow(host-sync): same per-step readback (writable
+            # slot-offset copy) — ROADMAP device-resident decode loop
             offsets = np.array(off_new)  # writable copy
             step = sched.tick()
             for s in list(sched.active_slots()):
@@ -291,6 +296,8 @@ class ContinuousBatchingSampler:
         caches = init_caches(params, cfg, B, self.max_ctx,
                              ring_slack=k + 1)
         logits = jnp.zeros((B, cfg.vocab_size), jnp.float32)
+        # repro: allow(host-sync): one-time setup transfer of per-request
+        # keys before the decode loop starts
         req_keys = np.asarray(jax.random.split(key, len(prompts)))
         plen = np.zeros((B,), np.int32)
         slot_keys = np.zeros((B, 2), np.uint32)
@@ -332,6 +339,9 @@ class ContinuousBatchingSampler:
                 jnp.asarray(segs), jnp.asarray(offs), logits,
                 jnp.asarray(fresh), jnp.asarray(draft),
                 jnp.asarray(slot_keys), jnp.asarray(folds))
+            # repro: allow(host-sync): the one per-verify-block readback
+            # (accept/commit walk is host-side) — ROADMAP device-resident
+            # decode loop
             accept, alt, lp_d, lp_a = jax.device_get(
                 (accept, alt, lp_d, lp_a))
             step = sched.tick()

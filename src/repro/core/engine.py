@@ -104,6 +104,8 @@ class InferenceInstance:
             else:
                 assert self.sampler is not None and params is not None
                 out = self.sampler.generate(params, prompts, key)
+                # repro: allow(host-sync): busy-clock barrier — the pool's
+                # utilisation accounting must not credit in-flight work
                 jax.block_until_ready(out.response_ids)
             self.busy_time += time.perf_counter() - t0
             return out, version

@@ -61,7 +61,10 @@ class TemporaryDataGenerator:
                 # never serve pre-flip params to this batch
                 out, version = self.pool.generate_group(
                     prompts, key, min_version=weight_version)
+                # repro: allow(host-sync): completed-rollout readback for
+                # host-side reward scoring, once per finished group
                 resp = np.asarray(out.response_ids)
+                # repro: allow(host-sync): same completed-group readback
                 lens = np.asarray(out.response_len)
                 lps = getattr(out, "response_logprobs", None)
                 lps = None if lps is None else np.asarray(lps, np.float32)

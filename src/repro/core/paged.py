@@ -183,6 +183,18 @@ class GroupHandle:
             raise TimeoutError(f"group {self._group.gid} not complete")
         return self._result
 
+    def host_rows(self) -> List[np.ndarray]:
+        """Per-row committed tokens as host numpy arrays (row order) —
+        the same arrays the RolloutBatch was assembled from, so serving
+        paths can read completions with no device transfer. Completed
+        groups only (call after ``result``)."""
+        g = self._group
+        return [g.done_rows[i] for i in range(g.G)]
+
+    @property
+    def finish_step(self) -> int:
+        return self._group.finish_step
+
 
 class PagedGroupEngine:
     """Continuous-batching decode over a shared paged KV/latent pool.
@@ -268,27 +280,31 @@ class PagedGroupEngine:
         self.reset_prefix_stats()
 
     def reset_spec_stats(self) -> None:
-        self.spec_steps = 0            # verify forwards x live rows
-        self.drafted_tokens = 0        # drafts proposed
-        self.accepted_tokens = 0       # drafts that survived verify
-        self.rolled_back_pages = 0     # speculative pages returned on reject
+        with self._mutex:   # counters race with step() from other threads
+            self.spec_steps = 0          # verify forwards x live rows
+            self.drafted_tokens = 0      # drafts proposed
+            self.accepted_tokens = 0     # drafts that survived verify
+            self.rolled_back_pages = 0   # spec pages returned on reject
 
     def reset_prefix_stats(self) -> None:
-        self.prefix_hit_pages = 0      # prompt pages served from the tree
-        self.prefix_miss_pages = 0     # prompt pages prefilled cold
-        self.prefix_inserted_pages = 0  # pages newly cached into the tree
-        self.prefix_evicted_pages = 0  # cached pages reclaimed by the gate
+        with self._mutex:
+            self.prefix_hit_pages = 0     # prompt pages from the tree
+            self.prefix_miss_pages = 0    # prompt pages prefilled cold
+            self.prefix_inserted_pages = 0  # pages newly cached
+            self.prefix_evicted_pages = 0   # cached pages reclaimed
 
     @property
     def acceptance_rate(self) -> float:
-        return (self.accepted_tokens / self.drafted_tokens
-                if self.drafted_tokens else 0.0)
+        with self._mutex:
+            return (self.accepted_tokens / self.drafted_tokens
+                    if self.drafted_tokens else 0.0)
 
     @property
     def prefix_hit_rate(self) -> float:
         """Fraction of cacheable prompt pages served from the radix tree."""
-        tot = self.prefix_hit_pages + self.prefix_miss_pages
-        return self.prefix_hit_pages / tot if tot else 0.0
+        with self._mutex:
+            tot = self.prefix_hit_pages + self.prefix_miss_pages
+            return self.prefix_hit_pages / tot if tot else 0.0
 
     # -- page geometry ------------------------------------------------------
 
@@ -485,7 +501,6 @@ class PagedGroupEngine:
         commit order (the serving tier's per-token delivery — TTFT/TPOT
         are measured at these calls); it runs under the engine mutex, so
         keep it cheap."""
-        assert self.params is not None, "set_params before submit"
         p = np.asarray(prompt, np.int32)[-self.Lp:]   # Sampler keeps the tail
         max_new = self.T if max_new is None else min(max_new, self.T)
         j0, n_pp = self._prompt_page_range(len(p))
@@ -497,8 +512,13 @@ class PagedGroupEngine:
                 f"needs {n_pp - j0} pages + {self._row_budget(max_new)} "
                 f"response pages per row = {need}, but the pool only ever "
                 f"frees {avail} of its {self.P} pages")
+        # repro: allow(host-sync): one key-table transfer per group
+        # submission (admission bookkeeping is host-side), not per token
         keys = np.asarray(stepwise_keys(key, max_new))
         with self._mutex:
+            # params is swapped by set_params under the mutex — read it
+            # under the same lock (torn-read discipline)
+            assert self.params is not None, "set_params before submit"
             g = _Group(gid=self._next_gid, prompt=p, G=self.G, keys=keys,
                        max_new=max_new, on_token=on_token)
             self._next_gid += 1
@@ -519,12 +539,13 @@ class PagedGroupEngine:
         return (self.P - FIRST_PAGE) - self.alloc.min_free
 
     def reset_stats(self) -> None:
-        self.decode_steps = 0
-        self.generated_tokens = 0
-        self.reclaimed_pages = 0
-        self.alloc.min_free = self.alloc.num_free
-        self.reset_spec_stats()
-        self.reset_prefix_stats()
+        with self._mutex:   # RLock: the nested resets re-enter
+            self.decode_steps = 0
+            self.generated_tokens = 0
+            self.reclaimed_pages = 0
+            self.alloc.min_free = self.alloc.num_free
+            self.reset_spec_stats()
+            self.reset_prefix_stats()
 
     # -- engine step --------------------------------------------------------
 
@@ -797,8 +818,10 @@ class PagedGroupEngine:
                 self.params, self.caches, self.logits, jnp.asarray(keys),
                 jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(wslot),
                 jnp.asarray(self._ptab), jnp.asarray(active))
-            # one host transfer for the step's outputs (lp is None when
-            # capture is off) — this sync sits in the per-token hot loop
+            # repro: allow(host-sync): the one per-step readback — commit/
+            # eos/admission bookkeeping is host-side today; removing it is
+            # the ROADMAP "device-resident decode loop" item
+            # (lp is None when capture is off)
             tok, lp = jax.device_get((tok, lp))
             step = self.sched.tick()
             self.decode_steps += 1
@@ -871,6 +894,9 @@ class PagedGroupEngine:
             jnp.asarray(positions), jnp.asarray(segs), jnp.asarray(wslots),
             jnp.asarray(self._ptab), jnp.asarray(keys), jnp.asarray(folds),
             jnp.asarray(fresh_m), jnp.asarray(drafts))
+        # repro: allow(host-sync): the one per-verify-block readback (the
+        # accept/commit walk is host-side) — ROADMAP device-resident
+        # decode loop
         accept, alt, lp_d, lp_a = jax.device_get((accept, alt, lp_d, lp_a))
         step = self.sched.tick()
         self.decode_steps += 1
@@ -918,11 +944,13 @@ class PagedGroupEngine:
             pass
         done = []
         for rid, h in enumerate(handles):
-            out = h.result(timeout=0)
-            n = int(np.asarray(out.response_len)[0])
+            h.result(timeout=0)       # completion check (raises if not)
+            g = h._group
+            # the committed tokens already live host-side in done_rows —
+            # no device readback needed to assemble completions
             done.append(Completed(
                 request_id=rid,
-                response_ids=np.asarray(out.response_ids)[0, :n],
-                finish_step=h._group.finish_step))
+                response_ids=g.done_rows[0],
+                finish_step=g.finish_step))
         done.sort(key=lambda c: c.finish_step)
         return done

@@ -35,6 +35,9 @@ def zero_ssm_states(params: dict, cfg: ModelConfig, batch: int) -> dict:
     """Per-layer zero continuation states {state, conv}, stacked over the
     scanned body layers (leading L axis) — the body_init trigger for
     forward_hidden(initial_ssm_states=...)."""
+    # repro: allow(support-matrix): the INVERSE of an engine-matrix row —
+    # prefix-state sharing exists only for the SSM families the paged
+    # planes exclude; the assert documents that scope
     assert cfg.family == "ssm", "prefix-state sharing targets SSM archs"
     n_body = cfg.num_layers
     one = make_ssm_cache(cfg, batch, jnp.float32)

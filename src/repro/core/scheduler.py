@@ -130,6 +130,9 @@ class PeriodicAsyncScheduler:
         adv = np.asarray(group_advantages(group.rewards))
         rl = self.rl
         if rl.shared_prompt_attention:
+            # repro: allow(support-matrix): SPA packing is a training-side
+            # attention-mask feature, not a decode engine — its SSM
+            # exclusion is not an engine-matrix row (DESIGN.md §SPA)
             if self.cfg.attention_free:
                 # SPA is an attention-MASK optimisation: packed responses
                 # would leak into each other through an SSM's recurrence.
@@ -179,6 +182,8 @@ class PeriodicAsyncScheduler:
                 step = self.grad_step
             grads, metrics = step(self.tri.policy, self.tri.old,
                                   self.tri.ref, mb)
+            # repro: allow(host-sync): trainer-side busy-time measurement
+            # barrier (paper Table 7 timing); not a decode path
             jax.block_until_ready(jax.tree.leaves(grads)[0])
             acc.add(grads, weight)
             tokens += int((np.asarray(mb.tokens) != PAD).sum())
@@ -189,6 +194,9 @@ class PeriodicAsyncScheduler:
         t0 = time.perf_counter()
         new_params, new_opt, _ = self.apply_update(
             self.tri.policy, self.tri.opt, acc.mean())
+        # repro: allow(host-sync): update must materialise before the
+        # version flip (Proposition 1 boundary); trainer-side, once per
+        # iteration
         jax.block_until_ready(jax.tree.leaves(new_params)[0])
         self.tri.apply_update(new_params, new_opt)   # line 11
         self._train_busy += time.perf_counter() - t0

@@ -58,6 +58,8 @@ def pack_plain(groups: Sequence[RolloutGroup], advantages: Sequence[np.ndarray],
         p = _np(g.prompt_ids)[:max_prompt_len]
         Lp = len(p)
         for j in range(g.response_ids.shape[0]):
+            # repro: allow(host-sync): RolloutGroup fields are host numpy
+            # arrays — same field names as the device RolloutBatch
             r = _np(g.response_ids)[j, : int(g.response_len[j])][:max_response_len]
             lr = len(r)
             toks = np.full((S,), PAD, np.int32)
@@ -131,6 +133,8 @@ def pack_spa(group: RolloutGroup, advantages: np.ndarray,
             j = row_i * K + k
             if j >= G:
                 break
+            # repro: allow(host-sync): RolloutGroup fields are host numpy
+            # arrays — same field names as the device RolloutBatch
             r = _np(group.response_ids)[j, : int(group.response_len[j])]
             r = r[:max_response_len]
             lr = len(r)

@@ -237,6 +237,9 @@ class ModelDraft:
         for j in range(k):
             tok, self.caches, logits = self._step_j(
                 self.caches, logits, jnp.asarray(off), jnp.asarray(active))
+            # repro: allow(host-sync): per-draft-token readback feeding
+            # the host-side proposal buffer — ROADMAP device-resident
+            # decode loop
             out[:, j] = np.asarray(tok)
             off += active.astype(np.int32)
         return out

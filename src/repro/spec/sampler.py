@@ -186,6 +186,8 @@ class SpecSampler:
         plens = np.asarray(lens)
         for b, p in enumerate(prompts):
             provider.start(b, np.asarray(p, np.int32)[-Lp:])
+        # repro: allow(host-sync): one-time setup transfer of per-row keys
+        # before the draft/verify loop starts
         row_keys = np.asarray(jax.random.split(key, B))
         resp = [[] for _ in range(B)]
         lps = [[] for _ in range(B)]
@@ -212,6 +214,9 @@ class SpecSampler:
                 jnp.asarray(segs), jnp.asarray(offs), logits0,
                 jnp.asarray(fresh), jnp.asarray(draft),
                 jnp.asarray(row_keys), jnp.asarray(folds))
+            # repro: allow(host-sync): the one per-verify-block readback
+            # (accept/commit walk is host-side) — ROADMAP device-resident
+            # decode loop
             accept, alt, lp_d, lp_a = jax.device_get(
                 (accept, alt, lp_d, lp_a))
             step += 1

@@ -165,7 +165,7 @@ class VersionedParamStore:
         return version
 
 
-class WeightTransferService:
+class WeightTransferService:  # repro: allow(lock-discipline): single in-flight publisher thread; _join_pending's Thread.join is the happens-before edge for every shared field
     """Streams versioned parameter buckets from the trainer to every
     instance store, with optional overlap (background streaming) and a
     boundary barrier that measures the pool's residual sync-gap."""
@@ -231,6 +231,8 @@ class WeightTransferService:
             for bucket in plan.buckets:
                 wire = pack_bucket(plan, leaves, bucket, cast_fn=cast)
                 if wire:
+                    # repro: allow(host-sync): wire barrier — a version
+                    # must not publish before its buckets land
                     jax.block_until_ready(wire[-1])
                 if self.wire_latency:
                     time.sleep(self.wire_latency)   # one broadcast per bucket

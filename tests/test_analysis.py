@@ -1,0 +1,596 @@
+"""Tests for the repro-check static-analysis pass (src/repro/analysis).
+
+Each checker gets at least one bug-injection fixture (a small module
+written to trip the rule) and one clean fixture (the idiomatic repo
+pattern that must NOT trip it). Fixture paths reuse the repo-config
+suffixes ("core/paged.py" etc.) so the module-scoped rules engage.
+"""
+import json
+
+import pytest
+
+from repro.analysis.cli import main as cli_main
+from repro.analysis.framework import Module, discover, run_checkers
+from repro.analysis.host_sync import HostSyncChecker
+from repro.analysis.lock_discipline import LockDisciplineChecker
+from repro.analysis.refcount import RefcountChecker
+from repro.analysis.registry import ALL_CHECKERS, CHECKER_NAMES
+from repro.analysis.support_matrix import SupportMatrixChecker
+from repro.analysis.trace_purity import TracePurityChecker
+
+
+def run_one(checker, *mods):
+    return checker.run([Module.from_source(p, src) for p, src in mods])
+
+
+def run_full(checker, *mods):
+    return run_checkers([Module.from_source(p, src) for p, src in mods],
+                        [checker], known_names=CHECKER_NAMES)
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+HS_BUG = """\
+import jax
+
+
+class PagedGroupEngine:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_fn)
+
+    def step(self):
+        tok = self._decode(1)
+        self.helper()
+        return float(tok)
+
+    def helper(self):
+        return jax.device_get(self.table)
+"""
+
+
+def test_host_sync_hot_implicit_cast():
+    fs = run_one(HostSyncChecker(), ("core/paged.py", HS_BUG))
+    cast = [f for f in fs if "float" in f.message]
+    assert len(cast) == 1
+    assert cast[0].severity == "error" and "[hot" in cast[0].message
+    assert cast[0].line == 11
+
+
+def test_host_sync_depth_tiering():
+    # helper is one call away from the step entry point -> warm/warning
+    fs = run_one(HostSyncChecker(), ("core/paged.py", HS_BUG))
+    dg = [f for f in fs if "device_get" in f.message]
+    assert len(dg) == 1
+    assert dg[0].severity == "warning" and "[warm" in dg[0].message
+
+
+def test_host_sync_cold_off_path():
+    src = """\
+import jax
+
+
+def teardown(x):
+    jax.block_until_ready(x)
+"""
+    fs = run_one(HostSyncChecker(), ("core/paged.py", src))
+    assert len(fs) == 1
+    assert fs[0].severity == "info" and "not on a decode path" in fs[0].message
+
+
+def test_host_sync_untaint_after_asarray():
+    src = """\
+import jax
+import numpy as np
+
+
+class PagedGroupEngine:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_fn)
+
+    def step(self):
+        tok = self._decode(1)
+        tok = np.asarray(tok)
+        a = float(tok)
+        return a
+"""
+    fs = run_one(HostSyncChecker(), ("core/paged.py", src))
+    # the asarray IS the transfer; float() afterwards is host-side
+    assert len(fs) == 1 and "np.asarray" in fs[0].message
+    assert fs[0].line == 11
+
+
+def test_host_sync_clean():
+    src = """\
+import jax
+
+
+class PagedGroupEngine:
+    def __init__(self):
+        self._decode = jax.jit(self._decode_fn)
+
+    def step(self, limit):
+        n = float(limit)
+        return self._decode(n)
+"""
+    assert run_one(HostSyncChecker(), ("core/paged.py", src)) == []
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+LOCK_BUG = """\
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        self.count += 1
+
+    def snapshot(self):
+        with self._lock:
+            return self.count
+"""
+
+
+def test_lock_discipline_unlocked_write():
+    fs = run_one(LockDisciplineChecker(), ("core/engine.py", LOCK_BUG))
+    assert len(fs) == 1
+    f = fs[0]
+    assert f.line == 10 and "Engine.count" in f.message
+    assert "without holding with self._lock" in f.message
+
+
+def test_lock_discipline_module_scoped():
+    # same class outside THREADED_MODULES: not checked
+    assert run_one(LockDisciplineChecker(), ("rl/grpo.py", LOCK_BUG)) == []
+
+
+def test_lock_discipline_thread_root_lockless_class():
+    src = """\
+import threading
+
+
+class Pump:
+    def __init__(self):
+        self.buf = []
+        self.worker = threading.Thread(target=self._drain)
+
+    def _drain(self):
+        while self.buf:
+            self.buf.pop()
+
+    def feed(self, x):
+        self.buf.append(x)
+"""
+    fs = run_one(LockDisciplineChecker(), ("core/queue.py", src))
+    funcs = {f.message.split(" in ")[1].split(" ")[0] for f in fs}
+    assert funcs == {"Pump._drain", "Pump.feed"}
+    assert all("a lock (class owns none)" in f.message for f in fs)
+
+
+def test_lock_discipline_clean():
+    src = """\
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def snapshot(self):
+        with self._lock:
+            return self.count
+"""
+    assert run_one(LockDisciplineChecker(), ("core/engine.py", src)) == []
+
+
+def test_lock_discipline_locked_suffix_inference():
+    src = """\
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self._bump_locked()
+
+    def _bump_locked(self):
+        self.count += 1
+
+    def snapshot(self):
+        with self._lock:
+            return self.count
+"""
+    assert run_one(LockDisciplineChecker(), ("core/engine.py", src)) == []
+
+
+# ---------------------------------------------------------------------------
+# refcount-pairing
+# ---------------------------------------------------------------------------
+
+RC_BUG = """\
+class PagedPool:
+    def admit(self, n):
+        pages = self.allocator.alloc(n)
+        return 0
+
+    def shed(self):
+        self.allocator.alloc(2)
+
+    def evict_row(self, g):
+        g.pages.pop()
+"""
+
+
+def test_refcount_bug_fixture():
+    fs = run_one(RefcountChecker(), ("core/paged.py", RC_BUG))
+    msgs = "\n".join(f.message for f in fs)
+    assert "never handed off" in msgs          # admit
+    assert "result discarded" in msgs          # shed
+    assert "never calls release()/free()" in msgs  # evict_row
+    assert len(fs) == 3
+
+
+def test_refcount_early_exit_leak():
+    src = """\
+class PagedPool:
+    def admit(self, n):
+        pages = self.allocator.alloc(n)
+        if n > 3:
+            return None
+        self.live.extend(pages)
+"""
+    fs = run_one(RefcountChecker(), ("core/paged.py", src))
+    assert len(fs) == 1 and "early return" in fs[0].message
+    assert fs[0].line == 5
+
+
+def test_refcount_clean():
+    src = """\
+class PagedPool:
+    def admit(self, n):
+        pages = self.allocator.alloc(n)
+        self.live.extend(pages)
+        return pages
+
+    def evict_row(self):
+        pid = self.pages.pop()
+        self.allocator.release([pid])
+"""
+    assert run_one(RefcountChecker(), ("core/paged.py", src)) == []
+
+
+def test_refcount_module_scoped():
+    assert run_one(RefcountChecker(), ("core/engine.py", RC_BUG)) == []
+
+
+# ---------------------------------------------------------------------------
+# trace-purity
+# ---------------------------------------------------------------------------
+
+TP_BUG = """\
+import time
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self._step = jax.jit(self._step_fn, static_argnames=("k",))
+        self._cache = jax.jit(self._cache_fn)
+
+    def _step_fn(self, x, k):
+        t0 = time.time()
+        if x > 0:
+            return x
+        if k > 0:
+            return x + t0
+        return -x
+
+    def _cache_fn(self, x):
+        self.last = x
+        return x
+"""
+
+
+def test_trace_purity_bug_fixture():
+    fs = run_one(TracePurityChecker(), ("core/engine.py", TP_BUG))
+    msgs = "\n".join(f.message for f in fs)
+    assert "impure call time.time()" in msgs
+    assert "attribute store on 'self'" in msgs
+    branch = [f for f in fs if "Python branch" in f.message]
+    # x is dynamic -> flagged; k is static_argnames -> exempt
+    assert len(branch) == 1 and "'x'" in branch[0].message
+    assert branch[0].severity == "warning"
+
+
+def test_trace_purity_pallas_ref_write_is_clean():
+    src = """\
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def launch(x):
+    return pl.pallas_call(kernel, out_shape=x)(x)
+"""
+    assert run_one(TracePurityChecker(), ("kernels/k.py", src)) == []
+
+
+def test_trace_purity_local_rebuild_is_clean():
+    src = """\
+import jax
+
+
+@jax.jit
+def update(state):
+    new = {}
+    new["a"] = state["a"] + 1
+    return new
+"""
+    assert run_one(TracePurityChecker(), ("models/m.py", src)) == []
+
+
+def test_trace_purity_transitive_callee():
+    src = """\
+import time
+import jax
+
+
+@jax.jit
+def outer(x):
+    return helper(x)
+
+
+def helper(x):
+    time.sleep(0)
+    return time.perf_counter() + x
+"""
+    fs = run_one(TracePurityChecker(), ("models/m.py", src))
+    assert any("time.perf_counter" in f.message
+               and "transitively traced" in f.message for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# support-matrix
+# ---------------------------------------------------------------------------
+
+SM_BASE = """\
+ROLLOUT_ENGINES = ("group", "paged")
+SPEC_PLANE = "spec"
+
+
+def engine_support(cfg, engine):
+    if engine == "group":
+        return (True, "")
+    if engine == "spec":
+        return _spec_support(cfg)
+    if cfg.hybrid:
+        return (False, "no hybrid decode")
+    return (True, "")
+
+
+def _spec_support(cfg):
+    if cfg.is_encoder_decoder:
+        return (False, "enc-dec")
+    return (True, "")
+"""
+
+SM_CLIENT_BUG = """\
+def make_paged(cfg):
+    require_engine_support(cfg, "paged")
+
+
+def make_typo(cfg):
+    require_engine_support(cfg, "pagedd")
+
+
+def make_dyn(cfg, engine):
+    require_engine_support(cfg, engine)
+
+
+def guard(cfg):
+    assert cfg.family == "ssm", "nope"
+"""
+
+
+def test_support_matrix_bug_fixture():
+    fs = run_one(SupportMatrixChecker(), ("configs/base.py", SM_BASE),
+                 ("core/make.py", SM_CLIENT_BUG))
+    msgs = "\n".join(f.message for f in fs)
+    assert "engine not declared" in msgs                   # S2 typo
+    assert "non-literal engine argument" in msgs           # S2 dynamic
+    assert "hand-rolled capability guard" in msgs          # S3
+    # S1: spec is restricted (its helper has a False path) and nothing
+    # outside configs/ enforces it; paged IS enforced, group is open.
+    s1 = [f for f in fs if "no call site outside configs/" in f.message]
+    assert len(s1) == 1 and "'spec'" in s1[0].message
+    assert s1[0].path == "configs/base.py"
+
+
+def test_support_matrix_clean():
+    client = """\
+def make_paged(cfg):
+    require_engine_support(cfg, "paged")
+
+
+def make_spec(cfg):
+    require_engine_support(cfg, "spec")
+"""
+    fs = run_one(SupportMatrixChecker(), ("configs/base.py", SM_BASE),
+                 ("core/make.py", client))
+    assert fs == []
+
+
+def test_support_matrix_guard_inside_configs_ok():
+    # capability asserts are allowed to live in configs/ (that IS the
+    # matrix); the same guard outside is the S3 finding
+    guard = """\
+def check(cfg):
+    assert not cfg.is_encoder_decoder
+"""
+    assert run_one(SupportMatrixChecker(),
+                   ("configs/validate.py", guard)) == []
+    fs = run_one(SupportMatrixChecker(), ("core/x.py", guard))
+    assert len(fs) == 1 and "hand-rolled capability guard" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# pragma grammar / suppression
+# ---------------------------------------------------------------------------
+
+def test_pragma_suppresses_with_justification():
+    src = """\
+import jax
+
+
+def flush(x):
+    # repro: allow(host-sync): teardown barrier
+    jax.block_until_ready(x)
+"""
+    fs = run_full(HostSyncChecker(), ("util/flush.py", src))
+    assert len(fs) == 1
+    assert fs[0].suppressed and fs[0].justification == "teardown barrier"
+    assert "[suppressed: teardown barrier]" in fs[0].render()
+
+
+def test_bare_allow_is_itself_a_finding():
+    src = """\
+import jax
+
+
+def flush(x):
+    # repro: allow(host-sync)
+    jax.block_until_ready(x)
+"""
+    fs = run_full(HostSyncChecker(), ("util/flush.py", src))
+    open_f = [f for f in fs if not f.suppressed]
+    assert len(open_f) == 2          # original stays open + pragma finding
+    assert any(f.checker == "pragma" and "bare allow" in f.message
+               for f in open_f)
+
+
+def test_unknown_checker_pragma():
+    src = "# repro: allow(frobnicate): because\n"
+    fs = run_full(HostSyncChecker(), ("util/x.py", src))
+    assert len(fs) == 1
+    assert fs[0].checker == "pragma" and "unknown checker" in fs[0].message
+
+
+def test_unused_pragma_is_flagged():
+    src = "# repro: allow(host-sync): nothing here\nX = 1\n"
+    fs = run_full(HostSyncChecker(), ("util/x.py", src))
+    assert len(fs) == 1
+    assert fs[0].checker == "pragma" and "unused" in fs[0].message
+    assert fs[0].severity == "warning"
+
+
+def test_def_line_pragma_covers_whole_body():
+    src = """\
+import jax
+
+
+def flush(x):  # repro: allow(host-sync): whole-function barrier helper
+    jax.block_until_ready(x)
+    y = jax.device_get(x)
+    return y
+"""
+    fs = run_full(HostSyncChecker(), ("util/flush.py", src))
+    assert len(fs) == 2 and all(f.suppressed for f in fs)
+
+
+def test_pragma_over_comment_block_reaches_code_line():
+    src = """\
+import jax
+
+
+def flush(x):
+    # repro: allow(host-sync): two-line justification that keeps
+    # going on a second comment line before the code
+    jax.block_until_ready(x)
+"""
+    fs = run_full(HostSyncChecker(), ("util/flush.py", src))
+    assert len(fs) == 1 and fs[0].suppressed
+
+
+def test_pragma_cannot_silence_pragma_findings():
+    # a justified allow(pragma) never matches anything (meta-findings are
+    # unsuppressible) -> reported as unused, not unknown
+    src = "# repro: allow(pragma): try to silence the meta layer\nX = 1\n"
+    fs = run_full(HostSyncChecker(), ("util/x.py", src))
+    assert len(fs) == 1 and "unused" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# framework / CLI
+# ---------------------------------------------------------------------------
+
+def test_syntax_error_becomes_parse_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    mods = discover([bad], tmp_path)
+    fs = run_checkers(mods, ALL_CHECKERS, known_names=CHECKER_NAMES)
+    assert any(f.checker == "parse" for f in fs)
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "paged.py").write_text(RC_BUG)
+    report = tmp_path / "report.json"
+    rc = cli_main([str(core), "--root", str(tmp_path),
+                   "--json", str(report)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "open" in out and "refcount-pairing" in out
+    data = json.loads(report.read_text())
+    assert data["tool"] == "repro-check" and data["open"] == 3
+    assert all(f["path"] == "core/paged.py" for f in data["findings"])
+
+    (core / "paged.py").write_text("X = 1\n")
+    assert cli_main([str(core), "--root", str(tmp_path)]) == 0
+
+
+def test_cli_checker_filter(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "paged.py").write_text(RC_BUG)
+    # refcount findings exist, but we only run lock-discipline
+    rc = cli_main([str(core), "--root", str(tmp_path),
+                   "--checker", "lock-discipline"])
+    assert rc == 0
+
+
+def test_registry_names_match_issue():
+    assert set(CHECKER_NAMES) >= {"host-sync", "lock-discipline",
+                                  "refcount-pairing", "trace-purity",
+                                  "support-matrix"}
+
+
+def test_repo_is_clean():
+    """The dogfood gate, as a test: repro-check over src/ has zero
+    unsuppressed findings (CI runs the CLI too; this keeps the property
+    inside the tier-1 suite)."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    src = root / "src"
+    if not src.is_dir():                      # installed-package run
+        pytest.skip("repo src/ tree not present")
+    mods = discover([src], root)
+    fs = run_checkers(mods, ALL_CHECKERS, known_names=CHECKER_NAMES)
+    open_f = [f for f in fs if not f.suppressed]
+    assert open_f == [], "\n".join(f.render() for f in open_f)

@@ -16,10 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# the container has no `hypothesis` wheel baked in — skip cleanly instead
-# of failing collection (tier-1 runs with -x)
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from conftest import require_hypothesis
+
+given, settings, st = require_hypothesis()
 
 from repro.core.queue import RolloutGroup
 from repro.core.spa import PAD, pack_plain, pack_spa, spa_reduction_ratio

@@ -213,13 +213,13 @@ def test_eviction_respects_row_references_and_protect():
 # seeded fuzz above is the tier-1 guarantee; this adds minimization)
 # =========================================================================
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
+from conftest import optional_hypothesis
+
+_h = optional_hypothesis()
+if _h is not None:
+    given, settings, st = _h
 
     @settings(max_examples=25, deadline=None)
     @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
     def test_radix_property_hypothesis(seed):
         _exercise(seed, n_ops=60)
-except ImportError:      # pragma: no cover - container has no hypothesis
-    pass

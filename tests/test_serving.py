@@ -138,6 +138,9 @@ class StubEngine:
                 return dataclasses.make_dataclass(
                     "Out", ["response_ids", "response_len"])(
                         ids, np.asarray([ids.shape[1]]))
+
+            def host_rows(_):
+                return [np.asarray(row.emitted, np.int32)]
         return _H()
 
     def step(self) -> bool:

@@ -16,10 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# same pattern as tests/test_property.py: the container has no hypothesis
-# wheel baked in — skip cleanly instead of failing collection
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from conftest import require_hypothesis
+
+given, settings, st = require_hypothesis()
 
 from repro.rl.rollout import _filter_logits
 from repro.spec.verify import verify_block
