@@ -21,7 +21,8 @@ def main() -> None:
                     help="CI smoke: the continuous-batching table (slot "
                          "engine + pool-level paged-vs-group), the "
                          "weight-plane sync-gap table, the spec-decode "
-                         "table, and the serving-latency table, skipping "
+                         "table, the serving-latency table, and the "
+                         "device-resident decode-loop table, skipping "
                          "the slow training-side tables")
     args = ap.parse_args()
     if args.smoke and args.only:
@@ -30,7 +31,7 @@ def main() -> None:
     from benchmarks import (table1_async, table2_trimodel, table3_spa,
                             table4_dp_baselines, table5_scaling,
                             table6_cbatch, table7_transfer, table8_specdec,
-                            table9_serving)
+                            table9_serving, table10_device_loop)
     tables = {
         "table1": table1_async.main,
         "table2": table2_trimodel.main,
@@ -41,13 +42,15 @@ def main() -> None:
         "table7": table7_transfer.main,  # beyond-paper: weight-plane sync-gap
         "table8": table8_specdec.main,   # beyond-paper: speculative decode
         "table9": table9_serving.main,   # beyond-paper: radix-cache serving
+        "table10": table10_device_loop.main,  # beyond-paper: fused decode
     }
     if args.smoke:
         tables = {"table6": table6_cbatch.main,
                   "table6_pool": table6_cbatch.pool_mode,
                   "table7": table7_transfer.main,
                   "table8": table8_specdec.main,
-                  "table9": table9_serving.main}
+                  "table9": table9_serving.main,
+                  "table10": table10_device_loop.main}
     print("table,name,value,derived")
     failures = 0
     for name, fn in tables.items():

@@ -42,6 +42,12 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--root", default=".",
                     help="path findings are reported relative to "
                          "(default: cwd)")
+    ap.add_argument("--forbid-hot", action="store_true",
+                    help="fail (exit 2) on any error-severity host-sync "
+                         "finding, SUPPRESSED OR NOT — the device-resident "
+                         "decode gate: a pragma can justify a warm/cold "
+                         "sync, but nothing on the hot tier "
+                         "(DESIGN.md §Device-resident-decode)")
     return ap
 
 
@@ -85,6 +91,16 @@ def main(argv: Optional[List[str]] = None) -> int:
         }
         Path(args.json).parent.mkdir(parents=True, exist_ok=True)
         Path(args.json).write_text(json.dumps(report, indent=2) + "\n")
+
+    if args.forbid_hot:
+        hot = [f for f in findings
+               if f.checker == "host-sync" and f.severity == "error"]
+        if hot:
+            print("\n--forbid-hot: %d hot-tier host-sync site(s) "
+                  "(suppression does not exempt the hot tier):" % len(hot))
+            for f in hot:
+                print("  " + f.render())
+            return 2
 
     return 1 if any(not f.suppressed for f in findings) else 0
 

@@ -108,7 +108,10 @@ def run_checkers(modules: List[Module], checkers: Iterable,
     for chk in checkers:
         findings.extend(chk.run(modules))
 
-    known = set(known_names or [c.name for c in checkers])
+    # the pragma meta-layer always runs (it IS this function), so an
+    # allow(pragma) is "unused" in every invocation
+    ran = {c.name for c in checkers} | {"pragma"}
+    known = set(known_names or ran)
     by_path = {m.path: m for m in modules}
     for f in findings:
         mod = by_path.get(f.path)
@@ -135,7 +138,10 @@ def run_checkers(modules: List[Module], checkers: Iterable,
                     "pragma", mod.path, p.line,
                     "unknown checker %r in allow() — known: %s"
                     % (p.checker, ", ".join(sorted(known)))))
-            elif not p.used:
+            elif not p.used and p.checker in ran:
+                # only a checker that actually RAN this invocation can
+                # vouch that its pragma matched nothing — a partial
+                # `--checker` run must not flag other checkers' pragmas
                 findings.append(Finding(
                     "pragma", mod.path, p.line,
                     "unused allow(%s) pragma — nothing it suppresses; "

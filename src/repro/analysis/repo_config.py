@@ -21,7 +21,7 @@ HOT_ENTRY_POINTS = [
     ("launch/serve.py", "serve_batch"),
     ("launch/serve.py", "serve_paged"),
     ("launch/serve.py", "serve_shared"),
-    ("spec/sampler.py", "run_spec"),
+    ("spec/sampler.py", "SpecSampler.generate"),
 ]
 
 # Attribute names that carry device arrays in this codebase (RolloutBatch

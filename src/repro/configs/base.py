@@ -369,6 +369,17 @@ class RLConfig:
     # tokens — no extra model) or "model" (small resident draft model)
     spec_draft: str = "prompt_lookup"
     spec_ngram: int = 3                # longest n-gram the lookup tries
+    # --- device-resident decode (DESIGN.md §Device-resident-decode) ---
+    # Steps fused per jitted decode block in the paged/cbatch engines:
+    # tokens, EOS flags and logprobs accumulate in device buffers for D
+    # steps and drain to Python once per block (double-buffered — block
+    # n+1 dispatches before block n's readback lands), so the hot loop
+    # never blocks on a per-token device_get. 1 = drain every step
+    # (legacy cadence, bitwise-identical admission/eviction timing).
+    # The paged engine is sampled-identical for every D (per-row step
+    # keys); cbatch D>1 realigns the sampled key chain (greedy identical
+    # for every D) — see core/cbatch.py.
+    decode_drain_interval: int = 1
     # --- radix prefix cache (DESIGN.md §Radix-prefix-cache) -----------
     # Share cached prompt pages across requests with any common
     # token-span prefix (paged engine only): admission walks a radix

@@ -117,13 +117,24 @@ class ContinuousBatchingSampler:
                  temperature: float = 1.0, top_p: float = 1.0,
                  eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD,
                  spec_k: int = 0, spec_draft: str = "prompt_lookup",
-                 spec_ngram: int = 3, seed: int = 0):
+                 spec_ngram: int = 3, drain_interval: int = 1, seed: int = 0):
         from repro.configs.base import require_engine_support
         require_engine_support(cfg, "cbatch")
+        if drain_interval < 1:
+            raise ValueError(f"drain_interval must be >= 1, "
+                             f"got {drain_interval}")
         self.cfg = cfg
         self.B = num_slots
         self.Lp = max_prompt_len
         self.T = max_new_tokens
+        # fused decode-block length D (DESIGN.md §Device-resident-decode):
+        # D == 1 drains synchronously (legacy cadence and, for sampled
+        # decode, the legacy key chain); D > 1 pipelines one block deep —
+        # admission then happens at block boundaries, and the carried PRNG
+        # key splits once per DEVICE step, so sampled (non-greedy) token
+        # streams are aligned differently than D == 1 (still exact draws
+        # from the policy; greedy decode is bitwise identical for every D)
+        self.drain = drain_interval
         self.spec_k = spec_k
         # speculative writes run up to k tokens past the frontier — give
         # the contiguous cache (and a windowed ring, via ring_slack) that
@@ -135,7 +146,7 @@ class ContinuousBatchingSampler:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self._prefill = jax.jit(self._prefill_row, donate_argnums=(1,))
-        self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_block, donate_argnums=(1,))
         if spec_k:
             require_engine_support(cfg, "spec")
             from functools import partial
@@ -190,24 +201,43 @@ class ContinuousBatchingSampler:
         caches = jax.tree.map(splice, caches, row)
         return caches, logits[0]
 
-    def _decode_step(self, params, caches, logits, offsets, active, key):
-        """One token for every slot. logits: (B, V); offsets: (B,);
-        active: (B,) bool. Returns (tok, caches, logits', offsets')."""
+    def _decode_block(self, params, caches, logits, offsets, done, key,
+                      valid, active):
+        """D fused decode steps for every slot (the device-resident decode
+        loop, DESIGN.md §Device-resident-decode): one ``lax.scan`` samples,
+        writes the cache, stop-checks, and accumulates a (D, B) token
+        buffer on device. ``offsets`` and the per-slot ``done`` stop flags
+        are device-carried across blocks (reset at admission); a slot is
+        live at step j when the host scheduled it (``active``,
+        ``valid[j]`` — the per-request cap) and it has not sampled EOS.
+        The PRNG key splits once per device step, replicating the legacy
+        one-step chain exactly when D == 1. Returns
+        (toks (D, B), caches, logits', offsets', done', key')."""
         cfg = self.cfg
-        B = self.B
-        key, k_s = jax.random.split(key)
-        tok = _sample_token(k_s, logits, self.temperature, self.top_p)
-        tok = jnp.where(active, tok, self.pad_id)
-        positions = jnp.where(active, offsets, 0).astype(jnp.int32)[:, None]
-        segments = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
-        h, caches, _, _ = forward_hidden(
-            params, cfg, tok[:, None], positions=positions,
-            segments=segments, caches=caches,
-            cache_offset=jnp.where(active, offsets, 0).astype(jnp.int32))
-        W = lm_head_weight(params["embed"], cfg)
-        logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
-                                 W.astype(jnp.float32))
-        return tok, caches, logits_next, offsets + active.astype(jnp.int32)
+
+        def body(carry, v_j):
+            caches, logits, offsets, done, key = carry
+            key, k = jax.random.split(key)
+            _, k_s = jax.random.split(k)
+            tok = _sample_token(k_s, logits, self.temperature, self.top_p)
+            live = active & ~done & v_j
+            tok = jnp.where(live, tok, self.pad_id)
+            done = done | (live & (tok == self.eos_id))
+            positions = jnp.where(live, offsets, 0).astype(jnp.int32)[:, None]
+            segments = jnp.where(live, 0, -1).astype(jnp.int32)[:, None]
+            h, caches, _, _ = forward_hidden(
+                params, cfg, tok[:, None], positions=positions,
+                segments=segments, caches=caches,
+                cache_offset=jnp.where(live, offsets, 0).astype(jnp.int32))
+            W = lm_head_weight(params["embed"], cfg)
+            logits = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                                W.astype(jnp.float32))
+            offsets = offsets + live.astype(jnp.int32)
+            return (caches, logits, offsets, done, key), tok
+
+        (caches, logits, offsets, done, key), toks = jax.lax.scan(
+            body, (caches, logits, offsets, done, key), valid)
+        return toks, caches, logits, offsets, done, key
 
     # -- host-side scheduler --------------------------------------------------
 
@@ -220,7 +250,7 @@ class ContinuousBatchingSampler:
         admits the next request immediately)."""
         if self.spec_k:
             return self._run_spec(params, prompts, key, max_new_per_request)
-        cfg, B = self.cfg, self.B
+        cfg, B, D = self.cfg, self.B, self.drain
         limits = (max_new_per_request if max_new_per_request is not None
                   else [self.T] * len(prompts))
         sched = SlotScheduler(B)
@@ -228,11 +258,18 @@ class ContinuousBatchingSampler:
             sched.submit((rid, p))
         caches = init_caches(params, cfg, B, self.max_ctx)
         logits = jnp.zeros((B, cfg.vocab_size), jnp.float32)
-        offsets = np.zeros((B,), np.int32)
+        # device-resident decode state (§Device-resident-decode): write
+        # offsets and per-slot stop flags live on device and are only
+        # touched host-side at admission
+        offsets = jnp.zeros((B,), jnp.int32)
+        stop = jnp.zeros((B,), bool)
+        counts = [0] * B          # host mirror: tokens SCHEDULED per slot
+        caps = [0] * B
         slot_toks: List[list] = [[] for _ in range(B)]
         done: List[Completed] = []
+        pending = None            # in-flight (plan, base_step, tok_buf)
 
-        while not sched.idle:
+        while not sched.idle or pending is not None:
             # admit pending requests into free slots
             for s, (rid, p) in sched.admit():
                 p = np.asarray(p, np.int32)[: self.Lp]
@@ -241,36 +278,82 @@ class ContinuousBatchingSampler:
                 caches, lg = self._prefill(
                     params, caches, jnp.asarray(row),
                     jnp.asarray([len(p)], jnp.int32), s)
+                # dispatched after any in-flight block: these updates land
+                # on its output state (the block saw this slot stopped)
                 logits = logits.at[s].set(lg)
-                offsets[s] = len(p)
+                offsets = offsets.at[s].set(len(p))
+                stop = stop.at[s].set(False)
+                counts[s] = 0
+                caps[s] = min(self.T, limits[rid])
                 slot_toks[s] = []
-            # one decode step for every slot — the scheduler's slot
-            # occupancy IS the decode mask
+            # one fused D-step block for every slot — the scheduler's slot
+            # occupancy IS the decode mask; the per-request cap becomes the
+            # host-precomputed valid mask
+            nxt = None
+            plan = []
+            valid = np.zeros((D, B), bool)
             active = np.zeros((B,), bool)
-            active[sched.active_slots()] = True
-            key, k = jax.random.split(key)
-            tok, caches, logits, off_new = self._decode(
-                params, caches, logits, jnp.asarray(offsets),
-                jnp.asarray(active), k)
-            # repro: allow(host-sync): the one per-step readback (commit/
-            # eos bookkeeping is host-side) — ROADMAP device-resident
-            # decode loop
-            tok = np.asarray(tok)
-            # repro: allow(host-sync): same per-step readback (writable
-            # slot-offset copy) — ROADMAP device-resident decode loop
-            offsets = np.array(off_new)  # writable copy
-            step = sched.tick()
-            for s in list(sched.active_slots()):
-                rid = sched.slot_req[s][0]
-                slot_toks[s].append(int(tok[s]))
-                if (tok[s] == self.eos_id
+            for s in sched.active_slots():
+                n_row = min(D, caps[s] - counts[s])
+                if n_row <= 0:    # fully scheduled; awaiting drain
+                    continue
+                valid[:n_row, s] = True
+                active[s] = True
+                plan.append((s, sched.slot_req[s], n_row))
+                counts[s] += n_row
+            if plan:
+                base = sched.step
+                sched.step += D
+                toks, caches, logits, offsets, stop, key = self._decode(
+                    params, caches, logits, offsets, stop, key,
+                    jnp.asarray(valid), jnp.asarray(active))
+                if hasattr(toks, "copy_to_host_async"):
+                    toks.copy_to_host_async()   # overlap with next block
+                nxt = (plan, base, toks)
+            if D == 1:
+                prev = nxt
+            else:
+                prev, pending = pending, nxt
+            if prev is not None:
+                self._drain_run(prev, sched, slot_toks, limits, done)
+        return done
+
+    def _drain_run(self, blk, sched, slot_toks, limits, done) -> None:
+        """Commit one drained block into host bookkeeping — the only
+        device->host touch of the run loop, once per D-step block (the
+        transfer was started asynchronously at dispatch)."""
+        plan, base, tok_buf = blk
+        # repro: allow(host-sync): one buffered readback per drained
+        # D-step block, not per token — DESIGN.md §Device-resident-decode
+        toks = jax.device_get(tok_buf)
+        for s, req, n_row in plan:
+            if sched.slot_req[s] is not req:
+                # request finished in an earlier block; these optimistic
+                # steps ran device-masked (stop flag)
+                continue
+            rid = req[0]
+            for j in range(n_row):
+                tv = int(toks[j, s])
+                slot_toks[s].append(tv)
+                if (tv == self.eos_id
                         or len(slot_toks[s]) >= min(self.T, limits[rid])):
                     done.append(Completed(
                         request_id=rid,
                         response_ids=np.asarray(slot_toks[s], np.int32),
-                        finish_step=step))
+                        finish_step=base + j + 1))
                     sched.evict(s)
-        return done
+                    break
+
+    def _drain_verify(self, ctoks, clps, count):
+        """Drain one fused verify block's commit buffers (the spec-plane
+        drain: the accept/commit walk already ran on device —
+        ``spec/verify.py commit_block``)."""
+        for buf in (ctoks, clps, count):
+            if hasattr(buf, "copy_to_host_async"):
+                buf.copy_to_host_async()
+        # repro: allow(host-sync): one buffered readback per verify block
+        # (device-side commit walk) — DESIGN.md §Device-resident-decode
+        return jax.device_get((ctoks, clps, count))
 
     def _run_spec(self, params, prompts: List[np.ndarray], key,
                   max_new_per_request: Optional[List[int]] = None
@@ -284,8 +367,7 @@ class ContinuousBatchingSampler:
         entries carry positions past the frontier (masked) until the next
         block overwrites them."""
         from repro.models.attention import INVALID_POS
-        from repro.spec.sampler import pack_row_block, truncate_commit
-        from repro.spec.verify import assemble_commit
+        from repro.spec.sampler import pack_row_block
         self.reset_spec_stats()
         cfg, B, k = self.cfg, self.B, self.spec_k
         limits = (max_new_per_request if max_new_per_request is not None
@@ -334,35 +416,43 @@ class ContinuousBatchingSampler:
                 # right-padded slots: cache slot index == position
                 offs[s] = plen[s] + t + delta
             folds = np.full((B,), sched.step, np.int32)
-            accept, alt, lp_d, lp_a, caches = self._vstep(
+            ctoks, clps, count, caches = self._vstep(
                 params, caches, jnp.asarray(tokens), jnp.asarray(positions),
                 jnp.asarray(segs), jnp.asarray(offs), logits,
                 jnp.asarray(fresh), jnp.asarray(draft),
                 jnp.asarray(slot_keys), jnp.asarray(folds))
-            # repro: allow(host-sync): the one per-verify-block readback
-            # (accept/commit walk is host-side) — ROADMAP device-resident
-            # decode loop
-            accept, alt, lp_d, lp_a = jax.device_get(
-                (accept, alt, lp_d, lp_a))
-            step = sched.tick()
-            for s in list(act):
-                rid = sched.slot_req[s][0]
-                ct, cl = assemble_commit(accept[s], alt[s], draft[s],
-                                         lp_d[s], lp_a[s])
-                self.spec_steps += 1
-                self.drafted_tokens += k
-                self.accepted_tokens += len(ct) - 1
-                cap = min(self.T, limits[rid])
-                ct, _, row_done = truncate_commit(
-                    ct, cl, cap - len(slot_toks[s]), self.eos_id)
-                slot_toks[s].extend(ct)
-                self._draft.commit(s, ct)
-                fresh[s] = False
-                if row_done:
-                    done.append(Completed(
-                        request_id=rid,
-                        response_ids=np.asarray(slot_toks[s], np.int32),
-                        finish_step=step))
-                    sched.evict(s)
-                    self._draft.stop(s)
+            self._commit_spec_rows(act, ctoks, clps, count, sched,
+                                   slot_toks, limits, fresh, done)
         return done
+
+    def _commit_spec_rows(self, act, ctoks, clps, count, sched, slot_toks,
+                          limits, fresh, done) -> None:
+        """Drain one verify block and commit its rows -- the host half
+        of the spec step, one frame below the run loop so the hot tier
+        itself stays sync-free (DESIGN.md §Device-resident-decode). After
+        the buffered drain the walk touches only host numpy."""
+        from repro.spec.sampler import truncate_commit
+        k = self.spec_k
+        ctoks, clps, count = self._drain_verify(ctoks, clps, count)
+        step = sched.tick()
+        for s in list(act):
+            rid = sched.slot_req[s][0]
+            n = int(count[s])
+            ct = [int(t) for t in ctoks[s, :n]]
+            cl = [float(x) for x in clps[s, :n]]
+            self.spec_steps += 1
+            self.drafted_tokens += k
+            self.accepted_tokens += n - 1
+            cap = min(self.T, limits[rid])
+            ct, _, row_done = truncate_commit(
+                ct, cl, cap - len(slot_toks[s]), self.eos_id)
+            slot_toks[s].extend(ct)
+            self._draft.commit(s, ct)
+            fresh[s] = False
+            if row_done:
+                done.append(Completed(
+                    request_id=rid,
+                    response_ids=np.asarray(slot_toks[s], np.int32),
+                    finish_step=step))
+                sched.evict(s)
+                self._draft.stop(s)

@@ -65,6 +65,12 @@ class InferenceInstance:
             defer_flip=paged_engine is not None)
         self._lock = threading.Lock()  # one request in flight per instance
         self.busy_time = 0.0
+        # deferred busy clock (DESIGN.md §Device-resident-decode): the
+        # generation call dispatches asynchronously, and a settle thread
+        # charges the exact dispatch->ready interval later, so the hot
+        # path never fences the dispatch stream on a device barrier
+        self._busy_lock = threading.Lock()
+        self._settles: List[threading.Thread] = []
 
     def sync_weights(self, params, version: int) -> None:
         """Eager whole-tree publish (legacy path; the RL scheduler streams
@@ -101,14 +107,46 @@ class InferenceInstance:
                 out = self.scripted_fn(prompts, key)
                 if self.latency_fn is not None:
                     time.sleep(self.latency_fn(out))
+                with self._busy_lock:
+                    self.busy_time += time.perf_counter() - t0
             else:
                 assert self.sampler is not None and params is not None
                 out = self.sampler.generate(params, prompts, key)
-                # repro: allow(host-sync): busy-clock barrier — the pool's
-                # utilisation accounting must not credit in-flight work
-                jax.block_until_ready(out.response_ids)
-            self.busy_time += time.perf_counter() - t0
+                # busy-clock charge is DEFERRED: the settle thread blocks
+                # on the arrays so this hot path doesn't serialize the
+                # dispatch stream; the boundary read (pool.busy_time)
+                # flushes pending settles first
+                self._defer_busy(t0, out.response_ids)
             return out, version
+
+    def _defer_busy(self, t0: float, arrays) -> None:
+        """Charge the busy clock off the dispatch path: a daemon settle
+        thread waits for ``arrays`` and adds the exact dispatch->ready
+        interval under the busy lock. ``flush_busy`` joins stragglers at
+        the iteration boundary, where the queue is already drained so the
+        joins return immediately."""
+        def settle():
+            # repro: allow(host-sync): busy-clock barrier DELIBERATELY
+            # moved off the dispatch path into this settle thread — the
+            # hot path no longer blocks (§Device-resident-decode)
+            jax.block_until_ready(arrays)
+            with self._busy_lock:
+                self.busy_time += time.perf_counter() - t0
+        th = threading.Thread(target=settle, daemon=True,
+                              name=f"busy-settle-{self.inst_id}")
+        with self._busy_lock:
+            self._settles.append(th)
+        th.start()
+
+    def flush_busy(self) -> None:
+        """Join pending busy-clock settles (boundary accounting barrier —
+        NOT on the per-request path)."""
+        while True:
+            with self._busy_lock:
+                if not self._settles:
+                    return
+                th = self._settles.pop()
+            th.join()
 
     def _generate_group_paged(self, prompts: List[np.ndarray], key,
                               min_version: Optional[int] = None) -> tuple:
@@ -174,12 +212,17 @@ class InferencePool:
 
     def reset_stats(self) -> None:
         for inst in self.instances:
-            inst.busy_time = 0.0
+            inst.flush_busy()    # a late settle must not leak into the
+            inst.busy_time = 0.0  # next accounting window
             if inst.paged_engine is not None:
                 inst.paged_engine.reset_stats()
 
     @property
     def busy_time(self) -> float:
         """Aggregate producer busy-time across instances (the quantity
-        ``IterationStats.infer_time`` reports)."""
+        ``IterationStats.infer_time`` reports). Flushes the deferred busy
+        clocks first — this is the boundary read, after the queue drain,
+        so pending settles resolve immediately."""
+        for inst in self.instances:
+            inst.flush_busy()
         return sum(inst.busy_time for inst in self.instances)

@@ -165,6 +165,23 @@ class _Row:
     # its prefill logits in hand; a steady row's last committed token is
     # unfed and rides into the next verify block
     fresh: bool = True
+    # scheduled frontier: device steps DISPATCHED for this row (>= the
+    # committed len(toks) while a block is in flight) — the host-side
+    # cursor of the device-resident decode loop
+    sched_t: int = 0
+
+
+@dataclasses.dataclass
+class _Block:
+    """One in-flight fused decode block (DESIGN.md
+    §Device-resident-decode): the device accumulates its (D, B) token /
+    logprob buffers while the host keeps only this plan of what was
+    scheduled; ``_drain_block`` turns the buffers into commits once the
+    async transfer lands."""
+    plan: list                       # [(slot, row, t0, n_row), ...]
+    base: int                        # engine step counter at dispatch
+    toks: jax.Array                  # (D, B) int32 sampled tokens
+    lps: Optional[jax.Array]         # (D, B) f32 raw logprobs (capture)
 
 
 class GroupHandle:
@@ -209,10 +226,14 @@ class PagedGroupEngine:
                  eos_id: int = Tokenizer.EOS, pad_id: int = Tokenizer.PAD,
                  capture_logprobs: bool = True, spec_k: int = 0,
                  spec_draft: str = "prompt_lookup", spec_ngram: int = 3,
-                 prefix_cache: bool = False, seed: int = 0):
+                 prefix_cache: bool = False, drain_interval: int = 1,
+                 seed: int = 0):
         if num_slots < 1 or page_size < 1:
             raise ValueError(f"paged engine needs num_slots >= 1 and "
                              f"page_size >= 1, got {num_slots}/{page_size}")
+        if drain_interval < 1:
+            raise ValueError(f"drain_interval must be >= 1, "
+                             f"got {drain_interval}")
         # fail at construction, not first weight sync (same matrix
         # init_paged_caches enforces — configs/base.py engine_support)
         require_engine_support(cfg, "paged")
@@ -228,6 +249,13 @@ class PagedGroupEngine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.capture_logprobs = capture_logprobs
+        # fused decode-block length D (DESIGN.md §Device-resident-decode):
+        # one jitted lax.scan advances every slot D tokens and the host
+        # drains the (D, B) buffers once per block. D == 1 drains every
+        # block synchronously (legacy admission/eviction cadence); D > 1
+        # pipelines one block deep — block n+1 is dispatched before block
+        # n's transfer is read, so the host never sits on a device fence
+        self.drain = drain_interval
         self.spec_k = spec_k
         if spec_k:
             require_engine_support(cfg, "spec")
@@ -271,9 +299,11 @@ class PagedGroupEngine:
         self.generated_tokens = 0
         self.reclaimed_pages = 0
 
+        self._pending: Optional[_Block] = None   # in-flight fused block
+        self._done = None            # (B,) bool device-resident stop flags
         self._prefill = jax.jit(self._prefill_group, donate_argnums=(1,))
         self._prefill_sfx = jax.jit(self._prefill_suffix, donate_argnums=(1,))
-        self._decode = jax.jit(self._decode_step, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_block, donate_argnums=(1,))
         self._invalidate = jax.jit(self._invalidate_pages, donate_argnums=(0,))
         self._verify = jax.jit(self._verify_step, donate_argnums=(1,))
         self.reset_spec_stats()
@@ -321,13 +351,16 @@ class PagedGroupEngine:
         Spec decode writes up to k tokens past the frontier before the
         window slides, so speculative pages widen the windowed budget by
         ceil(k/page) + 1 (never past the total — positions >= max_new are
-        clamped to the trash page)."""
+        clamped to the trash page). A fused decode block (D > 1) writes
+        up to D-1 tokens past the position reclamation last ran at, so
+        the lookahead widens the windowed budget the same way."""
         n = self._n_total(max_new)
         if self.window is None:
             return n
         spec = ((self.spec_k + self.page - 1) // self.page + 1
                 if self.spec_k else 0)
-        return min(n, self.window // self.page + 3 + spec)
+        look = ((self.drain - 1) // self.page + 1 if self.drain > 1 else 0)
+        return min(n, self.window // self.page + 3 + spec + look)
 
     def _suffix_bucket(self, n_sfx_pages: int) -> int:
         """Pad a radix-miss suffix to a power-of-two page count so the
@@ -412,29 +445,56 @@ class PagedGroupEngine:
                             W.astype(jnp.float32))[0]
         return caches, logits
 
-    def _decode_step(self, params, caches, logits, keys, rows, positions,
-                     wslot, ptab, active):
-        """One token for every slot: sample from the slot's current logits
-        with its row's own step key, then advance through the paged cache.
-        Inactive slots feed PAD at pos 2^30 and write into the trash page.
-        With capture enabled, also returns log p(emitted id) under the raw
-        distribution — the rollout-time behavior logprob (DESIGN.md
-        §Tri-model-capture); disabled engines skip both the log-softmax
-        and the extra device->host transfer."""
+    def _decode_block(self, params, caches, logits, done, keys, wslots,
+                      valid, rows, pos0, active, ptab):
+        """D fused decode steps for every slot (the device-resident decode
+        loop, DESIGN.md §Device-resident-decode): one ``lax.scan`` samples,
+        commits to the paged cache, stop-checks, and accumulates the (D, B)
+        token/logprob buffers entirely on device — the host sees nothing
+        until it drains the buffers.
+
+        Per step j, a slot is LIVE when the host scheduled it (``active``,
+        ``valid[j]``) and its device-resident ``done`` flag is clear; a row
+        that samples EOS mid-block sets ``done`` and its remaining steps
+        degrade to the inactive-slot convention (PAD at pos 2^30 into the
+        trash page), so optimistically dispatched steps past a stop are
+        harmless. ``done`` persists across blocks (reset at admission),
+        which is what makes pipelined dispatch of block n+1 before block
+        n's drain exact. With capture enabled the buffers also carry
+        log p(emitted id) under the raw distribution — the rollout-time
+        behavior logprob (§Tri-model-capture); disabled engines skip the
+        log-softmax."""
         cfg = self.cfg
-        tok = _sample_token_rows(keys, logits, rows, self.G,
-                                 self.temperature, self.top_p)
-        tok = jnp.where(active, tok, self.pad_id)
-        lp = (jnp.where(active, sampled_token_logprob(logits, tok), 0.0)
-              if self.capture_logprobs else None)
-        seg = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
-        h, caches, _, _ = forward_hidden(
-            params, cfg, tok[:, None], positions=positions[:, None],
-            segments=seg, caches=caches, cache_offset=wslot, page_table=ptab)
         W = lm_head_weight(params["embed"], cfg)
-        logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
-                                 W.astype(jnp.float32))
-        return tok, lp, caches, logits_next
+
+        def body(carry, xs):
+            caches, logits, done = carry
+            k_j, w_j, v_j, j = xs
+            tok = _sample_token_rows(k_j, logits, rows, self.G,
+                                     self.temperature, self.top_p)
+            live = active & ~done & v_j
+            tok = jnp.where(live, tok, self.pad_id)
+            lp = (jnp.where(live, sampled_token_logprob(logits, tok), 0.0)
+                  if self.capture_logprobs
+                  else jnp.zeros((self.B,), jnp.float32))
+            done = done | (live & (tok == self.eos_id))
+            pos = jnp.where(live, pos0 + j, INVALID_POS).astype(jnp.int32)
+            wsl = jnp.where(live, w_j, TRASH_PAGE * self.page).astype(
+                jnp.int32)
+            seg = jnp.where(live, 0, -1).astype(jnp.int32)[:, None]
+            h, caches, _, _ = forward_hidden(
+                params, cfg, tok[:, None], positions=pos[:, None],
+                segments=seg, caches=caches, cache_offset=wsl,
+                page_table=ptab)
+            logits = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                                W.astype(jnp.float32))
+            return (caches, logits, done), (tok, lp)
+
+        D = keys.shape[0]
+        (caches, logits, done), (toks, lps) = jax.lax.scan(
+            body, (caches, logits, done),
+            (keys, wslots, valid, jnp.arange(D, dtype=jnp.int32)))
+        return toks, lps, caches, logits, done
 
     def _verify_step(self, params, caches, logits, tokens, positions, segs,
                      wslots, ptab, keys, folds, fresh, draft):
@@ -443,9 +503,11 @@ class PagedGroupEngine:
         k drafts + a masked pad slot for fresh rows) writes into its
         speculative pages and attends through the pool; ``fresh`` rows use
         their prefill logits as p_0. Masked slots point at the trash page
-        with pos 2^30. Returns the verify verdicts + raw capture logprobs
-        (host assembles commits — variable tokens per row)."""
-        from repro.spec.verify import verify_block
+        with pos 2^30. The accept/commit walk runs ON DEVICE
+        (``commit_block``), so the step returns one right-padded
+        (B, k+1) commit buffer + per-row counts instead of verdicts the
+        host would have to walk (§Device-resident-decode)."""
+        from repro.spec.verify import commit_block, verify_block
         cfg = self.cfg
         h, caches, _, _ = forward_hidden(
             params, cfg, tokens, positions=positions, segments=segs,
@@ -457,10 +519,11 @@ class PagedGroupEngine:
                       jnp.concatenate([logits[:, None], out[:, :-1]],
                                       axis=1),
                       out)
-        return verify_block(p, draft, keys, folds,
-                            temperature=self.temperature,
-                            top_p=self.top_p,
-                            capture=self.capture_logprobs) + (caches,)
+        accept, alt, lp_d, lp_a = verify_block(
+            p, draft, keys, folds, temperature=self.temperature,
+            top_p=self.top_p, capture=self.capture_logprobs)
+        toks, lps, count = commit_block(accept, alt, draft, lp_d, lp_a)
+        return toks, lps, count, caches
 
     def _invalidate_pages(self, caches, pages):
         """Mark freshly allocated response pages invalid — they may hold a
@@ -488,6 +551,7 @@ class PagedGroupEngine:
                                                 self.page)
                 self.logits = jnp.zeros((self.B, self.cfg.vocab_size),
                                         jnp.float32)
+                self._done = jnp.zeros((self.B,), bool)
 
     def submit(self, prompt, key, *, max_new: Optional[int] = None,
                on_token=None) -> GroupHandle:
@@ -661,10 +725,16 @@ class PagedGroupEngine:
         tab = np.zeros((self.n_max,), np.int32)        # NULL padding
         tab[: len(g.prompt_pages)] = g.prompt_pages
         self._ptab[slot] = tab
+        # both updates are dispatched AFTER any in-flight fused block, so
+        # they land on its OUTPUT state: the pending block saw this slot
+        # masked (its previous row's done flag), the next block samples
+        # from the prompt logits with a cleared stop flag
         self.logits = self.logits.at[slot].set(g.prompt_logits)
+        self._done = self._done.at[slot].set(False)
         row.toks = []
         row.lps = []
         row.fresh = True
+        row.sched_t = 0
         if self.spec_k:
             self._draft.start(slot, g.prompt)
 
@@ -768,9 +838,21 @@ class PagedGroupEngine:
             h._event.set()
 
     def step(self) -> bool:
-        """One admission pass + one decode step for every slot (spec
-        engines verify a k+1-token block instead — §Spec-decode). Returns
-        False (and does nothing) when the engine is idle."""
+        """One admission pass + one fused D-step decode block for every
+        slot (spec engines verify a k+1-token block instead —
+        §Spec-decode). Returns False (and does nothing) when the engine is
+        idle and no block is in flight.
+
+        ``drain_interval == 1`` dispatches and drains synchronously — the
+        legacy admission/eviction cadence, one drain per token step.
+        ``drain_interval > 1`` runs the one-deep pipeline: block n+1 is
+        built and dispatched BEFORE block n's buffers are read, so block
+        n's device->host transfer (started asynchronously at dispatch)
+        overlaps block n+1's host-side build and device compute. The
+        optimistic dispatch assumes no row stopped inside the in-flight
+        block; the device-resident ``done`` flags make that exact (a
+        stopped row's extra steps are masked to the trash page), and the
+        drain simply skips plan entries whose slot was re-assigned."""
         with self._mutex:
             # admit one row at a time: _admit_row consumes pages, and the
             # gate must see the freelist as it actually is for the NEXT row
@@ -780,73 +862,132 @@ class PagedGroupEngine:
                     break
                 self._admit_row(*admitted[0])
             act = self.sched.active_slots()
-            if not act:
-                return False
             if self.spec_k:
-                return self._spec_step(act)
-            B = self.B
-            keys = np.zeros((B, 2), np.uint32)
-            rows = np.zeros((B,), np.int32)
-            pos = np.full((B,), INVALID_POS, np.int32)
-            wslot = np.full((B,), TRASH_PAGE * self.page, np.int32)
-            active = np.zeros((B,), bool)
-            fresh = np.full((B,), TRASH_PAGE, np.int32)   # pages to wipe
-            n_fresh = 0
-            for s in act:
-                row = self.sched.slot_req[s]
-                t = len(row.toks)
-                q_pos = len(row.group.prompt) + t
-                if self.window is not None:
-                    self._reclaim_row(s, row, q_pos)
-                k = t // self.page
+                return self._spec_step(act) if act else False
+            nxt = self._dispatch_block(act) if act else None
+            if self.drain == 1:
+                if nxt is not None:
+                    self._drain_block(nxt)
+                return nxt is not None
+            prev, self._pending = self._pending, nxt
+            if prev is not None:
+                self._drain_block(prev)
+            return nxt is not None or prev is not None
+
+    def _dispatch_block(self, act: List[int]) -> Optional[_Block]:
+        """Build one fused decode block for the active slots and dispatch
+        it: per slot, schedule up to D steps from its frontier
+        (``row.sched_t`` — NOT the committed length, which lags while a
+        block is in flight), allocating the response pages those steps
+        write and reclaiming out-of-window pages at the block's first
+        query position. All page bookkeeping stays host-side; the device
+        receives the per-step keys/write-slots/valid masks as (D, B)
+        arrays and runs free."""
+        B, D, page = self.B, self.drain, self.page
+        keys = np.zeros((D, B, 2), np.uint32)
+        wsl = np.full((D, B), TRASH_PAGE * page, np.int32)
+        valid = np.zeros((D, B), bool)
+        rows = np.zeros((B,), np.int32)
+        pos0 = np.full((B,), INVALID_POS, np.int32)
+        active = np.zeros((B,), bool)
+        # fixed worst-case shape: each slot crosses at most D//page + 1
+        # page boundaries per block (trash-padding keeps the jit cache at
+        # one trace)
+        fresh = np.full((B * (D // page + 2),), TRASH_PAGE, np.int32)
+        n_fresh = 0
+        plan = []
+        for s in act:
+            row = self.sched.slot_req[s]
+            g = row.group
+            t0 = row.sched_t
+            if t0 >= g.max_new:      # fully scheduled; awaiting drain
+                continue
+            q0 = len(g.prompt) + t0
+            if self.window is not None:
+                self._reclaim_row(s, row, q0)
+            n_row = min(D, g.max_new - t0)
+            for t in range(t0, t0 + n_row):
+                k = t // page
                 if k == len(row.pages):       # crossed a page boundary
                     fresh[n_fresh] = self._alloc_resp_page(s, row, k)
                     n_fresh += 1
-                keys[s] = row.group.keys[t]
-                rows[s] = row.idx
-                pos[s] = q_pos
-                wslot[s] = row.pages[k] * self.page + t % self.page
-                active[s] = True
-            if n_fresh:
-                # one fixed-shape (B,) invalidation for every page freshly
-                # allocated this step (trash-page padding keeps the jit
-                # cache warm) — stale (pos, kv) from a previous occupant
-                # would otherwise pass the causal mask
-                self.caches = self._invalidate(self.caches,
-                                               jnp.asarray(fresh))
-            tok, lp, self.caches, self.logits = self._decode(
-                self.params, self.caches, self.logits, jnp.asarray(keys),
-                jnp.asarray(rows), jnp.asarray(pos), jnp.asarray(wslot),
-                jnp.asarray(self._ptab), jnp.asarray(active))
-            # repro: allow(host-sync): the one per-step readback — commit/
-            # eos/admission bookkeeping is host-side today; removing it is
-            # the ROADMAP "device-resident decode loop" item
-            # (lp is None when capture is off)
-            tok, lp = jax.device_get((tok, lp))
-            step = self.sched.tick()
-            self.decode_steps += 1
-            self.generated_tokens += len(act)
-            for s in act:
-                row = self.sched.slot_req[s]
-                row.toks.append(int(tok[s]))
+                keys[t - t0, s] = g.keys[t]
+                wsl[t - t0, s] = row.pages[k] * page + t % page
+                valid[t - t0, s] = True
+            rows[s] = row.idx
+            pos0[s] = q0
+            active[s] = True
+            row.sched_t = t0 + n_row
+            plan.append((s, row, t0, n_row))
+        if not plan:
+            return None
+        if n_fresh:
+            # one fixed-shape invalidation for every page freshly
+            # allocated this block — stale (pos, kv) from a previous
+            # occupant would otherwise pass the causal mask
+            self.caches = self._invalidate(self.caches, jnp.asarray(fresh))
+        base = self.sched.step
+        self.sched.step += D
+        toks, lps, self.caches, self.logits, self._done = self._decode(
+            self.params, self.caches, self.logits, self._done,
+            jnp.asarray(keys), jnp.asarray(wsl), jnp.asarray(valid),
+            jnp.asarray(rows), jnp.asarray(pos0), jnp.asarray(active),
+            jnp.asarray(self._ptab))
+        self.decode_steps += D
+        # start the device->host transfer NOW so it overlaps the next
+        # block's build + compute; the drain then finds it landed
+        for buf in (toks, lps):
+            if hasattr(buf, "copy_to_host_async"):
+                buf.copy_to_host_async()
+        return _Block(plan=plan, base=base, toks=toks, lps=lps)
+
+    def _drain_block(self, blk: _Block) -> None:
+        """Commit one drained block into host bookkeeping — the ONLY
+        device->host touch of the non-spec decode path, once per D steps
+        (or per row completion) instead of per token."""
+        # repro: allow(host-sync): one buffered readback per drained
+        # D-step block (transfer started async at dispatch), not per
+        # token — DESIGN.md §Device-resident-decode drain protocol
+        toks, lps = jax.device_get((blk.toks, blk.lps))
+        for s, row, t0, n_row in blk.plan:
+            if self.sched.slot_req[s] is not row:
+                # row finished inside an EARLIER block; these optimistic
+                # steps ran device-masked (done flag) and wrote nothing
+                continue
+            g = row.group
+            assert len(row.toks) == t0, "drain out of order"
+            for j in range(n_row):
+                tv = int(toks[j, s])
+                row.toks.append(tv)
                 if self.capture_logprobs:
-                    row.lps.append(float(lp[s]))
-                if row.group.on_token is not None:
-                    row.group.on_token(row.idx, int(tok[s]))
-                if (tok[s] == self.eos_id
-                        or len(row.toks) >= row.group.max_new):
-                    self._finish_row(s, row, step)
-            return True
+                    row.lps.append(float(lps[j, s]))
+                self.generated_tokens += 1
+                if g.on_token is not None:
+                    g.on_token(row.idx, tv)
+                if tv == self.eos_id or len(row.toks) >= g.max_new:
+                    self._finish_row(s, row, blk.base + j + 1)
+                    break
+
+    def _drain_verify(self, ctoks, clps, count):
+        """Drain one fused verify block's commit buffers (the spec plane's
+        analogue of ``_drain_block``): the accept/commit walk already ran
+        on device (``spec/verify.py commit_block``), so the host reads one
+        right-padded buffer per block."""
+        for buf in (ctoks, clps, count):
+            if hasattr(buf, "copy_to_host_async"):
+                buf.copy_to_host_async()
+        # repro: allow(host-sync): one buffered readback per verify block
+        # (device-side commit walk) — DESIGN.md §Device-resident-decode
+        return jax.device_get((ctoks, clps, count))
 
     def _spec_step(self, act: List[int]) -> bool:
         """One spec-decode engine step (DESIGN.md §Spec-decode), called
         under the mutex with ``act`` the live slots: draft k tokens per
         row, pre-allocate the block's speculative pages against the row
-        credits, run ONE k+1-token verify forward, commit 1..k+1 tokens
-        per row on the host, and roll rejected speculative pages back to
-        the freelist."""
-        from repro.spec.sampler import truncate_commit
-        from repro.spec.verify import assemble_commit
+        credits, run ONE k+1-token verify forward whose device-side commit
+        walk yields 1..k+1 committed tokens per row, drain the commit
+        buffers, and roll rejected speculative pages back to the
+        freelist."""
         B, k, page = self.B, self.spec_k, self.page
         drafts = self._draft.propose(act, k)
         tokens = np.full((B, k + 1), self.pad_id, np.int32)
@@ -889,26 +1030,34 @@ class PagedGroupEngine:
         if n_fresh:
             self.caches = self._invalidate(self.caches,
                                            jnp.asarray(fresh_pages))
-        accept, alt, lp_d, lp_a, self.caches = self._verify(
+        ctoks, clps, count, self.caches = self._verify(
             self.params, self.caches, self.logits, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(segs), jnp.asarray(wslots),
             jnp.asarray(self._ptab), jnp.asarray(keys), jnp.asarray(folds),
             jnp.asarray(fresh_m), jnp.asarray(drafts))
-        # repro: allow(host-sync): the one per-verify-block readback (the
-        # accept/commit walk is host-side) — ROADMAP device-resident
-        # decode loop
-        accept, alt, lp_d, lp_a = jax.device_get((accept, alt, lp_d, lp_a))
+        self._commit_spec_rows(act, ctoks, clps, count)
+        return True
+
+    def _commit_spec_rows(self, act, ctoks, clps, count) -> None:
+        """Drain one verify block and commit its rows -- the host half
+        of the spec step, one frame below the hot entry point so the hot
+        tier itself stays sync-free (DESIGN.md §Device-resident-decode).
+        After the buffered drain the walk touches only host numpy."""
+        from repro.spec.sampler import truncate_commit
+        k = self.spec_k
+        ctoks, clps, count = self._drain_verify(ctoks, clps, count)
         step = self.sched.tick()
         self.decode_steps += 1
         for s in act:
             row = self.sched.slot_req[s]
             g = row.group
             rc = len(row.toks)
-            ct, cl = assemble_commit(accept[s], alt[s], drafts[s],
-                                     lp_d[s], lp_a[s])
+            n = int(count[s])
+            ct = [int(t) for t in ctoks[s, :n]]
+            cl = [float(x) for x in clps[s, :n]]
             self.spec_steps += 1
             self.drafted_tokens += k
-            self.accepted_tokens += max(len(ct) - 1, 0)
+            self.accepted_tokens += n - 1
             ct, cl, row_done = truncate_commit(ct, cl, g.max_new - rc,
                                                self.eos_id)
             row.toks.extend(ct)
@@ -927,7 +1076,6 @@ class PagedGroupEngine:
                 # speculative pages past the committed-and-fed frontier
                 # hold only rejected drafts — roll them back
                 self._rollback_row(s, row, len(row.toks) - 2)
-        return True
 
     # -- standalone serving -------------------------------------------------
 

@@ -158,6 +158,57 @@ def verify_attention(q, k, v, kv_pos, q_pos, *,
     return out.reshape(B, S, H, Dv)
 
 
+def decode_partial_stats(q, k, v, q_pos, kv_pos, q_seg, kv_seg, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None):
+    """Single-pass decode attention PARTIAL stats over one KV shard — the
+    per-device half of the shard_map'd dense-GQA decode step
+    (models/attention.py ``_shmap_gqa_decode``, DESIGN.md
+    §Device-resident-decode). Scores are normalised against the LOCAL max
+    only; ``combine_partial_stats`` merges shards exactly (the flash
+    online-softmax identity, applied once across devices instead of
+    across chunks).
+
+    q: (B, Sq, H, D); k/v: (B, L_loc, Hkv, Dv); q_pos/q_seg: (B, Sq);
+    kv_pos/kv_seg: (B, L_loc). Returns f32 (pv, m, l):
+    pv (B, Hkv, G, Sq, Dv) exp-weighted values, m (B, Hkv, G, Sq) local
+    max, l (B, Hkv, G, Sq) local exp-sum. A shard with zero visible slots
+    yields m == NEG_INF and garbage pv/l — the combine's exp(m - m_g)
+    factor underflows to exactly 0.0, so the garbage never contributes."""
+    B, Sq, H, D = q.shape
+    _, L, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    qp, kp = q_pos[:, :, None], kv_pos[:, None, :]
+    qs, ks = q_seg[:, :, None], kv_seg[:, None, :]
+    ok = (kp <= qp) & ((ks == 0) | (ks == qs))
+    if window is not None:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    m = s.max(axis=-1)                                 # (B, Hkv, G, Sq)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    return pv, m, l
+
+
+def combine_partial_stats(pv, m, l, axis_name: str):
+    """Merge per-shard flash partials across ``axis_name`` (inside a
+    shard_map): one pmax on the (B, Hkv, G, Sq) max plus two psums on the
+    rescaled sum/value partials — the only collectives the shard_map'd
+    decode step pays, all of them (B, H)-sized instead of cache-sized.
+    Returns the normalised (B, Hkv, G, Sq, Dv) attention output."""
+    m_g = jax.lax.pmax(m, axis_name)
+    c = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * c, axis_name)
+    pv_g = jax.lax.psum(pv * c[..., None], axis_name)
+    return pv_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
 def _gather_pages(k_pages, v_pages, pos_pages, page_table):
     """(P, page, Hkv, D) pools + (B, n_max) tables -> each row's logical
     (B, L, Hkv, D) context (null page 0 carries pos 2^30, masked)."""

@@ -178,6 +178,20 @@ class RequestDriver:
 # ---------------------------------------------------------------------
 
 
+def _settle_batch(out, t0: float):
+    """Boundary settle for one served batch: barrier on the responses and
+    read the token count — the syncs live HERE, one call frame below the
+    serving entry point, so the hot tier itself stays sync-free
+    (DESIGN.md §Device-resident-decode)."""
+    # repro: allow(host-sync): wall-clock measurement barrier — tok/s is
+    # meaningless unless the batch actually finished
+    jax.block_until_ready(out.response_ids)
+    wall = time.time() - t0
+    # repro: allow(host-sync): once per served batch, for the stats dict
+    toks = int(np.asarray(out.response_len).sum())
+    return wall, toks
+
+
 def serve_batch(cfg, prompts, *, max_prompt_len: int, max_new: int,
                 temperature: float = 0.7, seed: int = 0):
     """Serve a batch of requests; returns (responses, stats)."""
@@ -187,12 +201,7 @@ def serve_batch(cfg, prompts, *, max_prompt_len: int, max_new: int,
                       capture_logprobs=False)
     t0 = time.time()
     out = sampler.generate(params, prompts, jax.random.PRNGKey(seed + 1))
-    # repro: allow(host-sync): wall-clock measurement barrier — tok/s is
-    # meaningless unless the batch actually finished
-    jax.block_until_ready(out.response_ids)
-    wall = time.time() - t0
-    # repro: allow(host-sync): once per served batch, for the stats dict
-    toks = int(np.asarray(out.response_len).sum())
+    wall, toks = _settle_batch(out, t0)
     return out, {"wall_s": wall, "generated_tokens": toks,
                  "tok_per_s": toks / wall}
 
@@ -201,7 +210,8 @@ def build_paged_engine(cfg, *, max_prompt_len: int, max_new: int,
                        num_slots: int = 4, page_size: int = 16,
                        temperature: float = 0.7, seed: int = 0,
                        spec_k: int = 0, spec_draft: str = "prompt_lookup",
-                       prefix_cache: bool = False, extra_pages: int = 0):
+                       prefix_cache: bool = False, extra_pages: int = 0,
+                       drain_interval: int = 1):
     """One serving-shaped paged engine (group_size=1, no capture): enough
     pages for every slot to hold a full prompt + response, plus headroom
     for the radix tree to keep cached prompt pages resident (idle cached
@@ -221,7 +231,8 @@ def build_paged_engine(cfg, *, max_prompt_len: int, max_new: int,
                             temperature=temperature,
                             capture_logprobs=False,   # serving: no consumer
                             spec_k=spec_k, spec_draft=spec_draft,
-                            prefix_cache=prefix_cache, seed=seed)
+                            prefix_cache=prefix_cache,
+                            drain_interval=drain_interval, seed=seed)
 
 
 def serve_paged(cfg, prompts, *, max_prompt_len: int, max_new: int,

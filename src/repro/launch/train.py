@@ -87,7 +87,8 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
             capture_logprobs=rl.capture_logprobs,
             spec_k=rl.spec_k if rl.spec_decode else 0,
             spec_draft=rl.spec_draft, spec_ngram=rl.spec_ngram,
-            prefix_cache=rl.prefix_cache, seed=seed)
+            prefix_cache=rl.prefix_cache,
+            drain_interval=rl.decode_drain_interval, seed=seed)
 
     instances = [InferenceInstance(i, cfg, sampler, latency_fn=latency_fn,
                                    scripted_fn=scripted_fn,
@@ -137,6 +138,11 @@ def main() -> None:
     ap.add_argument("--cbatch-slots", type=int, default=8,
                     help="decode slots per paged instance")
     ap.add_argument("--kv-page-size", type=int, default=16)
+    ap.add_argument("--drain-interval", type=int, default=1,
+                    help="fused decode-block length D for the paged engine "
+                         "(DESIGN.md §Device-resident-decode): the host "
+                         "drains device token buffers once per D steps; "
+                         "1 = legacy per-token cadence")
     ap.add_argument("--spec", action="store_true",
                     help="speculative decode for rollouts (DESIGN.md "
                          "§Spec-decode): k drafted tokens verified per "
@@ -200,6 +206,7 @@ def main() -> None:
         shared_prompt_attention=args.spa, spa_align=args.spa_align,
         rollout_engine=args.rollout_engine, cbatch_slots=args.cbatch_slots,
         kv_page_size=args.kv_page_size,
+        decode_drain_interval=args.drain_interval,
         spec_decode=args.spec, spec_k=args.spec_k,
         spec_draft=args.spec_draft, prefix_cache=args.prefix_cache,
         capture_logprobs=not args.no_capture_logprobs,

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_rope, dense_init
-from repro.sharding.specs import constrain, profile_has
+from repro.sharding.specs import (LOGICAL_TO_MESH, constrain, current_mesh,
+                                  profile_has, shard_map, spec_for)
 
 INVALID_POS = jnp.int32(2**30)
 NEG_INF = -1e30
@@ -380,6 +381,100 @@ def _paged_gqa_decode(params, cfg: ModelConfig, q, k, v, positions, cache,
     return out, new_cache
 
 
+def _shmap_decode_fit(cfg: ModelConfig, cache: dict, mesh, S: int) -> bool:
+    """True when the dense-GQA single-token decode step should run under
+    the fully-manual shard_map path (``_shmap_gqa_decode``): a mesh is
+    installed whose model axis actually shards the cache's length dim
+    (the active profile maps "seq" -> "model" and the axis divides L), so
+    the GSPMD single-slot write would pay the residual collective this
+    path exists to remove. Everything else (no mesh, unsharded cache,
+    MLA, paged pool, verify blocks) keeps the GSPMD branch."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    n = mesh.shape["model"]
+    if n <= 1 or S != 1 or cfg.use_mla or is_paged_cache(cache):
+        return False
+    if "model" not in LOGICAL_TO_MESH.get("seq", ()):
+        return False
+    return cache["pos"].shape[1] % n == 0
+
+
+def _shmap_gqa_decode(cfg: ModelConfig, q, k, v, positions, segments,
+                      cache: dict, cache_offset, mesh):
+    """shard_map'd dense-GQA decode step over the seq-sharded cache
+    (DESIGN.md §Device-resident-decode): each model shard writes the new
+    K/V row ONLY when the slot falls inside its local L/n range (a masked
+    local in-place update — no collective), computes flash partials over
+    its local shard, and the shards merge through one pmax + two psums on
+    (B, H)-sized softmax stats (``combine_partial_stats``). This is the
+    structural fix for dense-GQA decode's residual SPMD collective: the
+    cache never moves, only the stats do.
+
+    Handles both offset conventions ``write_decode`` accepts for S == 1:
+    a scalar (lock-step engines) and (B,) per-row starts (slot engines).
+    Returns (out (B, 1, H, Dv) pre-``wo``, new_cache)."""
+    from repro.kernels.decode_attention import (combine_partial_stats,
+                                                decode_partial_stats)
+    from jax.sharding import PartitionSpec as P
+
+    B = q.shape[0]
+    L = cache["pos"].shape[1]
+    n = mesh.shape["model"]
+    L_loc = L // n
+    ring = cfg.sliding_window is not None
+    off = jnp.asarray(cache_offset)
+
+    q_spec = spec_for(mesh, q.shape, ("batch", None, None, None))
+    row_spec = spec_for(mesh, positions.shape, ("batch", None))
+    off_spec = spec_for(mesh, off.shape, ("batch",)) if off.ndim else P()
+    ckv_spec = spec_for(mesh, cache["k"].shape, ("batch", "seq", None, None))
+    cpos_spec = spec_for(mesh, cache["pos"].shape, ("batch", "seq"))
+    out_spec = spec_for(mesh, (B, 1, q.shape[2], v.shape[-1]),
+                        ("batch", None, None, None))
+
+    def body(qb, kb, vb, qp, qs, ob, ck, cv, cp, cs):
+        base = jax.lax.axis_index("model") * L_loc
+        gidx = ob % L if ring else ob
+        loc = gidx - base
+        ok = (loc >= 0) & (loc < L_loc)
+        idx = jnp.clip(loc, 0, L_loc - 1)
+        if ob.ndim == 1:
+            # per-row slot offsets (dense-slot engine): gather the current
+            # row at the clamped local slot, select, scatter back — rows
+            # whose slot lives on another shard write their own old value.
+            bi = jnp.arange(qb.shape[0], dtype=jnp.int32)
+            sel = lambda cur, new: jnp.where(
+                ok.reshape((-1,) + (1,) * (new.ndim - 1)), new, cur)
+            ck = ck.at[bi, idx].set(sel(ck[bi, idx], kb[:, 0]))
+            cv = cv.at[bi, idx].set(sel(cv[bi, idx], vb[:, 0]))
+            cp = cp.at[bi, idx].set(jnp.where(ok, qp[:, 0], cp[bi, idx]))
+            cs = cs.at[bi, idx].set(jnp.where(ok, qs[:, 0], cs[bi, idx]))
+        else:
+            # scalar offset (lock-step engines): masked DUS at the local
+            # index — off-shard devices rewrite the slot's current value.
+            def upd(buf, new):
+                cur = jax.lax.dynamic_slice_in_dim(buf, idx, 1, 1)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    buf, jnp.where(ok, new, cur), idx, 1)
+            ck, cv = upd(ck, kb), upd(cv, vb)
+            cp, cs = upd(cp, qp), upd(cs, qs)
+        pv, m, l = decode_partial_stats(qb, ck, cv, qp, cp, qs, cs,
+                                        window=cfg.sliding_window)
+        out = combine_partial_stats(pv, m, l, "model")
+        out = jnp.moveaxis(out, 3, 1)                  # (B, 1, Hkv, G, Dv)
+        out = out.reshape(qb.shape[0], 1, -1, out.shape[-1])
+        return out.astype(qb.dtype), ck, cv, cp, cs
+
+    out, nk, nv, npos, nseg = shard_map(
+        body, mesh,
+        in_specs=(q_spec, q_spec, q_spec, row_spec, row_spec, off_spec,
+                  ckv_spec, ckv_spec, cpos_spec, cpos_spec),
+        out_specs=(out_spec, ckv_spec, ckv_spec, cpos_spec, cpos_spec))(
+            q, k, v, positions, segments, off,
+            cache["k"], cache["v"], cache["pos"], cache["seg"])
+    return out, {"k": nk, "v": nv, "pos": npos, "seg": nseg}
+
+
 def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
                   cache: Optional[dict] = None, cache_offset=None,
                   page_table=None):
@@ -415,15 +510,23 @@ def gqa_attention(params, cfg: ModelConfig, x, positions, segments, *,
     else:
         be = backend_of(cfg, cache)
         if S == 1 or _is_verify(S, cache_offset):
-            # NOTE (SPerf, refuted): a mask-based (iota==idx select) write
-            # does NOT avoid the SPMD cache gather here -- XLA computes the
-            # select replicated and the gather just moves to the sharding
-            # constraint (measured identical 2.16 s bound on internlm2
-            # decode_32k), while a full-cache rewrite would be strictly
-            # worse on real hardware than an in-place DUS. The single-slot
-            # write on a seq-sharded dim remains the documented residual
-            # collective of dense-GQA decode; the structural fix is a
-            # shard_map'd decode step (future lever).
+            mesh = current_mesh()
+            if _shmap_decode_fit(cfg, cache, mesh, S):
+                out, new_cache = _shmap_gqa_decode(
+                    cfg, q, k, v, positions, segments, cache, cache_offset,
+                    mesh)
+                out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
+                                 params["wo"])
+                return out, new_cache
+            # NOTE (SPerf): a mask-based (iota==idx select) write was
+            # REFUTED as a fix -- XLA computes the select replicated and
+            # the gather just moves to the sharding constraint (measured
+            # identical 2.16 s bound on internlm2 decode_32k). The
+            # structural fix is the shard_map'd decode step above
+            # (_shmap_gqa_decode); this GSPMD branch remains for unsharded
+            # caches / no-mesh runs / verify blocks, where the single-slot
+            # write pays no collective (or the profile leaves seq
+            # unsharded).
             new_cache = be.write_decode(cache, (k, v), positions, segments,
                                         cache_offset)
         elif S > be.L:

@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init, mlp, init_mlp
-from repro.sharding.specs import constrain, current_mesh
+from repro.sharding.specs import constrain, current_mesh, shard_map
 
 
 def init_moe(key, cfg: ModelConfig, dtype) -> dict:
@@ -255,9 +255,9 @@ def _moe_ffn_ep(params: dict, cfg: ModelConfig, x: jax.Array, mesh):
         y = _combine_tokens(y_e, slot, keep, top_p)
         return y.astype(xb.dtype).reshape(B_loc, S_loc, d), aux
 
-    y, aux = jax.shard_map(
-        body, mesh=mesh, in_specs=(w_spec, x_spec),
-        out_specs=(x_spec, P()), check_vma=False)(
+    y, aux = shard_map(
+        body, mesh, in_specs=(w_spec, x_spec),
+        out_specs=(x_spec, P()))(
             {k: params[k] for k in w_spec}, x)
 
     if cfg.num_shared_experts:

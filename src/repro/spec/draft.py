@@ -122,7 +122,8 @@ class ModelDraft:
         self._pending: List[list] = [[] for _ in range(num_slots)]
         self._prefill_j = jax.jit(self._prefill, donate_argnums=(0,))
         self._feed_j = jax.jit(self._feed, donate_argnums=(0,))
-        self._step_j = jax.jit(self._step, donate_argnums=(0,))
+        self._kstep_j = jax.jit(self._kstep, donate_argnums=(0,),
+                                static_argnames=("k",))
 
     # -- jitted cores -------------------------------------------------------
 
@@ -171,24 +172,37 @@ class ModelDraft:
                            logits)
         return caches, logits
 
-    def _step(self, caches, logits, offsets, active):
-        """One greedy token for every active slot (speculative — written
-        past the frontier, masked until committed or overwritten)."""
+    def _kstep(self, caches, logits, offsets, active, *, k: int):
+        """k fused greedy draft steps (one ``lax.scan`` — the draft-plane
+        piece of the device-resident decode loop, DESIGN.md
+        §Device-resident-decode): every step argmax-decodes one token per
+        active slot and writes it past the committed frontier
+        (speculative — masked until committed or overwritten). Returns
+        (toks (k, B), caches); the carried logits/offsets are local to the
+        proposal and deliberately discarded."""
         cfg = self.cfg
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        tok = jnp.where(active, tok, self.pad_id)
-        positions = jnp.where(active, offsets, 2**30).astype(
-            jnp.int32)[:, None]
-        segments = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
-        h, caches, _, _ = self._fh(self.params, cfg, tok[:, None],
-                                   positions=positions, segments=segments,
-                                   caches=caches,
-                                   cache_offset=jnp.where(
-                                       active, offsets, 0).astype(jnp.int32))
-        W = self._head(self.params["embed"], cfg)
-        logits_next = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
-                                 W.astype(jnp.float32))
-        return tok, caches, logits_next
+
+        def body(carry, _):
+            caches, logits, off = carry
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(active, tok, self.pad_id)
+            positions = jnp.where(active, off, 2**30).astype(
+                jnp.int32)[:, None]
+            segments = jnp.where(active, 0, -1).astype(jnp.int32)[:, None]
+            h, caches, _, _ = self._fh(self.params, cfg, tok[:, None],
+                                       positions=positions,
+                                       segments=segments, caches=caches,
+                                       cache_offset=jnp.where(
+                                           active, off, 0).astype(jnp.int32))
+            W = self._head(self.params["embed"], cfg)
+            logits = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                                W.astype(jnp.float32))
+            off = off + active.astype(jnp.int32)
+            return (caches, logits, off), tok
+
+        (caches, _, _), toks = jax.lax.scan(
+            body, (caches, logits, offsets), None, length=k)
+        return toks, caches
 
     # -- provider API -------------------------------------------------------
 
@@ -229,20 +243,17 @@ class ModelDraft:
                 jnp.asarray(counts), jnp.asarray(self.off),
                 jnp.asarray(active))
             self.off += counts
-        # k speculative greedy steps from the committed frontier
+        # k speculative greedy steps from the committed frontier, fused
+        # into ONE jitted scan (one trace per distinct k)
         active = np.zeros((B,), bool)
         active[list(slots)] = True
-        out = np.zeros((B, k), np.int32)
-        logits, off = self.logits, self.off.copy()
-        for j in range(k):
-            tok, self.caches, logits = self._step_j(
-                self.caches, logits, jnp.asarray(off), jnp.asarray(active))
-            # repro: allow(host-sync): per-draft-token readback feeding
-            # the host-side proposal buffer — ROADMAP device-resident
-            # decode loop
-            out[:, j] = np.asarray(tok)
-            off += active.astype(np.int32)
-        return out
+        toks, self.caches = self._kstep_j(
+            self.caches, self.logits, jnp.asarray(self.off),
+            jnp.asarray(active), k=k)
+        # repro: allow(host-sync): one readback per k-step draft scan
+        # feeding the host-side proposal buffer, not per draft token —
+        # DESIGN.md §Device-resident-decode
+        return np.asarray(toks).T.copy()       # (B, k)
 
 
 def make_draft_provider(kind: str, cfg: ModelConfig, num_slots: int, *,

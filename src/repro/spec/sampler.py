@@ -34,7 +34,7 @@ from repro.models.attention import INVALID_POS
 from repro.models.layers import lm_head_weight
 from repro.rl.rollout import RolloutBatch, Sampler
 from repro.spec.draft import make_draft_provider
-from repro.spec.verify import assemble_commit, verify_block
+from repro.spec.verify import commit_block, verify_block
 
 
 def pack_row_block(tokens_row, pos_row, seg_row, fresh: bool, draft_row,
@@ -78,8 +78,10 @@ def dense_verify_step(cfg, temperature, top_p, capture, params, caches,
     ``core/cbatch.py``'s spec path) jit with (cfg, temperature, top_p,
     capture) bound. ``fresh`` rows use their prefill logits as p_0 (their
     block's last slot is a masked pad); steady rows' p_0..p_k are all
-    outputs of this forward. Returns (accept, alt, lp_draft, lp_alt,
-    caches)."""
+    outputs of this forward. The accept/commit walk runs ON DEVICE
+    (``commit_block``, DESIGN.md §Device-resident-decode), so the step
+    returns right-padded (B, k+1) commit buffers + per-row counts:
+    (toks, lps, count, caches)."""
     h, caches, _, _ = forward_hidden(
         params, cfg, tokens, positions=positions, segments=segs,
         caches=caches, cache_offset=offsets)
@@ -93,7 +95,8 @@ def dense_verify_step(cfg, temperature, top_p, capture, params, caches,
     accept, alt, lp_d, lp_a = verify_block(
         p, draft, keys, folds, temperature=temperature, top_p=top_p,
         capture=capture)
-    return accept, alt, lp_d, lp_a, caches
+    toks, lps, count = commit_block(accept, alt, draft, lp_d, lp_a)
+    return toks, lps, count, caches
 
 
 class SpecSampler:
@@ -173,6 +176,43 @@ class SpecSampler:
 
     # -- host loop ----------------------------------------------------------
 
+    def _drain_verify(self, ctoks, clps, count):
+        """Drain one fused verify block's commit buffers — the accept/
+        commit walk already ran on device (``commit_block``), so this is
+        the loop's only device->host touch, once per k+1-token block."""
+        for buf in (ctoks, clps, count):
+            if hasattr(buf, "copy_to_host_async"):
+                buf.copy_to_host_async()
+        # repro: allow(host-sync): one buffered readback per verify block
+        # (device-side commit walk) — DESIGN.md §Device-resident-decode
+        return jax.device_get((ctoks, clps, count))
+
+    def _commit_rows(self, active, ctoks, clps, count, resp, lps, done,
+                     fresh, provider) -> None:
+        """Drain one verify block and commit its rows — the host half of
+        the loop body, one frame below the hot entry point so the hot
+        tier itself stays sync-free (DESIGN.md §Device-resident-decode).
+        After the buffered drain the walk touches only host numpy."""
+        k, T = self.k, self.T
+        ctoks, clps, count = self._drain_verify(ctoks, clps, count)
+        for b in active:
+            n = int(count[b])
+            ct = [int(t) for t in ctoks[b, :n]]
+            cl = [float(x) for x in clps[b, :n]]
+            self.spec_steps += 1
+            self.drafted_tokens += k
+            self.accepted_tokens += n - 1
+            ct, cl, row_done = truncate_commit(
+                ct, cl, T - len(resp[b]), self.eos_id)
+            resp[b].extend(ct)
+            lps[b].extend(cl)
+            provider.commit(b, ct)
+            self.committed_tokens += len(ct)
+            fresh[b] = False
+            if row_done:
+                done[b] = True
+                provider.stop(b)
+
     def generate(self, params, prompts: list, key) -> RolloutBatch:
         toks, lens = self.pad_prompts(prompts)
         B = len(prompts)
@@ -186,9 +226,9 @@ class SpecSampler:
         plens = np.asarray(lens)
         for b, p in enumerate(prompts):
             provider.start(b, np.asarray(p, np.int32)[-Lp:])
-        # repro: allow(host-sync): one-time setup transfer of per-row keys
-        # before the draft/verify loop starts
-        row_keys = np.asarray(jax.random.split(key, B))
+        # per-row keys stay device-resident — the verify step is their
+        # only consumer (§Device-resident-decode)
+        row_keys = jax.random.split(key, B)
         resp = [[] for _ in range(B)]
         lps = [[] for _ in range(B)]
         done = np.zeros((B,), bool)
@@ -209,33 +249,14 @@ class SpecSampler:
                                        int(plens[b]) + t, k)
                 offs[b] = Lp + t + delta
             folds = np.full((B,), step, np.int32)
-            accept, alt, lp_d, lp_a, caches = self._vstep(
+            ctoks, clps, count, caches = self._vstep(
                 params, caches, jnp.asarray(tokens), jnp.asarray(positions),
                 jnp.asarray(segs), jnp.asarray(offs), logits0,
                 jnp.asarray(fresh), jnp.asarray(draft),
-                jnp.asarray(row_keys), jnp.asarray(folds))
-            # repro: allow(host-sync): the one per-verify-block readback
-            # (accept/commit walk is host-side) — ROADMAP device-resident
-            # decode loop
-            accept, alt, lp_d, lp_a = jax.device_get(
-                (accept, alt, lp_d, lp_a))
+                row_keys, jnp.asarray(folds))
+            self._commit_rows(active, ctoks, clps, count, resp, lps,
+                              done, fresh, provider)
             step += 1
-            for b in active:
-                ct, cl = assemble_commit(accept[b], alt[b], draft[b],
-                                         lp_d[b], lp_a[b])
-                self.spec_steps += 1
-                self.drafted_tokens += k
-                self.accepted_tokens += len(ct) - 1
-                ct, cl, row_done = truncate_commit(
-                    ct, cl, T - len(resp[b]), self.eos_id)
-                resp[b].extend(ct)
-                lps[b].extend(cl)
-                provider.commit(b, ct)
-                self.committed_tokens += len(ct)
-                fresh[b] = False
-                if row_done:
-                    done[b] = True
-                    provider.stop(b)
         out = np.full((B, T), self.pad_id, np.int32)
         out_lp = np.zeros((B, T), np.float32)
         out_len = np.zeros((B,), np.int32)

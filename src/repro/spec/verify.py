@@ -111,6 +111,39 @@ def verify_block(logits, draft, keys, folds, *, temperature: float,
     return accept, alt, lp_draft, lp_alt
 
 
+def commit_block(accept, alt, draft, lp_draft, lp_alt):
+    """Device-side ``assemble_commit`` for every row at once (the fused
+    verify step of the device-resident decode loop, DESIGN.md
+    §Device-resident-decode): the commit is the leading run of accepted
+    drafts plus one tail token, assembled with vector ops so the engines
+    read back ONE right-padded (B, k+1) buffer per verify block instead
+    of walking accept/alt on the host.
+
+    Returns (toks, lps, count):
+      toks:  (B, k+1) int32 — committed tokens, right-padded with 0 past
+             ``count`` (callers slice before use);
+      lps:   (B, k+1) f32 raw logprobs, same layout;
+      count: (B,) int32 in 1..k+1 — committed tokens per row.
+
+    Bitwise identical to ``assemble_commit`` row by row: the leading-run
+    length is ``n = sum(cumprod(accept))`` and the tail is ``alt[n]``.
+    """
+    B, k = draft.shape
+    n = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)  # (B,)
+    j = jnp.arange(k + 1, dtype=jnp.int32)[None, :]
+    pad_i = jnp.zeros((B, 1), jnp.int32)
+    pad_f = jnp.zeros((B, 1), jnp.float32)
+    tail_t = jnp.take_along_axis(alt, n[:, None], axis=1)          # (B, 1)
+    tail_l = jnp.take_along_axis(lp_alt, n[:, None], axis=1)
+    toks = jnp.where(j < n[:, None],
+                     jnp.concatenate([draft, pad_i], axis=1),
+                     jnp.where(j == n[:, None], tail_t, 0))
+    lps = jnp.where(j < n[:, None],
+                    jnp.concatenate([lp_draft, pad_f], axis=1),
+                    jnp.where(j == n[:, None], tail_l, 0.0))
+    return toks.astype(jnp.int32), lps.astype(jnp.float32), n + 1
+
+
 def assemble_commit(accept, alt, draft, lp_draft,
                     lp_alt) -> Tuple[List[int], List[float]]:
     """Walk ONE row's verify outputs into its committed tokens (host side).
