@@ -45,12 +45,20 @@ def main() -> None:
         "table10": table10_device_loop.main,  # beyond-paper: fused decode
     }
     if args.smoke:
+        import functools
+        import os
+        os.makedirs("benchmarks/results", exist_ok=True)
         tables = {"table6": table6_cbatch.main,
                   "table6_pool": table6_cbatch.pool_mode,
                   "table7": table7_transfer.main,
                   "table8": table8_specdec.main,
                   "table9": table9_serving.main,
-                  "table10": table10_device_loop.main}
+                  "table10": table10_device_loop.main,
+                  # traced sync-vs-async pipeline run: exports Perfetto
+                  # traces to benchmarks/results/ and asserts the async
+                  # bubble fraction beats sync (DESIGN.md §Observability)
+                  "table1_traced": functools.partial(
+                      table1_async.main, trace_dir="benchmarks/results")}
     print("table,name,value,derived")
     failures = 0
     for name, fn in tables.items():

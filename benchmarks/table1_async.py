@@ -23,6 +23,8 @@ from benchmarks.common import emit, save
 from repro.configs import get_config, reduced_config
 from repro.configs.base import RLConfig
 from repro.launch.train import build_pipeline
+from repro.obs import trace as otrace
+from repro.obs.analyze import analyze_file
 from repro.rl.rollout import RolloutBatch
 
 T_RESP = 12           # scripted response length
@@ -38,7 +40,7 @@ def scripted(prompts, key):
 
 
 def run_mode(mode: str, iterations: int = 3, batch: int = 16,
-             instances: int = 2):
+             instances: int = 2, trace_path: str = ""):
     cfg = reduced_config(get_config("llama3.2-3b"))
     rl = RLConfig(mode=mode, batch_prompts=batch, group_size=4,
                   micro_batch=4, num_inference_instances=instances,
@@ -48,9 +50,15 @@ def run_mode(mode: str, iterations: int = 3, batch: int = 16,
                                   latency_fn=lambda out: LATENCY)
     sched.run(1)                      # jit warmup iteration
     parts["pool"].reset_stats()
+    if trace_path:
+        # install AFTER warmup so the trace holds only measured iterations
+        otrace.install(process_name=f"table1-{mode}")
     t0 = time.perf_counter()
     hist = sched.run(iterations)
     wall = time.perf_counter() - t0
+    if trace_path:
+        otrace.export(trace_path)
+        otrace.uninstall()
     tokens = sum(s.trained_tokens for s in hist)
     infer_busy = sum(i.busy_time for i in parts["pool"].instances)
     # consumer BUSY-time (scheduler accumulates around grad steps and the
@@ -63,9 +71,11 @@ def run_mode(mode: str, iterations: int = 3, batch: int = 16,
             "history": [s.__dict__ for s in hist]}
 
 
-def main(timeline: bool = False) -> dict:
-    sync = run_mode("sync")
-    async_ = run_mode("async")
+def main(timeline: bool = False, trace_dir: str = "") -> dict:
+    t_sync = f"{trace_dir}/trace_table1_sync.json" if trace_dir else ""
+    t_async = f"{trace_dir}/trace_table1_async.json" if trace_dir else ""
+    sync = run_mode("sync", trace_path=t_sync)
+    async_ = run_mode("async", trace_path=t_async)
     speedup = async_["tpspd"] / sync["tpspd"]
     # Eq. 4 bound from the measured stage times of the sync run: in sync
     # mode the stages are serial, so wall - consumer-busy IS inference
@@ -84,10 +94,24 @@ def main(timeline: bool = False) -> dict:
                   f"trainer occupancy {occ_t:.2f}")
     out = {"sync": sync, "async": async_, "speedup": speedup,
            "eq4_bound": bound}
+    if trace_dir:
+        # bubble fraction from the traces themselves (Figure-3 occupancy,
+        # computed by the analyzer, not the benchmark): overlapping the
+        # stages must shrink the idle fraction, strictly
+        b_sync = analyze_file(t_sync)["summary"]["bubble_fraction"]
+        b_async = analyze_file(t_async)["summary"]["bubble_fraction"]
+        emit("table1", "bubble_sync", f"{b_sync:.3f}")
+        emit("table1", "bubble_async", f"{b_async:.3f}")
+        assert b_async < b_sync, \
+            f"async bubble {b_async:.3f} !< sync bubble {b_sync:.3f}"
+        out["bubble_sync"], out["bubble_async"] = b_sync, b_async
     save("table1_async", out)
     return out
 
 
 if __name__ == "__main__":
     import sys
-    main(timeline="--timeline" in sys.argv)
+    trace_dir = ""
+    if "--trace-dir" in sys.argv:
+        trace_dir = sys.argv[sys.argv.index("--trace-dir") + 1]
+    main(timeline="--timeline" in sys.argv, trace_dir=trace_dir)

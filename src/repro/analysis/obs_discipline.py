@@ -1,0 +1,142 @@
+"""obs-discipline: tracing-plane hygiene (DESIGN.md §Observability).
+
+Two rules over the ``otrace`` emission surface (calls whose dotted base
+is in OBS_TRACE_BASES — the ``from repro.obs import trace as otrace``
+convention, so unrelated ``.begin()`` methods never match):
+
+1. **begin/end balance.** ``otrace.begin("name", ...)`` opens an async
+   span that some ``otrace.end("name", ...)`` must close — possibly in a
+   different function or thread, so the pairing is checked repo-wide by
+   span NAME, not lexically. A name that only ever begins (or only ever
+   ends) renders as an unterminated track in Perfetto and usually means
+   a lifecycle event was dropped in a refactor. Dynamic (non-literal)
+   names defeat the check and are flagged as warnings.
+
+2. **no span around a hot-tier host sync.** ``with otrace.span(...)``
+   costs one context-manager entry/exit per use — fine anywhere — but a
+   span WRAPPING a device->host sync inside a depth-0 function (the
+   per-token entry points of HOT_ENTRY_POINTS) marks exactly the
+   anti-pattern the tracer was designed to avoid: timing the hot path by
+   fencing it. Sync sites come from the host-sync checker's own taint
+   scan (_FnScan), so the two checkers can never disagree about what a
+   sync is; the rule fires whether or not the sync itself carries an
+   allow(host-sync) pragma — a deliberate sync still must not acquire a
+   span barrier around it on the hot tier. Depth >= 1 (drain/boundary
+   functions) stays legal: that is where retro-recorded spans belong.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.callgraph import build_callgraph, dotted, iter_functions
+from repro.analysis.framework import Finding, Module
+from repro.analysis.host_sync import (_FnScan, _jit_handle_attrs,
+                                      _jitted_module_funcs)
+from repro.analysis.repo_config import HOT_ENTRY_POINTS, OBS_TRACE_BASES
+
+_OPENERS = {"begin"}
+_CLOSERS = {"end"}
+
+
+def _otrace_call(node: ast.Call) -> Optional[str]:
+    """The method name ('begin'/'span'/...) when this is an emission call
+    on a recognised tracer base, else None."""
+    f = node.func
+    if not isinstance(f, ast.Attribute):
+        return None
+    base = dotted(f.value)
+    if base in OBS_TRACE_BASES:
+        return f.attr
+    return None
+
+
+def _literal_name(node: ast.Call) -> Optional[str]:
+    if node.args and isinstance(node.args[0], ast.Constant) \
+            and isinstance(node.args[0].value, str):
+        return node.args[0].value
+    return None
+
+
+class ObsDisciplineChecker:
+    name = "obs-discipline"
+
+    def run(self, modules: List[Module]) -> List[Finding]:
+        findings: List[Finding] = []
+
+        # --- rule 1: repo-wide begin/end balance by span name ----------
+        begins: Dict[str, Tuple[str, int]] = {}   # name -> first site
+        ends: Dict[str, Tuple[str, int]] = {}
+        for mod in modules:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                meth = _otrace_call(node)
+                if meth not in _OPENERS | _CLOSERS:
+                    continue
+                nm = _literal_name(node)
+                if nm is None:
+                    findings.append(Finding(
+                        self.name, mod.path, node.lineno,
+                        "dynamic span name in otrace.%s(...) — the "
+                        "begin/end balance check needs a string literal"
+                        % meth, severity="warning"))
+                    continue
+                table = begins if meth in _OPENERS else ends
+                table.setdefault(nm, (mod.path, node.lineno))
+        for nm, (path, line) in sorted(begins.items()):
+            if nm not in ends:
+                findings.append(Finding(
+                    self.name, path, line,
+                    "otrace.begin(%r) has no matching otrace.end(%r) "
+                    "anywhere — the async span never closes" % (nm, nm)))
+        for nm, (path, line) in sorted(ends.items()):
+            if nm not in begins:
+                findings.append(Finding(
+                    self.name, path, line,
+                    "otrace.end(%r) has no matching otrace.begin(%r) "
+                    "anywhere — the close is dead or the open was "
+                    "dropped" % (nm, nm)))
+
+        # --- rule 2: span wrapping a host sync on the hot tier ---------
+        graph = build_callgraph(modules)
+        roots = []
+        for suffix, qual in HOT_ENTRY_POINTS:
+            for ref, fi in graph.funcs.items():
+                if fi.module.path.endswith(suffix) and fi.qualname == qual:
+                    roots.append(ref)
+        depth = graph.bfs_depth(roots)
+        jit_funcs = _jitted_module_funcs(modules)
+
+        for mod in modules:
+            jit_attrs = _jit_handle_attrs(mod)
+            for fi in iter_functions(mod):
+                if depth.get(fi.ref) != 0:
+                    continue
+                spans = []   # (With node, span-call line)
+                for node in ast.walk(fi.node):
+                    if not isinstance(node, ast.With):
+                        continue
+                    for item in node.items:
+                        c = item.context_expr
+                        if isinstance(c, ast.Call) \
+                                and _otrace_call(c) == "span":
+                            spans.append((node, c.lineno))
+                if not spans:
+                    continue
+                attrs = jit_attrs.get(fi.cls or "", set())
+                sites = _FnScan(fi, attrs, jit_funcs).run()
+                for wnode, sline in spans:
+                    lo = wnode.lineno
+                    hi = getattr(wnode, "end_lineno", wnode.lineno) or lo
+                    for line, msg in sites:
+                        if lo <= line <= hi:
+                            findings.append(Finding(
+                                self.name, mod.path, sline,
+                                "otrace.span in hot-tier %s wraps a host "
+                                "sync at line %d (%s) — use "
+                                "otrace.complete() with existing "
+                                "stopwatch reads instead of fencing the "
+                                "dispatch stream" % (fi.qualname, line,
+                                                     msg)))
+        return findings

@@ -1,7 +1,8 @@
-"""Checker registry: the five repo-specific checkers plus the implicit
+"""Checker registry: the six repo-specific checkers plus the implicit
 ``pragma``/``parse`` meta-checkers emitted by the harness."""
 from repro.analysis.host_sync import HostSyncChecker
 from repro.analysis.lock_discipline import LockDisciplineChecker
+from repro.analysis.obs_discipline import ObsDisciplineChecker
 from repro.analysis.refcount import RefcountChecker
 from repro.analysis.support_matrix import SupportMatrixChecker
 from repro.analysis.trace_purity import TracePurityChecker
@@ -12,6 +13,7 @@ ALL_CHECKERS = [
     RefcountChecker(),
     TracePurityChecker(),
     SupportMatrixChecker(),
+    ObsDisciplineChecker(),
 ]
 
 # names valid inside allow(...) — meta-checkers aren't suppressible but

@@ -64,6 +64,15 @@ CAPABILITY_FIELDS = {
     "attention_free",
 }
 
+# --- obs-discipline -------------------------------------------------------
+
+# Dotted bases a tracer-emission call is recognised under. The repo
+# convention (src/repro/obs/__init__.py) is
+# ``from repro.obs import trace as otrace`` — keying on the alias keeps
+# unrelated ``.begin()`` methods (VersionedParamStore.begin etc.) out of
+# the balance check.
+OBS_TRACE_BASES = {"otrace", "repro.obs.trace"}
+
 # --- shared ---------------------------------------------------------------
 
 # Paths never analyzed (generated reports, the analysis package's own

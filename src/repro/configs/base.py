@@ -407,4 +407,10 @@ class RLConfig:
     # (kernels/transfer_cast.py) instead of the pure-JAX astype path; only
     # meaningful when transfer_wire_dtype differs from storage.
     transfer_pallas_cast: bool = False
+    # --- observability (DESIGN.md §Observability) ---------------------
+    # Write a Chrome/Perfetto trace of the pipeline to this path ("" =
+    # tracing disabled, the null-span fast path). Spans reuse the
+    # pipeline's existing stopwatch reads, so enabling tracing adds no
+    # device barriers; inspect with `repro-trace report <path>`.
+    trace: str = ""
     seed: int = 0

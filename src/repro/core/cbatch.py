@@ -21,6 +21,7 @@ is exactly what the temporary data generator's queue consumes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from functools import partial
 from typing import Callable, List, Optional
@@ -33,6 +34,8 @@ from repro.configs.base import ModelConfig
 from repro.data.tokenizer import Tokenizer
 from repro.models import forward_hidden, init_caches
 from repro.models.layers import lm_head_weight
+from repro.obs import trace as otrace
+from repro.obs.metrics import metrics
 from repro.rl.rollout import _sample_token
 
 
@@ -162,6 +165,8 @@ class ContinuousBatchingSampler:
                 ngram=spec_ngram, max_prompt_len=max_prompt_len,
                 max_new_tokens=max_new_tokens, pad_id=pad_id, seed=seed)
         self.reset_spec_stats()
+        # registry metric, cached once; one add per drained block
+        self._m_drain_blocks = metrics().counter("cbatch.drain_blocks")
 
     # -- spec stats ---------------------------------------------------------
 
@@ -304,11 +309,15 @@ class ContinuousBatchingSampler:
             if plan:
                 base = sched.step
                 sched.step += D
+                t_disp = time.perf_counter()
                 toks, caches, logits, offsets, stop, key = self._decode(
                     params, caches, logits, offsets, stop, key,
                     jnp.asarray(valid), jnp.asarray(active))
                 if hasattr(toks, "copy_to_host_async"):
                     toks.copy_to_host_async()   # overlap with next block
+                otrace.complete("cbatch.dispatch", t_disp,
+                                time.perf_counter(), slots=len(plan),
+                                steps=D)
                 nxt = (plan, base, toks)
             if D == 1:
                 prev = nxt
@@ -323,6 +332,7 @@ class ContinuousBatchingSampler:
         device->host touch of the run loop, once per D-step block (the
         transfer was started asynchronously at dispatch)."""
         plan, base, tok_buf = blk
+        t_drain = time.perf_counter()
         # repro: allow(host-sync): one buffered readback per drained
         # D-step block, not per token — DESIGN.md §Device-resident-decode
         toks = jax.device_get(tok_buf)
@@ -343,6 +353,9 @@ class ContinuousBatchingSampler:
                         finish_step=base + j + 1))
                     sched.evict(s)
                     break
+        otrace.complete("cbatch.drain", t_drain, time.perf_counter(),
+                        slots=len(plan))
+        self._m_drain_blocks.add(1)
 
     def _drain_verify(self, ctoks, clps, count):
         """Drain one fused verify block's commit buffers (the spec-plane
@@ -402,7 +415,10 @@ class ContinuousBatchingSampler:
                 slot_toks[s] = []
                 self._draft.start(s, p)
             act = sched.active_slots()
+            t_draft = time.perf_counter()
             draft = self._draft.propose(act, k)
+            otrace.complete("spec.draft", t_draft, time.perf_counter(),
+                            slots=len(act), k=k)
             tokens = np.full((B, k + 1), self.pad_id, np.int32)
             positions = np.full((B, k + 1), int(INVALID_POS), np.int32)
             segs = np.full((B, k + 1), -1, np.int32)
@@ -416,11 +432,14 @@ class ContinuousBatchingSampler:
                 # right-padded slots: cache slot index == position
                 offs[s] = plen[s] + t + delta
             folds = np.full((B,), sched.step, np.int32)
+            t_verify = time.perf_counter()
             ctoks, clps, count, caches = self._vstep(
                 params, caches, jnp.asarray(tokens), jnp.asarray(positions),
                 jnp.asarray(segs), jnp.asarray(offs), logits,
                 jnp.asarray(fresh), jnp.asarray(draft),
                 jnp.asarray(slot_keys), jnp.asarray(folds))
+            otrace.complete("spec.verify", t_verify, time.perf_counter(),
+                            slots=len(act))
             self._commit_spec_rows(act, ctoks, clps, count, sched,
                                    slot_toks, limits, fresh, done)
         return done
@@ -433,6 +452,7 @@ class ContinuousBatchingSampler:
         the buffered drain the walk touches only host numpy."""
         from repro.spec.sampler import truncate_commit
         k = self.spec_k
+        t_commit = time.perf_counter()
         ctoks, clps, count = self._drain_verify(ctoks, clps, count)
         step = sched.tick()
         for s in list(act):
@@ -456,3 +476,6 @@ class ContinuousBatchingSampler:
                     finish_step=step))
                 sched.evict(s)
                 self._draft.stop(s)
+        otrace.complete("spec.commit", t_commit, time.perf_counter(),
+                        slots=len(act))
+        self._m_drain_blocks.add(1)

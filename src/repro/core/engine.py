@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.paged import PagedGroupEngine
+from repro.obs import trace as otrace
 from repro.rl.rollout import RolloutBatch, Sampler
 from repro.transfer.service import VersionedParamStore
 
@@ -71,6 +72,10 @@ class InferenceInstance:
         # path never fences the dispatch stream on a device barrier
         self._busy_lock = threading.Lock()
         self._settles: List[threading.Thread] = []
+        # settle threads that a boundary read actually had to block on —
+        # completed settles deregister themselves, so repeated busy_time
+        # reads between boundaries join nothing (O(1); regression-tested)
+        self.settle_joins = 0
 
     def sync_weights(self, params, version: int) -> None:
         """Eager whole-tree publish (legacy path; the RL scheduler streams
@@ -107,8 +112,12 @@ class InferenceInstance:
                 out = self.scripted_fn(prompts, key)
                 if self.latency_fn is not None:
                     time.sleep(self.latency_fn(out))
+                t1 = time.perf_counter()
                 with self._busy_lock:
-                    self.busy_time += time.perf_counter() - t0
+                    self.busy_time += t1 - t0
+                otrace.complete("producer.busy", t0, t1, busy=t1 - t0,
+                                inst=self.inst_id,
+                                track=f"producer/inst{self.inst_id}")
             else:
                 assert self.sampler is not None and params is not None
                 out = self.sampler.generate(params, prompts, key)
@@ -122,16 +131,24 @@ class InferenceInstance:
     def _defer_busy(self, t0: float, arrays) -> None:
         """Charge the busy clock off the dispatch path: a daemon settle
         thread waits for ``arrays`` and adds the exact dispatch->ready
-        interval under the busy lock. ``flush_busy`` joins stragglers at
-        the iteration boundary, where the queue is already drained so the
-        joins return immediately."""
+        interval under the busy lock. A completed settle deregisters
+        itself, so only genuinely in-flight settles remain for
+        ``flush_busy`` to join at the iteration boundary (where the queue
+        is already drained, so those joins return immediately)."""
         def settle():
             # repro: allow(host-sync): busy-clock barrier DELIBERATELY
             # moved off the dispatch path into this settle thread — the
             # hot path no longer blocks (§Device-resident-decode)
             jax.block_until_ready(arrays)
+            t1 = time.perf_counter()
             with self._busy_lock:
-                self.busy_time += time.perf_counter() - t0
+                self.busy_time += t1 - t0
+                self._settles.remove(th)  # deregister: nothing to rejoin
+            # producer busy span from the deferred clock's own endpoints —
+            # no new barrier, no timestamp invented on the dispatch path
+            otrace.complete("producer.busy", t0, t1, busy=t1 - t0,
+                            inst=self.inst_id,
+                            track=f"producer/inst{self.inst_id}")
         th = threading.Thread(target=settle, daemon=True,
                               name=f"busy-settle-{self.inst_id}")
         with self._busy_lock:
@@ -140,12 +157,15 @@ class InferenceInstance:
 
     def flush_busy(self) -> None:
         """Join pending busy-clock settles (boundary accounting barrier —
-        NOT on the per-request path)."""
+        NOT on the per-request path). Settles that already completed have
+        deregistered themselves, so between boundaries this is a single
+        lock acquisition and an empty-list check."""
         while True:
             with self._busy_lock:
                 if not self._settles:
                     return
-                th = self._settles.pop()
+                th = self._settles[-1]
+                self.settle_joins += 1
             th.join()
 
     def _generate_group_paged(self, prompts: List[np.ndarray], key,
@@ -166,13 +186,27 @@ class InferenceInstance:
         # so the version cannot change while this group is in flight
         _, version = self.store.wait_version(min_version)
         handle = eng.submit(prompts[0], key)
+        drive0 = None   # first step this caller took; busy = its step time
+        busy = 0.0
+        t1 = 0.0
         while not handle.done():
             with self._lock:
                 if handle.done():
                     break
                 t0 = time.perf_counter()
                 eng.step()
-                self.busy_time += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                if drive0 is None:
+                    drive0 = t0
+                busy += t1 - t0
+                self.busy_time += t1 - t0
+        if drive0 is not None:
+            # convoy driving interleaves callers, so the span's wall extent
+            # includes lock waits — the charged occupancy rides in `busy`
+            # (what the analyzer sums to reproduce infer_time)
+            otrace.complete("producer.busy", drive0, t1, busy=busy,
+                            inst=self.inst_id,
+                            track=f"producer/inst{self.inst_id}")
         return handle.result(), version
 
 
@@ -217,12 +251,28 @@ class InferencePool:
             if inst.paged_engine is not None:
                 inst.paged_engine.reset_stats()
 
+    def engine_stats(self) -> dict:
+        """Aggregated paged-engine counters across instances (atomic per
+        engine). Zeros when no instance runs a paged engine, so callers
+        can diff snapshots unconditionally."""
+        agg = {"decode_steps": 0, "generated_tokens": 0,
+               "reclaimed_pages": 0, "spec_steps": 0, "drafted_tokens": 0,
+               "accepted_tokens": 0, "prefix_hit_pages": 0,
+               "prefix_miss_pages": 0, "prefix_evicted_pages": 0}
+        for inst in self.instances:
+            if inst.paged_engine is not None:
+                for k, v in inst.paged_engine.stats_snapshot().items():
+                    agg[k] += v
+        return agg
+
     @property
     def busy_time(self) -> float:
         """Aggregate producer busy-time across instances (the quantity
         ``IterationStats.infer_time`` reports). Flushes the deferred busy
         clocks first — this is the boundary read, after the queue drain,
-        so pending settles resolve immediately."""
+        so pending settles resolve immediately; settles that already
+        completed have deregistered themselves, making repeated reads
+        between boundaries O(1)."""
         for inst in self.instances:
             inst.flush_busy()
         return sum(inst.busy_time for inst in self.instances)

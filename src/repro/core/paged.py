@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -64,6 +65,8 @@ from repro.data.tokenizer import Tokenizer
 from repro.models import forward_hidden, init_caches, init_paged_caches
 from repro.models.attention import INVALID_POS, cache_streams
 from repro.models.layers import lm_head_weight
+from repro.obs import trace as otrace
+from repro.obs.metrics import metrics
 from repro.rl.rollout import (RolloutBatch, _sample_token_rows,
                               sampled_token_logprob, stepwise_keys)
 
@@ -308,6 +311,18 @@ class PagedGroupEngine:
         self._verify = jax.jit(self._verify_step, donate_argnums=(1,))
         self.reset_spec_stats()
         self.reset_prefix_stats()
+        # registry metrics, cached once; pushed at BLOCK granularity from
+        # the drain/commit paths, never per token (§Observability)
+        _m = metrics()
+        self._m_drain_blocks = _m.counter("paged.drain_blocks")
+        self._m_reclaimed = _m.counter("paged.pages_reclaimed")
+        self._m_pages_live = _m.gauge("paged.pages_live")
+        self._m_drafted = _m.counter("spec.drafted_tokens")
+        self._m_accepted = _m.counter("spec.accepted_tokens")
+        self._m_prefix_hit = _m.counter("prefix.hit_pages")
+        self._m_prefix_miss = _m.counter("prefix.miss_pages")
+        self._m_prefix_evicted = _m.counter("prefix.evicted_pages")
+        self._pushed_reclaimed = 0   # registry high-water for the counter
 
     def reset_spec_stats(self) -> None:
         with self._mutex:   # counters race with step() from other threads
@@ -335,6 +350,22 @@ class PagedGroupEngine:
         with self._mutex:
             tot = self.prefix_hit_pages + self.prefix_miss_pages
             return self.prefix_hit_pages / tot if tot else 0.0
+
+    def stats_snapshot(self) -> dict:
+        """Atomic copy of the engine counters (one mutex hold — the
+        scheduler diffs two snapshots for per-iteration metrics)."""
+        with self._mutex:
+            return {
+                "decode_steps": self.decode_steps,
+                "generated_tokens": self.generated_tokens,
+                "reclaimed_pages": self.reclaimed_pages,
+                "spec_steps": self.spec_steps,
+                "drafted_tokens": self.drafted_tokens,
+                "accepted_tokens": self.accepted_tokens,
+                "prefix_hit_pages": self.prefix_hit_pages,
+                "prefix_miss_pages": self.prefix_miss_pages,
+                "prefix_evicted_pages": self.prefix_evicted_pages,
+            }
 
     # -- page geometry ------------------------------------------------------
 
@@ -635,8 +666,9 @@ class PagedGroupEngine:
             need += n_pp - m
         free = self.alloc.num_free - self._outstanding
         if free < need and self.radix is not None:
-            self.prefix_evicted_pages += len(
-                self.radix.evict(need - free, protect=set(mpages)))
+            evicted = len(self.radix.evict(need - free, protect=set(mpages)))
+            self.prefix_evicted_pages += evicted
+            self._m_prefix_evicted.add(evicted)
             free = self.alloc.num_free - self._outstanding
         return free >= need
 
@@ -690,26 +722,35 @@ class PagedGroupEngine:
                 g.prompt_pages = list(mpages) + new
                 self.prefix_hit_pages += m - j0
                 self.prefix_miss_pages += n_pp - m
+                self._m_prefix_hit.add(m - j0)
+                self._m_prefix_miss.add(n_pp - m)
             else:
                 g.prompt_pages = self.alloc.alloc(n_pp - j0, refcount=g.G)
                 assert g.prompt_pages is not None, "admission gate let a " \
                     "row in without pages for its prompt"
                 if self.radix is not None:
                     self.prefix_miss_pages += n_pp - j0
+                    self._m_prefix_miss.add(n_pp - j0)
             g.prompt_last = [min((j + 1) * self.page, len(g.prompt)) - 1
                              for j in range(j0, n_pp)]
             if m > j0:
-                self._warm_prefill(g, m, g.prompt_pages[m - j0:], j0, n_pp)
+                # span measures host-side dispatch (the prefill itself is
+                # asynchronous; its device time surfaces at the next drain)
+                with otrace.span("paged.prefill", gid=g.gid, warm=True):
+                    self._warm_prefill(g, m, g.prompt_pages[m - j0:],
+                                       j0, n_pp)
             else:
-                dest = np.full((self.n_prompt_pages,), TRASH_PAGE, np.int32)
-                dest[j0:n_pp] = g.prompt_pages
-                row_arr = np.full((1, self.n_prompt_pages * self.page),
-                                  self.pad_id, np.int32)
-                row_arr[0, : len(g.prompt)] = g.prompt
-                self.caches, g.prompt_logits = self._prefill(
-                    self.params, self.caches, jnp.asarray(row_arr),
-                    jnp.asarray([len(g.prompt)], jnp.int32),
-                    jnp.asarray(dest))
+                with otrace.span("paged.prefill", gid=g.gid, warm=False):
+                    dest = np.full((self.n_prompt_pages,), TRASH_PAGE,
+                                   np.int32)
+                    dest[j0:n_pp] = g.prompt_pages
+                    row_arr = np.full((1, self.n_prompt_pages * self.page),
+                                      self.pad_id, np.int32)
+                    row_arr[0, : len(g.prompt)] = g.prompt
+                    self.caches, g.prompt_logits = self._prefill(
+                        self.params, self.caches, jnp.asarray(row_arr),
+                        jnp.asarray([len(g.prompt)], jnp.int32),
+                        jnp.asarray(dest))
             if self.radix is not None:
                 # cache every COMPLETE prompt page (cold and warm alike —
                 # insert skips spans already cached); a trailing partial
@@ -884,6 +925,7 @@ class PagedGroupEngine:
         receives the per-step keys/write-slots/valid masks as (D, B)
         arrays and runs free."""
         B, D, page = self.B, self.drain, self.page
+        t_disp = time.perf_counter()
         keys = np.zeros((D, B, 2), np.uint32)
         wsl = np.full((D, B), TRASH_PAGE * page, np.int32)
         valid = np.zeros((D, B), bool)
@@ -939,12 +981,18 @@ class PagedGroupEngine:
         for buf in (toks, lps):
             if hasattr(buf, "copy_to_host_async"):
                 buf.copy_to_host_async()
+        # host-side build+dispatch span (the device runs free; its time
+        # surfaces in the matching paged.drain span)
+        otrace.complete("paged.dispatch", t_disp, time.perf_counter(),
+                        slots=len(plan), steps=D)
         return _Block(plan=plan, base=base, toks=toks, lps=lps)
 
     def _drain_block(self, blk: _Block) -> None:
         """Commit one drained block into host bookkeeping — the ONLY
         device->host touch of the non-spec decode path, once per D steps
         (or per row completion) instead of per token."""
+        t_drain = time.perf_counter()
+        g0 = self.generated_tokens
         # repro: allow(host-sync): one buffered readback per drained
         # D-step block (transfer started async at dispatch), not per
         # token — DESIGN.md §Device-resident-decode drain protocol
@@ -967,6 +1015,21 @@ class PagedGroupEngine:
                 if tv == self.eos_id or len(row.toks) >= g.max_new:
                     self._finish_row(s, row, blk.base + j + 1)
                     break
+        otrace.complete("paged.drain", t_drain, time.perf_counter(),
+                        slots=len(blk.plan),
+                        tokens=self.generated_tokens - g0)
+        self._push_block_metrics()
+
+    def _push_block_metrics(self) -> None:
+        """Flush block-granularity deltas into the metrics registry (one
+        counter add per drained block, not per page event)."""
+        self._m_drain_blocks.add(1)
+        self._m_pages_live.set(self.alloc.num_live)
+        d = self.reclaimed_pages - self._pushed_reclaimed
+        if d:
+            self._m_reclaimed.add(d)
+            self._pushed_reclaimed = self.reclaimed_pages
+        otrace.counter("paged.pages_live", self.alloc.num_live)
 
     def _drain_verify(self, ctoks, clps, count):
         """Drain one fused verify block's commit buffers (the spec plane's
@@ -989,7 +1052,10 @@ class PagedGroupEngine:
         buffers, and roll rejected speculative pages back to the
         freelist."""
         B, k, page = self.B, self.spec_k, self.page
+        t_draft = time.perf_counter()
         drafts = self._draft.propose(act, k)
+        otrace.complete("spec.draft", t_draft, time.perf_counter(),
+                        slots=len(act), k=k)
         tokens = np.full((B, k + 1), self.pad_id, np.int32)
         positions = np.full((B, k + 1), INVALID_POS, np.int32)
         segs = np.full((B, k + 1), -1, np.int32)
@@ -1030,11 +1096,16 @@ class PagedGroupEngine:
         if n_fresh:
             self.caches = self._invalidate(self.caches,
                                            jnp.asarray(fresh_pages))
+        t_verify = time.perf_counter()
         ctoks, clps, count, self.caches = self._verify(
             self.params, self.caches, self.logits, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(segs), jnp.asarray(wslots),
             jnp.asarray(self._ptab), jnp.asarray(keys), jnp.asarray(folds),
             jnp.asarray(fresh_m), jnp.asarray(drafts))
+        # host-side dispatch only — the verify block's device time (and
+        # its one buffered readback) lands inside the spec.commit span
+        otrace.complete("spec.verify", t_verify, time.perf_counter(),
+                        slots=len(act))
         self._commit_spec_rows(act, ctoks, clps, count)
         return True
 
@@ -1045,6 +1116,8 @@ class PagedGroupEngine:
         After the buffered drain the walk touches only host numpy."""
         from repro.spec.sampler import truncate_commit
         k = self.spec_k
+        t_commit = time.perf_counter()
+        g0 = self.generated_tokens
         ctoks, clps, count = self._drain_verify(ctoks, clps, count)
         step = self.sched.tick()
         self.decode_steps += 1
@@ -1076,6 +1149,12 @@ class PagedGroupEngine:
                 # speculative pages past the committed-and-fed frontier
                 # hold only rejected drafts — roll them back
                 self._rollback_row(s, row, len(row.toks) - 2)
+        committed = self.generated_tokens - g0
+        otrace.complete("spec.commit", t_commit, time.perf_counter(),
+                        slots=len(act), tokens=committed)
+        self._m_drafted.add(k * len(act))
+        self._m_accepted.add(max(0, committed - len(act)))
+        self._push_block_metrics()
 
     # -- standalone serving -------------------------------------------------
 

@@ -31,6 +31,7 @@ from repro.core.onpolicy import OnPolicyMonitor
 from repro.core.queue import RolloutGroup, RolloutQueue
 from repro.core.spa import PAD, pack_plain, pack_spa
 from repro.core.trimodel import TriModelState
+from repro.obs import trace as otrace
 from repro.optim.accumulate import GradAccumulator
 from repro.rl.grpo import (MicroBatch, group_advantages, make_apply_update,
                            make_grad_step, make_grad_step_captured)
@@ -180,14 +181,20 @@ class PeriodicAsyncScheduler:
             else:
                 self.recomputed_micro_steps += 1
                 step = self.grad_step
-            grads, metrics = step(self.tri.policy, self.tri.old,
-                                  self.tri.ref, mb)
-            # repro: allow(host-sync): trainer-side busy-time measurement
-            # barrier (paper Table 7 timing); not a decode path
-            jax.block_until_ready(jax.tree.leaves(grads)[0])
-            acc.add(grads, weight)
+            with otrace.span("train.grad_step",
+                             captured=mb.logp_behavior is not None):
+                grads, metrics = step(self.tri.policy, self.tri.old,
+                                      self.tri.ref, mb)
+                # repro: allow(host-sync): trainer-side busy-time measurement
+                # barrier (paper Table 7 timing); not a decode path
+                jax.block_until_ready(jax.tree.leaves(grads)[0])
+                acc.add(grads, weight)
             tokens += int((np.asarray(mb.tokens) != PAD).sum())
-        self._train_busy += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self._train_busy += t1 - t0
+        # the span reuses the busy stopwatch's own endpoints, so the
+        # analyzer's train_time reproduces IterationStats.train_time
+        otrace.complete("train.group", t0, t1, uid=group.uid, tokens=tokens)
         return tokens
 
     def _finish_iteration(self, acc: GradAccumulator) -> None:
@@ -199,7 +206,9 @@ class PeriodicAsyncScheduler:
         # iteration
         jax.block_until_ready(jax.tree.leaves(new_params)[0])
         self.tri.apply_update(new_params, new_opt)   # line 11
-        self._train_busy += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self._train_busy += t1 - t0
+        otrace.complete("train.update", t0, t1, version=self.tri.version)
         # overlap: start streaming the NEW version's buckets to the pool's
         # back buffers the moment the update materialises — the wire time
         # hides under the iteration tail instead of extending the next
@@ -227,8 +236,10 @@ class PeriodicAsyncScheduler:
             # (a new submission registers pending groups) and before the
             # weights move — also guarantees paged engines are quiescent
             # for their deferred flips
-            self.queue.wait_empty()
-        submit()
+            with otrace.span("boundary.drain"):
+                self.queue.wait_empty()
+        with otrace.span("boundary.submit"):
+            submit()
         flipped = self.transfer.ensure(self.tri.policy, self.tri.version)
         # Algorithm 1 line 10 at the BOUNDARY, before training: old <-
         # policy == the weights just flipped to the pool, so old-policy
@@ -279,6 +290,7 @@ class PeriodicAsyncScheduler:
             for t in range(num_iterations):
                 it_start = time.perf_counter()
                 busy0 = pool.busy_time
+                engine0 = pool.engine_stats()
                 self._train_busy = 0.0
                 acc = GradAccumulator()
                 rewards_seen: List[float] = []
@@ -330,6 +342,18 @@ class PeriodicAsyncScheduler:
 
                 self._finish_iteration(acc)
                 wall = time.perf_counter() - it_start
+                otrace.complete("iteration", it_start, it_start + wall,
+                                iteration=start + t, mode=mode)
+                # per-iteration engine-stat deltas (spec acceptance, prefix
+                # hit rate, page reclamation) surfaced through the same
+                # metrics path as sync_gap — zero when no paged engine runs
+                engine1 = pool.engine_stats()
+                d = {k: engine1[k] - engine0[k] for k in engine1}
+                spec_acceptance = (d["accepted_tokens"] / d["drafted_tokens"]
+                                   if d["drafted_tokens"] else 0.0)
+                prefix_probes = d["prefix_hit_pages"] + d["prefix_miss_pages"]
+                prefix_hit_rate = (d["prefix_hit_pages"] / prefix_probes
+                                   if prefix_probes else 0.0)
                 stats = IterationStats(
                     iteration=start + t, wall_time=wall,
                     # producer busy-time delta over this iteration — in
@@ -349,7 +373,10 @@ class PeriodicAsyncScheduler:
                     max_staleness=self.monitor.max_staleness_seen,
                     # boundary sync-gap: time the pool sat idle waiting for
                     # this iteration's weight flip (weight-plane barrier)
-                    metrics={"sync_gap": self.transfer.last_gap})
+                    metrics={"sync_gap": self.transfer.last_gap,
+                             "spec_acceptance": spec_acceptance,
+                             "prefix_hit_rate": prefix_hit_rate,
+                             "pages_reclaimed": d["reclaimed_pages"]})
                 self.history.append(stats)
                 consumed_upto = t + 1
         except BaseException:

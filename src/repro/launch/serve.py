@@ -37,6 +37,7 @@ from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.data.tasks import ArithmeticTask
 from repro.data.tokenizer import Tokenizer
 from repro.models import init
+from repro.obs import trace as otrace
 from repro.rl.rollout import Sampler
 
 
@@ -146,12 +147,21 @@ class RequestDriver:
             def deliver(row_idx: int, token_id: int) -> None:
                 r.tokens.append(int(token_id))
                 r.token_t.append(now())
+                # lifecycle instant per committed token (serving only —
+                # fires from the engine's drain, already off the hot tier)
+                otrace.instant("request.token", rid=r.rid)
             return deliver
 
         while pending or not self.eng.idle:
             while pending and pending[0].arrival <= now():
                 r = pending.popleft()
                 r.submit_t = now()
+                # async span: opens at submit, closes (possibly from the
+                # completion sweep below) when the request finishes; the
+                # driver-clock offsets let the analyzer walk TTFT back to
+                # the open-loop arrival, queueing included
+                otrace.begin("request", uid=r.rid, rid=r.rid,
+                             arrival=r.arrival, submit=r.submit_t)
                 handles[r.rid] = self.eng.submit(
                     r.prompt, jax.random.fold_in(key, r.rid),
                     max_new=r.max_new, on_token=sink(r))
@@ -163,6 +173,8 @@ class RequestDriver:
             h = handles[r.rid]
             h.result(timeout=0)       # completion check (raises if not)
             r.done_t = r.token_t[-1] if r.token_t else t_end
+            otrace.end("request", uid=r.rid, rid=r.rid, done=r.done_t,
+                       tokens=len(r.tokens))
             # the committed tokens are already host-side (the same arrays
             # the RolloutBatch was assembled from) — no device readback
             # needed for the streamed==final identity check
@@ -397,8 +409,25 @@ def main(argv: Optional[list] = None) -> None:
                          "through the radix prefix cache (suffix-only "
                          "prefill into private pages)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace of the run to this "
+                         "path (request lifecycle, drain blocks, spec "
+                         "steps); inspect with `repro-trace report`")
     args = ap.parse_args(argv)
+    if not args.trace:
+        _cli_run(args)
+        return
+    # tracing wraps the whole run so every early-return path still exports
+    otrace.install(process_name="repro-serve")
+    try:
+        _cli_run(args)
+    finally:
+        otrace.export(args.trace)
+        otrace.uninstall()
+        print(f"trace written to {args.trace}")
 
+
+def _cli_run(args) -> None:
     cfg = reduced_config(get_config(args.arch))
     tok = Tokenizer(cfg.vocab_size)
     task = ArithmeticTask(seed=args.seed)

@@ -29,6 +29,7 @@ from repro.data.loader import PromptLoader
 from repro.data.tasks import ArithmeticTask
 from repro.data.tokenizer import Tokenizer
 from repro.models import init
+from repro.obs import trace as otrace
 from repro.rl.reward import RuleBasedReward
 from repro.rl.rollout import Sampler
 from repro.transfer.service import WeightTransferService
@@ -192,6 +193,11 @@ def main() -> None:
                     help="use the full (non-reduced) config — dry-run scale")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace of the pipeline to "
+                         "this path (iterations, producer busy spans, train "
+                         "steps, weight-plane buckets); analyze with "
+                         "`repro-trace report`")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -213,7 +219,10 @@ def main() -> None:
         transfer_overlap=not args.no_transfer_overlap,
         transfer_bucket_bytes=args.transfer_bucket_bytes,
         transfer_wire_dtype=args.transfer_wire_dtype,
-        transfer_pallas_cast=args.transfer_pallas_cast, seed=args.seed)
+        transfer_pallas_cast=args.transfer_pallas_cast, trace=args.trace,
+        seed=args.seed)
+    if rl.trace:
+        otrace.install(process_name="repro-train")
 
     from repro.sharding.specs import set_profile
     set_profile(args.profile)
@@ -228,12 +237,26 @@ def main() -> None:
           f"{args.iterations} iterations, {total_tokens} tokens, "
           f"{wall:.1f}s wall, TPSPD={total_tokens / wall:.1f}")
     for s in history:
+        m = s.metrics or {}
+        extra = ""
+        if "sync_gap" in m:
+            extra += f" gap={m['sync_gap'] * 1e3:.0f}ms"
+        if m.get("spec_acceptance"):
+            extra += f" accept={m['spec_acceptance']:.2f}"
+        if m.get("prefix_hit_rate"):
+            extra += f" prefix_hit={m['prefix_hit_rate']:.2f}"
+        if m.get("pages_reclaimed"):
+            extra += f" reclaimed={m['pages_reclaimed']}"
         print(f"  iter {s.iteration}: wall={s.wall_time:.2f}s "
               f"tokens={s.trained_tokens} reward={s.reward_mean:.3f} "
-              f"staleness={s.max_staleness}")
+              f"staleness={s.max_staleness}{extra}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump([s.__dict__ for s in history], f, indent=1, default=str)
+    if rl.trace:
+        otrace.export(rl.trace)
+        otrace.uninstall()
+        print(f"trace written to {rl.trace}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,241 @@
+"""Bubble/overlap analyzer over exported traces (DESIGN.md §Observability).
+
+Ingests a Chrome trace-event JSON produced by :mod:`repro.obs.trace` and
+derives, per scheduler iteration:
+
+* ``infer_time`` / ``train_time`` / ``sync_gap`` — reproduced from spans
+  alone (cross-checked against ``IterationStats`` in tests: the spans
+  reuse the pipeline's own clock reads, so the numbers agree to within
+  tolerance, not by construction-from-the-same-variable).
+* ``bubble_fraction`` — mean stage-idle fraction over the iteration:
+  ``1 - (|P| + |C|) / (2 * wall)`` where ``P`` is the union of producer
+  busy intervals (any instance busy) and ``C`` the union of consumer
+  (train) intervals, both clipped to the iteration window. A perfectly
+  serial sync iteration scores 0.5 (each stage idles while the other
+  works); a perfectly overlapped async iteration with balanced stages
+  scores ~0.
+* ``overlap_efficiency`` — ``|P ∩ C| / min(|P|, |C|)``: how much of the
+  smaller stage is hidden under the larger one (sync ≈ 0, async → 1).
+
+Serving traces additionally yield TTFT/TPOT percentiles from request
+lifecycle events (``request`` begin/end + ``request.token`` instants),
+comparable to ``launch/serve.py``'s ``compute_latency_metrics``.
+
+Event names consumed (the span taxonomy is documented in DESIGN.md):
+``iteration``, ``producer.busy`` (attr ``busy`` = charged seconds),
+``train.group``, ``train.update``, ``transfer.ensure`` (attr ``gap``),
+``request`` (args ``rid``/``arrival``/``submit``), ``request.token``.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+Interval = Tuple[float, float]
+
+_CONSUMER_SPANS = ("train.group", "train.update")
+
+
+def load_trace(path: str) -> List[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return doc["traceEvents"] if isinstance(doc, dict) else doc
+
+
+def _merge(intervals: Sequence[Interval]) -> List[Interval]:
+    """Union of intervals as a sorted disjoint list."""
+    out: List[Interval] = []
+    for lo, hi in sorted(i for i in intervals if i[1] > i[0]):
+        if out and lo <= out[-1][1]:
+            if hi > out[-1][1]:
+                out[-1] = (out[-1][0], hi)
+        else:
+            out.append((lo, hi))
+    return out
+
+
+def _total(intervals: Sequence[Interval]) -> float:
+    return sum(hi - lo for lo, hi in intervals)
+
+
+def _clip(intervals: Sequence[Interval], lo: float, hi: float) -> List[Interval]:
+    return [(max(a, lo), min(b, hi))
+            for a, b in intervals if b > lo and a < hi]
+
+
+def _intersect(a: Sequence[Interval], b: Sequence[Interval]) -> List[Interval]:
+    """Intersection of two disjoint sorted interval lists."""
+    out: List[Interval] = []
+    i = j = 0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            out.append((lo, hi))
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return out
+
+
+def _x_events(events: Sequence[dict], name: str) -> List[dict]:
+    return [e for e in events
+            if e.get("ph") == "X" and e.get("name") == name]
+
+
+def _span_interval(e: dict) -> Interval:
+    return (e["ts"] / 1e6, (e["ts"] + e.get("dur", 0.0)) / 1e6)
+
+
+def _mid(e: dict) -> float:
+    return (e["ts"] + e.get("dur", 0.0) / 2.0) / 1e6
+
+
+def analyze_iterations(events: Sequence[dict]) -> List[dict]:
+    iters = sorted(_x_events(events, "iteration"), key=lambda e: e["ts"])
+    producers = _x_events(events, "producer.busy")
+    consumers = [e for n in _CONSUMER_SPANS for e in _x_events(events, n)]
+    ensures = _x_events(events, "transfer.ensure")
+
+    rows: List[dict] = []
+    for it in iters:
+        lo, hi = _span_interval(it)
+        wall = hi - lo
+        if wall <= 0:
+            continue
+        # events belong to the iteration containing their midpoint;
+        # intervals are clipped to the window for occupancy math
+        pev = [e for e in producers if lo <= _mid(e) < hi]
+        cev = [e for e in consumers if lo <= _mid(e) < hi]
+        gaps = [e for e in ensures if lo <= _mid(e) < hi]
+        p_union = _merge(_clip([_span_interval(e) for e in pev], lo, hi))
+        c_union = _merge(_clip([_span_interval(e) for e in cev], lo, hi))
+        p_occ = _total(p_union)
+        c_occ = _total(c_union)
+        overlap = _total(_intersect(p_union, c_union))
+        # infer_time sums the *charged* busy seconds (attr set by the
+        # deferred clock), which for the paged path differs from the
+        # span's wall extent (the drive loop waits on the engine lock)
+        infer = sum(e.get("args", {}).get("busy",
+                                          e.get("dur", 0.0) / 1e6)
+                    for e in pev)
+        train = sum(e.get("dur", 0.0) for e in cev) / 1e6
+        sync_gap = sum(e.get("args", {}).get("gap", e.get("dur", 0.0) / 1e6)
+                       for e in gaps)
+        denom = min(p_occ, c_occ)
+        rows.append({
+            "iteration": it.get("args", {}).get("iteration"),
+            "mode": it.get("args", {}).get("mode"),
+            "wall_s": wall,
+            "infer_time_s": infer,
+            "train_time_s": train,
+            "sync_gap_s": sync_gap,
+            "producer_occupancy_s": p_occ,
+            "consumer_occupancy_s": c_occ,
+            "overlap_s": overlap,
+            "bubble_fraction": 1.0 - (p_occ + c_occ) / (2.0 * wall),
+            "overlap_efficiency": (overlap / denom) if denom > 0 else 0.0,
+        })
+    return rows
+
+
+def analyze_serving(events: Sequence[dict]) -> Optional[dict]:
+    begins = {e["args"]["rid"]: e for e in events
+              if e.get("ph") == "b" and e.get("name") == "request"
+              and "rid" in e.get("args", {})}
+    if not begins:
+        return None
+    tokens: Dict[object, List[float]] = {}
+    for e in events:
+        if e.get("ph") == "i" and e.get("name") == "request.token":
+            rid = e.get("args", {}).get("rid")
+            tokens.setdefault(rid, []).append(e["ts"] / 1e6)
+    ttfts: List[float] = []
+    tpots: List[float] = []
+    for rid, b in begins.items():
+        ts = sorted(tokens.get(rid, []))
+        if not ts:
+            continue
+        args = b.get("args", {})
+        # the begin event fires at submit; walk it back to the request's
+        # open-loop arrival using the driver-clock offsets it carries, so
+        # TTFT includes queueing delay exactly as ServedRequest.ttft does
+        queue_wait = args.get("submit", 0.0) - args.get("arrival", 0.0)
+        arrival_ts = b["ts"] / 1e6 - queue_wait
+        ttfts.append(ts[0] - arrival_ts)
+        if len(ts) > 1:
+            tpots.append((ts[-1] - ts[0]) / (len(ts) - 1))
+    if not ttfts:
+        return None
+
+    def pct(vals: List[float], q: float) -> float:
+        s = sorted(vals)
+        return s[min(len(s) - 1, int(q * len(s)))]
+
+    out = {"num_requests": len(ttfts),
+           "ttft_p50_s": pct(ttfts, 0.50), "ttft_p99_s": pct(ttfts, 0.99),
+           "ttft_mean_s": sum(ttfts) / len(ttfts)}
+    if tpots:
+        out.update({"tpot_p50_s": pct(tpots, 0.50),
+                    "tpot_p99_s": pct(tpots, 0.99)})
+    return out
+
+
+def analyze(events: Sequence[dict]) -> dict:
+    rows = analyze_iterations(events)
+    report: dict = {"iterations": rows}
+    if rows:
+        n = len(rows)
+        report["summary"] = {
+            "iterations": n,
+            "mode": rows[0]["mode"],
+            "wall_s": sum(r["wall_s"] for r in rows),
+            "infer_time_s": sum(r["infer_time_s"] for r in rows),
+            "train_time_s": sum(r["train_time_s"] for r in rows),
+            "sync_gap_s": sum(r["sync_gap_s"] for r in rows),
+            "bubble_fraction":
+                sum(r["bubble_fraction"] for r in rows) / n,
+            "overlap_efficiency":
+                sum(r["overlap_efficiency"] for r in rows) / n,
+        }
+    serving = analyze_serving(events)
+    if serving is not None:
+        report["serving"] = serving
+    return report
+
+
+def analyze_file(path: str) -> dict:
+    return analyze(load_trace(path))
+
+
+def render(report: dict) -> str:
+    lines: List[str] = []
+    rows = report.get("iterations", [])
+    if rows:
+        lines.append("iter  wall(s)  infer(s)  train(s)  gap(ms)  "
+                     "bubble  overlap")
+        for r in rows:
+            lines.append(
+                f"{str(r['iteration']):>4}  {r['wall_s']:7.3f}  "
+                f"{r['infer_time_s']:8.3f}  {r['train_time_s']:8.3f}  "
+                f"{r['sync_gap_s'] * 1e3:7.1f}  "
+                f"{r['bubble_fraction']:6.3f}  "
+                f"{r['overlap_efficiency']:7.3f}")
+        s = report["summary"]
+        lines.append(
+            f"mean[mode={s['mode']}]: bubble={s['bubble_fraction']:.3f} "
+            f"overlap={s['overlap_efficiency']:.3f} "
+            f"infer={s['infer_time_s']:.3f}s train={s['train_time_s']:.3f}s "
+            f"gap={s['sync_gap_s'] * 1e3:.1f}ms")
+    serving = report.get("serving")
+    if serving:
+        lines.append(
+            f"serving: n={serving['num_requests']} "
+            f"ttft_p50={serving['ttft_p50_s'] * 1e3:.1f}ms "
+            f"ttft_p99={serving['ttft_p99_s'] * 1e3:.1f}ms"
+            + (f" tpot_p50={serving['tpot_p50_s'] * 1e3:.2f}ms"
+               if "tpot_p50_s" in serving else ""))
+    if not lines:
+        lines.append("trace contains no iteration or serving events")
+    return "\n".join(lines)

@@ -1,0 +1,63 @@
+"""``repro-trace`` — bubble/overlap reports over exported traces.
+
+    repro-trace report trace.json [--json out.json]
+    repro-trace compare sync.json async.json
+
+``report`` prints the per-iteration bubble/overlap table (and serving
+latency percentiles when request events are present). ``compare``
+asserts the paper's timeline claim on two traces of the same workload:
+the async trace's mean bubble fraction must be strictly below the sync
+trace's (exit 1 otherwise) — CI runs it on the smoke traces.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.analyze import analyze_file, render
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro-trace")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rep = sub.add_parser("report", help="per-iteration bubble/overlap table")
+    rep.add_argument("trace")
+    rep.add_argument("--json", dest="json_out", default=None,
+                     help="also write the full report as JSON")
+
+    cmp_ = sub.add_parser(
+        "compare", help="assert bubble(async) < bubble(sync)")
+    cmp_.add_argument("sync_trace")
+    cmp_.add_argument("async_trace")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "report":
+        report = analyze_file(args.trace)
+        print(render(report))
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(report, f, indent=1)
+        return 0
+
+    sync_rep = analyze_file(args.sync_trace)
+    async_rep = analyze_file(args.async_trace)
+    try:
+        bs = sync_rep["summary"]["bubble_fraction"]
+        ba = async_rep["summary"]["bubble_fraction"]
+    except KeyError:
+        print("compare: traces missing iteration events", file=sys.stderr)
+        return 1
+    print(f"bubble sync={bs:.3f} async={ba:.3f}")
+    if not ba < bs:
+        print("FAIL: async bubble fraction is not below sync",
+              file=sys.stderr)
+        return 1
+    print("OK: async bubble fraction strictly below sync")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

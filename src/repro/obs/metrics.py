@@ -1,0 +1,128 @@
+"""Metrics registry (DESIGN.md §Observability).
+
+A process-wide registry of named counters, gauges, and histograms fed by
+the engines and the weight-plane — the scalar complement to the trace
+timeline: spec acceptance, prefix hit/miss/evict, pages live/reclaimed,
+drain blocks, wire bytes per bucket.
+
+Hot-tier discipline: call sites cache the metric object once (engine
+``__init__``) and update it at *block* granularity (per drain block, per
+bucket), never per token — each update is one small-lock add, always on,
+cheap enough to leave enabled (the <2% disabled-overhead budget is
+measured by table10).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Union
+
+
+class Counter:
+    """Monotonic accumulator."""
+    __slots__ = ("_lock", "_value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def add(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+    __slots__ = ("_lock", "_value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = v
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Histogram:
+    """Stores observations; snapshot() summarises count/sum/min/max and
+    p50/p99 (exact — sample volume here is per-bucket / per-block, not
+    per-token, so keeping the values is fine)."""
+    __slots__ = ("_lock", "_values")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._values: List[float] = []
+
+    def observe(self, v: float) -> None:
+        with self._lock:
+            self._values.append(v)
+
+    def summary(self) -> Dict[str, float]:
+        with self._lock:
+            vals = sorted(self._values)
+        if not vals:
+            return {"count": 0, "sum": 0.0}
+        n = len(vals)
+        return {"count": n, "sum": sum(vals), "min": vals[0],
+                "max": vals[-1], "p50": vals[n // 2],
+                "p99": vals[min(n - 1, int(n * 0.99))]}
+
+
+Metric = Union[Counter, Gauge, Histogram]
+
+
+class MetricsRegistry:
+    """Named get-or-create metric store. Creation takes the registry
+    lock; updates only take the metric's own lock."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, Metric] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            with self._lock:
+                m = self._metrics.setdefault(name, cls())
+        assert isinstance(m, cls), \
+            f"metric {name!r} already registered as {type(m).__name__}"
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            items = list(self._metrics.items())
+        out: Dict[str, object] = {}
+        for name, m in items:
+            out[name] = m.summary() if isinstance(m, Histogram) else m.value
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+_default = MetricsRegistry()
+
+
+def metrics() -> MetricsRegistry:
+    """The process-wide default registry."""
+    return _default

@@ -1,0 +1,267 @@
+"""Thread-aware tracing plane (DESIGN.md §Observability).
+
+The pipeline's whole claim is a *timeline* claim — periodic asynchrony
+overlaps the producer (rollout pool) and consumer (trainer) stages — so
+this module records spans on every stage and exports them as Chrome
+trace-event JSON, viewable directly in Perfetto (ui.perfetto.dev).
+
+Design constraints, in priority order:
+
+* **Near-zero overhead when disabled.** Instrumentation sites call the
+  module-level ``span()``/``complete()``/``instant()`` facade; with no
+  tracer installed these are one global load + a ``None`` check (and
+  ``span()`` returns a shared no-op context manager). Nothing allocates.
+* **No clock of its own on the hot tier.** Span timestamps reuse the
+  clock reads the pipeline already takes (the deferred busy-settle
+  clock, the boundary stopwatches) via ``complete(name, t0, t1)``; the
+  tracer never calls ``jax.block_until_ready`` and adds zero host syncs
+  to the dispatch stream (gated by ``repro-check --forbid-hot`` and the
+  obs-discipline checker).
+* **Lock-cheap under threads.** Every thread appends to its own buffer
+  (``threading.local``); the tracer lock is taken once per thread at
+  first use and once at export, never per event.
+
+Event model (Chrome trace-event phases):
+
+* ``span("name", **attrs)`` — a ``with``-scoped complete ("X") event on
+  the calling thread's track.
+* ``complete(name, t0, t1, **attrs)`` — a retro-recorded "X" event with
+  explicit ``time.perf_counter()`` endpoints (the deferred-clock path);
+  ``track=`` pins it to a stable virtual track (e.g. one per producer
+  instance) instead of the emitting thread.
+* ``begin(name, uid)`` / ``end(name, uid)`` — async ("b"/"e") events for
+  spans that start and finish on different threads (serving request
+  lifecycle).
+* ``instant(name)`` / ``counter(name, value)`` — "i" point events and
+  "C" counter tracks (pages live, queue depth).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class _NullSpan:
+    """Shared no-op context manager returned by ``span()`` when tracing
+    is disabled — the entire disabled-path cost of a ``with`` site."""
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def set(self, **attrs) -> "_NullSpan":
+        return self
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "name", "attrs", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self) -> "_Span":
+        self._t0 = time.perf_counter()
+        return self
+
+    def set(self, **attrs) -> "_Span":
+        self.attrs.update(attrs)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        tr = self._tracer
+        t1 = time.perf_counter()
+        tr._emit(("X", self.name, tr._ts(self._t0),
+                  (t1 - self._t0) * 1e6, None, self.attrs))
+        return False
+
+
+class Tracer:
+    """Collects trace events into per-thread buffers; ``export`` writes
+    the merged Chrome trace-event JSON."""
+
+    def __init__(self, process_name: str = "repro"):
+        self.process_name = process_name
+        self._epoch = time.perf_counter()
+        self._lock = threading.Lock()
+        # (thread_ident, thread_name, event list) per writer thread
+        self._buffers: List[Tuple[int, str, list]] = []
+        self._local = threading.local()
+        # virtual tracks: stable synthetic tids for events whose natural
+        # home is a logical lane (producer instance) rather than the
+        # emitting thread (settle threads are one-shot)
+        self._tracks: Dict[str, int] = {}
+        self._next_track = 1 << 20
+
+    # -- clock ----------------------------------------------------------
+    def _ts(self, t: float) -> float:
+        return (t - self._epoch) * 1e6  # perf_counter -> trace microseconds
+
+    # -- per-thread buffers ---------------------------------------------
+    def _buf(self) -> list:
+        buf = getattr(self._local, "buf", None)
+        if buf is None:
+            buf = []
+            th = threading.current_thread()
+            with self._lock:
+                self._buffers.append((th.ident or 0, th.name, buf))
+            self._local.buf = buf
+        return buf
+
+    def _emit(self, ev: tuple) -> None:
+        self._buf().append(ev)
+
+    def track_tid(self, track: str) -> int:
+        tid = self._tracks.get(track)
+        if tid is None:
+            with self._lock:
+                tid = self._tracks.setdefault(
+                    track, self._next_track + len(self._tracks))
+        return tid
+
+    # -- recording API --------------------------------------------------
+    def span(self, name: str, **attrs) -> _Span:
+        return _Span(self, name, attrs)
+
+    def complete(self, name: str, t0: float, t1: float,
+                 track: Optional[str] = None, **attrs) -> None:
+        """Retro-record a finished span from two existing perf_counter
+        reads — the deferred-clock path: no new timestamps are invented
+        and nothing blocks."""
+        tid = None if track is None else self.track_tid(track)
+        self._emit(("X", name, self._ts(t0), (t1 - t0) * 1e6, tid, attrs))
+
+    def begin(self, name: str, uid: Any = None, **attrs) -> None:
+        t = time.perf_counter()
+        self._emit(("b", name, self._ts(t), uid if uid is not None else name,
+                    None, attrs))
+
+    def end(self, name: str, uid: Any = None, **attrs) -> None:
+        t = time.perf_counter()
+        self._emit(("e", name, self._ts(t), uid if uid is not None else name,
+                    None, attrs))
+
+    def instant(self, name: str, **attrs) -> None:
+        t = time.perf_counter()
+        self._emit(("i", name, self._ts(t), None, None, attrs))
+
+    def counter(self, name: str, value: float) -> None:
+        t = time.perf_counter()
+        self._emit(("C", name, self._ts(t), None, None, {"value": value}))
+
+    # -- export ---------------------------------------------------------
+    def events(self) -> List[dict]:
+        """Merged Chrome trace-event dicts (also the analyzer's input)."""
+        pid = 0
+        out: List[dict] = [{
+            "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+            "args": {"name": self.process_name}}]
+        with self._lock:
+            buffers = [(tid, name, list(buf))
+                       for tid, name, buf in self._buffers]
+            tracks = dict(self._tracks)
+        for tid, name, _ in buffers:
+            out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                        "tid": tid, "args": {"name": name}})
+        for track, tid in tracks.items():
+            out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                        "tid": tid, "args": {"name": track}})
+        for tid, _, buf in buffers:
+            for ph, name, ts, x, etid, attrs in buf:
+                ev: Dict[str, Any] = {"ph": ph, "name": name, "pid": pid,
+                                      "tid": etid if etid is not None else tid,
+                                      "ts": ts}
+                if ph == "X":
+                    ev["dur"] = x
+                elif ph in ("b", "e"):
+                    ev["cat"] = "async"
+                    ev["id"] = str(x)
+                elif ph == "i":
+                    ev["s"] = "t"
+                if attrs:
+                    ev["args"] = dict(attrs)
+                out.append(ev)
+        out.sort(key=lambda e: e.get("ts", 0.0))
+        return out
+
+    def export(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.events(),
+                       "displayTimeUnit": "ms"}, f)
+        return path
+
+
+# -- module-level facade (what instrumentation sites import) ------------
+_active: Optional[Tracer] = None
+
+
+def install(process_name: str = "repro") -> Tracer:
+    """Install a fresh process-wide tracer and return it."""
+    global _active
+    _active = Tracer(process_name)
+    return _active
+
+
+def uninstall() -> None:
+    global _active
+    _active = None
+
+
+def get() -> Optional[Tracer]:
+    return _active
+
+
+def active() -> bool:
+    return _active is not None
+
+
+def span(name: str, **attrs):
+    t = _active
+    if t is None:
+        return _NULL_SPAN
+    return t.span(name, **attrs)
+
+
+def complete(name: str, t0: float, t1: float,
+             track: Optional[str] = None, **attrs) -> None:
+    t = _active
+    if t is not None:
+        t.complete(name, t0, t1, track=track, **attrs)
+
+
+def begin(name: str, uid: Any = None, **attrs) -> None:
+    t = _active
+    if t is not None:
+        t.begin(name, uid=uid, **attrs)
+
+
+def end(name: str, uid: Any = None, **attrs) -> None:
+    t = _active
+    if t is not None:
+        t.end(name, uid=uid, **attrs)
+
+
+def instant(name: str, **attrs) -> None:
+    t = _active
+    if t is not None:
+        t.instant(name, **attrs)
+
+
+def counter(name: str, value: float) -> None:
+    t = _active
+    if t is not None:
+        t.counter(name, value)
+
+
+def export(path: str) -> Optional[str]:
+    t = _active
+    return None if t is None else t.export(path)

@@ -39,6 +39,8 @@ from typing import List, Optional
 import jax
 import numpy as np
 
+from repro.obs import trace as otrace
+from repro.obs.metrics import metrics
 from repro.transfer.plan import (TransferPlan, build_plan, pack_bucket,
                                  unpack_bucket)
 
@@ -196,6 +198,9 @@ class WeightTransferService:  # repro: allow(lock-discipline): single in-flight 
         self.buckets_streamed = 0
         self.publishes: List[dict] = []
         self.gaps: List[dict] = []
+        # registry metrics, cached once (DESIGN.md §Observability)
+        self._m_wire_bytes = metrics().counter("transfer.wire_bytes")
+        self._m_bucket_bytes = metrics().histogram("transfer.bucket_bytes")
 
     # ------------------------------------------------------------------
     def _ensure_plan(self, params) -> TransferPlan:
@@ -222,26 +227,35 @@ class WeightTransferService:  # repro: allow(lock-discipline): single in-flight 
         instance lock held."""
         stores = [inst.store for inst in self.instances]
         try:
-            plan = self._ensure_plan(params)
-            leaves = jax.tree_util.tree_flatten(params)[0]  # plan leaf order
-            cast = self._cast_fn()
-            for store in stores:
-                store.begin(version, plan)
-            t0 = time.perf_counter()
-            for bucket in plan.buckets:
-                wire = pack_bucket(plan, leaves, bucket, cast_fn=cast)
-                if wire:
-                    # repro: allow(host-sync): wire barrier — a version
-                    # must not publish before its buckets land
-                    jax.block_until_ready(wire[-1])
-                if self.wire_latency:
-                    time.sleep(self.wire_latency)   # one broadcast per bucket
-                placed = unpack_bucket(plan, bucket, wire)
+            with otrace.span("transfer.stream", version=version) as sp:
+                plan = self._ensure_plan(params)
+                leaves = jax.tree_util.tree_flatten(params)[0]  # plan order
+                cast = self._cast_fn()
                 for store in stores:
-                    if store.deliver(bucket, placed) and not store.defer_flip:
-                        store.flip()
-                self.bytes_streamed += bucket.wire_bytes
-                self.buckets_streamed += 1
+                    store.begin(version, plan)
+                t0 = time.perf_counter()
+                for bucket in plan.buckets:
+                    with otrace.span("transfer.bucket", bid=bucket.bid,
+                                     wire_bytes=bucket.wire_bytes):
+                        wire = pack_bucket(plan, leaves, bucket, cast_fn=cast)
+                        if wire:
+                            # repro: allow(host-sync): wire barrier — a
+                            # version must not publish before its buckets
+                            # land
+                            jax.block_until_ready(wire[-1])
+                        if self.wire_latency:
+                            time.sleep(self.wire_latency)  # one per bucket
+                        placed = unpack_bucket(plan, bucket, wire)
+                        for store in stores:
+                            if (store.deliver(bucket, placed)
+                                    and not store.defer_flip):
+                                store.flip()
+                    self.bytes_streamed += bucket.wire_bytes
+                    self.buckets_streamed += 1
+                    self._m_wire_bytes.add(bucket.wire_bytes)
+                    self._m_bucket_bytes.observe(bucket.wire_bytes)
+                sp.set(buckets=len(plan.buckets),
+                       wire_bytes=plan.total_wire_bytes)
         except BaseException as exc:
             for store in stores:
                 store.fail(exc)
@@ -279,6 +293,7 @@ class WeightTransferService:  # repro: allow(lock-discipline): single in-flight 
             except BaseException as exc:        # surfaced by ensure()
                 self._pending_error = exc
 
+        otrace.instant("transfer.publish_async", version=version)
         self._pending_thread = threading.Thread(
             target=run, name=f"weight-plane-v{version}", daemon=True)
         self._pending_thread.start()
@@ -309,6 +324,8 @@ class WeightTransferService:  # repro: allow(lock-discipline): single in-flight 
         versions = [inst.store.version for inst in self.instances]
         if all(v == version for v in versions):
             self.gaps.append({"version": version, "gap": 0.0, "mode": "noop"})
+            otrace.complete("transfer.ensure", t0, time.perf_counter(),
+                            version=version, gap=0.0, mode="noop")
             return versions[0]
         if self._pending_version == version:
             self._join_pending()
@@ -327,8 +344,12 @@ class WeightTransferService:  # repro: allow(lock-discipline): single in-flight 
         assert all(v == version for v in versions), \
             f"weight-plane flip incomplete: stores at {versions}, " \
             f"boundary requires {version}"
-        self.gaps.append({"version": version,
-                          "gap": time.perf_counter() - t0, "mode": mode})
+        t1 = time.perf_counter()
+        self.gaps.append({"version": version, "gap": t1 - t0, "mode": mode})
+        # barrier span from the gap stopwatch's own endpoints, so the
+        # analyzer's sync-gap attribution equals metrics["sync_gap"]
+        otrace.complete("transfer.ensure", t0, t1, version=version,
+                        gap=t1 - t0, mode=mode)
         return versions[0]
 
     def drain(self) -> None:
