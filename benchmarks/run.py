@@ -52,7 +52,11 @@ def main() -> None:
                   "table6_pool": table6_cbatch.pool_mode,
                   "table7": table7_transfer.main,
                   "table8": table8_specdec.main,
-                  "table9": table9_serving.main,
+                  # serve_port=0 adds the live-ops rep: an OpsServer on an
+                  # ephemeral port is scraped mid-run and serves one SSE
+                  # request bitwise-identical to the in-process driver
+                  "table9": functools.partial(table9_serving.main,
+                                              serve_port=0),
                   "table10": table10_device_loop.main,
                   # traced sync-vs-async pipeline run: exports Perfetto
                   # traces to benchmarks/results/ and asserts the async

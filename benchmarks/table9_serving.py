@@ -95,7 +95,90 @@ def _traced_rep(cfg, params, prompts, arrivals, eng, trace_path: str):
     return serving
 
 
-def main(trace_path: str = "") -> dict:
+def _ops_rep(cfg, params, prompts, arrivals, eng, warm_ids, port: int):
+    """One extra warm rep observed end-to-end through the live ops plane
+    (DESIGN.md §Observability): a scrape thread hammers /metrics and
+    /status while the driver drains, then one request is served over the
+    socket.  Asserts the plane never lies — every mid-run scrape parses
+    as well-formed Prometheus text, counters are monotone across the
+    scrape series, the final registry deltas agree with the engine's own
+    stats delta, and the SSE-streamed tokens are bitwise-identical to
+    what the in-process driver produced for the same rid."""
+    import json
+    import threading
+    import urllib.request
+
+    from repro.launch.serve import serve_requests
+    from repro.obs.server import OpsServer, _sse_request, parse_prometheus_text
+
+    eng.reset_stats()
+    # PRNGKey(1) == PRNGKey(seed + 1) for seed 0: the driver's base key,
+    # so fold_in(key, rid) matches request-for-request
+    srv = OpsServer(engine=eng, key=jax.random.PRNGKey(1), port=port)
+    srv.start()
+
+    def get(path: str) -> str:
+        with urllib.request.urlopen(srv.url + path, timeout=30) as r:
+            assert r.status == 200, (path, r.status)
+            return r.read().decode()
+
+    scrapes: list[str] = []
+    statuses: list[dict] = []
+    stop = threading.Event()
+
+    def scrape_loop():
+        while not stop.is_set():
+            scrapes.append(get("/metrics"))
+            statuses.append(json.loads(get("/status")))
+            time.sleep(0.02)
+
+    stats0 = eng.stats_snapshot()
+    before = parse_prometheus_text(get("/metrics"))
+    th = threading.Thread(target=scrape_loop, name="table9-scrape")
+    th.start()
+    try:
+        _, metrics, _ = serve_requests(
+            cfg, prompts, max_prompt_len=LP, max_new=T, arrivals=arrivals,
+            params=params, engine=eng)
+    finally:
+        stop.set()
+        th.join(timeout=30)
+    after = parse_prometheus_text(get("/metrics"))
+    stats1 = eng.stats_snapshot()
+
+    # every mid-run scrape parsed (parse_prometheus_text raises on torn
+    # or malformed text); counters never move backwards
+    series = [before] + [parse_prometheus_text(s) for s in scrapes] + [after]
+    for prev, cur in zip(series, series[1:]):
+        for name, v in prev.items():
+            if name.endswith("_total") and name in cur:
+                assert cur[name] >= v, f"counter {name} went backwards"
+    # the scrape deltas are the engine's own deltas, not an approximation
+    for prom, key in (("repro_prefix_hit_pages_total", "prefix_hit_pages"),
+                      ("repro_prefix_miss_pages_total", "prefix_miss_pages")):
+        want = stats1[key] - stats0[key]
+        got = after.get(prom, 0.0) - before.get(prom, 0.0)
+        assert got == want, f"{prom} delta {got} != engine {key} delta {want}"
+    assert after["repro_paged_drain_blocks_total"] > \
+        before["repro_paged_drain_blocks_total"]
+    for st in statuses:
+        e = st["engine"]
+        assert e["pages_live"] >= 0 and e["pages_free"] >= 0
+        assert e["pages_live"] + e["pages_free"] == e["pages_total"]
+
+    # socket-served request == in-process driver output, bitwise
+    toks, done = _sse_request(
+        srv.url, {"prompt": [int(t) for t in prompts[0]],
+                  "rid": 0, "max_new": T})
+    assert done.get("verified"), "server-side stream verification failed"
+    assert toks == warm_ids[0], \
+        "socket-streamed tokens diverged from the in-process driver"
+    srv.stop()
+    return {"mid_run_scrapes": len(scrapes), "sse_tokens": len(toks),
+            "ttft_p50_s": metrics["ttft_p50_s"]}
+
+
+def main(trace_path: str = "", serve_port: int | None = None) -> dict:
     import dataclasses
     # reduced family config, scaled up enough that prefill FLOPs are
     # visible over per-step dispatch overhead (the regime the cache
@@ -140,6 +223,14 @@ def main(trace_path: str = "") -> dict:
              f"{serving.get('ttft_p50_s', 0.0) * 1e3:.0f}",
              "from request lifecycle spans, cross-checked vs driver")
         out["trace_serving"] = serving
+    if serve_port is not None:
+        ops = _ops_rep(cfg, params, prompts, arrivals, weng, warm_ids,
+                       serve_port)
+        emit("table9", "ops_mid_run_scrapes", f"{ops['mid_run_scrapes']}",
+             "well-formed /metrics+/status reads while the engine drained")
+        emit("table9", "ops_sse_tokens", f"{ops['sse_tokens']}",
+             "socket-streamed, bitwise-identical to the driver")
+        out["ops"] = ops
     save("table9_serving", out)
     return out
 
@@ -148,7 +239,10 @@ if __name__ == "__main__":
     import sys
     t0 = time.time()
     trace_path = ""
+    serve_port: int | None = None
     if "--trace" in sys.argv:
         trace_path = sys.argv[sys.argv.index("--trace") + 1]
-    main(trace_path=trace_path)
+    if "--serve-port" in sys.argv:
+        serve_port = int(sys.argv[sys.argv.index("--serve-port") + 1])
+    main(trace_path=trace_path, serve_port=serve_port)
     print(f"# table9 done in {time.time() - t0:.0f}s")

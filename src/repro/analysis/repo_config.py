@@ -43,6 +43,7 @@ THREADED_MODULES = [
     "core/queue.py",
     "core/generator.py",
     "core/paged.py",
+    "obs/server.py",
 ]
 
 # --- refcount-pairing -----------------------------------------------------

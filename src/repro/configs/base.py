@@ -413,4 +413,17 @@ class RLConfig:
     # pipeline's existing stopwatch reads, so enabling tracing adds no
     # device barriers; inspect with `repro-trace report <path>`.
     trace: str = ""
+    # Streaming trace export: write rotating JSONL segments
+    # (trace-NNNN.jsonl) into this directory instead of buffering the
+    # whole run in memory ("" = monolithic `trace` behaviour). Peak
+    # tracer memory is bounded at threads x flush batch regardless of
+    # run length; read back with `repro-trace report <dir>`.
+    trace_dir: str = ""
+    # Events per segment file before rotation (and the order of the
+    # bounded in-memory flush batch).
+    trace_segment_events: int = 8192
+    # Per-thread buffered events before a flush to the current segment —
+    # the crash-durability granularity: at most this many events per
+    # thread are lost to a hard kill.
+    trace_flush_events: int = 256
     seed: int = 0

@@ -168,6 +168,25 @@ class InferenceInstance:
                 self.settle_joins += 1
             th.join()
 
+    def status(self) -> dict:
+        """Live introspection for the ops plane: identity, weight-plane
+        version (atomic via the store), and the busy clock read under
+        its own lock — one consistent row of ``/status``'s per-instance
+        table."""
+        with self._busy_lock:
+            busy = self.busy_time
+            in_flight_settles = len(self._settles)
+        out = {"inst_id": self.inst_id,
+               "weight_version": self.store.version,
+               "busy_s": busy,
+               "in_flight_settles": in_flight_settles,
+               "mode": ("paged" if self.paged_engine is not None else
+                        "simulated" if self.scripted_fn is not None
+                        else "group")}
+        if self.paged_engine is not None:
+            out["engine"] = self.paged_engine.status_snapshot()
+        return out
+
     def _generate_group_paged(self, prompts: List[np.ndarray], key,
                               min_version: Optional[int] = None) -> tuple:
         """Token-level path: submit the group, then help drive the shared
@@ -264,6 +283,17 @@ class InferencePool:
                 for k, v in inst.paged_engine.stats_snapshot().items():
                     agg[k] += v
         return agg
+
+    def status(self) -> dict:
+        """Per-instance status rows + pool aggregate for ``/status``.
+        Does NOT flush the deferred busy clocks (that is a boundary
+        barrier) — a mid-iteration scrape reads the busy time charged so
+        far, which is exactly what "live" means here."""
+        rows = [inst.status() for inst in self.instances]
+        return {"num_instances": len(rows),
+                "token_level": self.token_level,
+                "instances": rows,
+                "busy_s": sum(r["busy_s"] for r in rows)}
 
     @property
     def busy_time(self) -> float:

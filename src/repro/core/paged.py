@@ -367,6 +367,31 @@ class PagedGroupEngine:
                 "prefix_evicted_pages": self.prefix_evicted_pages,
             }
 
+    def status_snapshot(self) -> dict:
+        """Live occupancy + counters for the ops plane's ``/status``
+        (obs/server.py), in ONE mutex hold so a concurrent drive thread
+        can never produce a torn multi-field view (pages_live consistent
+        with slots_active, peak consistent with min_free). Derived rates
+        are computed from the same hold."""
+        with self._mutex:
+            hit, miss = self.prefix_hit_pages, self.prefix_miss_pages
+            drafted, accepted = self.drafted_tokens, self.accepted_tokens
+            return {
+                "slots_total": self.sched.num_slots,
+                "slots_active": len(self.sched.active_slots()),
+                "pending_requests": self.sched.num_pending,
+                "pages_total": self.P - FIRST_PAGE,
+                "pages_live": self.alloc.num_live,
+                "pages_free": self.alloc.num_free,
+                "peak_pages_used": (self.P - FIRST_PAGE)
+                                   - self.alloc.min_free,
+                "decode_steps": self.decode_steps,
+                "generated_tokens": self.generated_tokens,
+                "reclaimed_pages": self.reclaimed_pages,
+                "prefix_hit_rate": hit / (hit + miss) if hit + miss else 0.0,
+                "spec_acceptance": accepted / drafted if drafted else 0.0,
+            }
+
     # -- page geometry ------------------------------------------------------
 
     def _n_total(self, max_new: int) -> int:
@@ -638,6 +663,10 @@ class PagedGroupEngine:
             self.decode_steps = 0
             self.generated_tokens = 0
             self.reclaimed_pages = 0
+            # registry high-water follows the local counter it diffs
+            # against — left stale it would push a NEGATIVE delta into
+            # the monotone registry counter on the next drain
+            self._pushed_reclaimed = 0
             self.alloc.min_free = self.alloc.num_free
             self.reset_spec_stats()
             self.reset_prefix_stats()

@@ -32,6 +32,7 @@ from repro.core.queue import RolloutGroup, RolloutQueue
 from repro.core.spa import PAD, pack_plain, pack_spa
 from repro.core.trimodel import TriModelState
 from repro.obs import trace as otrace
+from repro.obs.metrics import metrics
 from repro.optim.accumulate import GradAccumulator
 from repro.rl.grpo import (MicroBatch, group_advantages, make_apply_update,
                            make_grad_step, make_grad_step_captured)
@@ -119,6 +120,12 @@ class PeriodicAsyncScheduler:
         self._inflight: List = []
         self._key = None
         self._train_busy = 0.0
+        # registry metrics for the live ops plane (/metrics): cached
+        # handles, pushed once per iteration at the boundary
+        _m = metrics()
+        self._m_iteration = _m.gauge("scheduler.iteration")
+        self._m_trained_tokens = _m.counter("scheduler.trained_tokens")
+        self._m_tpspd = _m.gauge("scheduler.tpspd")
         # set when a run() unwound mid-iteration: gradients were half-
         # accumulated and the failed iteration's groups are partially
         # consumed, so re-entering run() cannot resume soundly — it would
@@ -251,6 +258,26 @@ class PeriodicAsyncScheduler:
         self.tri.refresh_old(expected_rollout_version=flipped)
 
     # ------------------------------------------------------------------
+    def status(self) -> dict:
+        """Live pipeline introspection for the ops plane (``/status`` via
+        ``launch/train.py --metrics-port``): iteration progress, policy
+        version, micro-step mix, and the pool's per-instance rows (each
+        snapshotted atomically by its owner). Safe to call from a scrape
+        thread mid-``run()`` — every field is a single read or delegated
+        to a lock-holding snapshot."""
+        out = {
+            "mode": self.rl.mode,
+            "iterations_completed": len(self.history),
+            "policy_version": self.tri.version,
+            "failed": self._failed,
+            "captured_micro_steps": self.captured_micro_steps,
+            "recomputed_micro_steps": self.recomputed_micro_steps,
+            "pool": self.generator.pool.status(),
+        }
+        if self.history:
+            out["last_iteration"] = dataclasses.asdict(self.history[-1])
+        return out
+
     def run(self, num_iterations: int, *, key=None) -> List[IterationStats]:
         """Run ``num_iterations`` and return THEIR stats (self.history keeps
         the full cumulative record across calls).
@@ -378,6 +405,9 @@ class PeriodicAsyncScheduler:
                              "prefix_hit_rate": prefix_hit_rate,
                              "pages_reclaimed": d["reclaimed_pages"]})
                 self.history.append(stats)
+                self._m_iteration.set(start + t + 1)
+                self._m_trained_tokens.add(trained_tokens)
+                self._m_tpspd.set(stats.tpspd)
                 consumed_upto = t + 1
         except BaseException:
             # mid-iteration unwind (producer put_error surfaced by

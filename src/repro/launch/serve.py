@@ -413,18 +413,37 @@ def main(argv: Optional[list] = None) -> None:
                     help="write a Chrome/Perfetto trace of the run to this "
                          "path (request lifecycle, drain blocks, spec "
                          "steps); inspect with `repro-trace report`")
+    ap.add_argument("--trace-dir", default="",
+                    help="streaming trace export: rotate JSONL segments "
+                         "into this directory (bounded tracer memory); "
+                         "analyze with `repro-trace report <dir>`")
+    ap.add_argument("--serve-port", type=int, default=None,
+                    help="boot the live ops front-end on this port "
+                         "(0 = ephemeral) and serve real socket requests: "
+                         "POST /v1/generate streams tokens via SSE, "
+                         "GET /metrics is Prometheus-scrapeable, "
+                         "/healthz + /status introspect the engine "
+                         "(obs/server.py; ctrl-C to stop)")
     args = ap.parse_args(argv)
-    if not args.trace:
+    if not (args.trace or args.trace_dir):
         _cli_run(args)
         return
-    # tracing wraps the whole run so every early-return path still exports
-    otrace.install(process_name="repro-serve")
+    # tracing wraps the whole run so every early-return (and crash) path
+    # still exports — flush-on-crash for serving runs
+    if args.trace_dir:
+        otrace.install(process_name="repro-serve", stream_dir=args.trace_dir)
+    else:
+        otrace.install(process_name="repro-serve")
     try:
         _cli_run(args)
     finally:
-        otrace.export(args.trace)
+        if args.trace_dir:
+            otrace.export()
+            print(f"trace segments written to {args.trace_dir}")
+        else:
+            otrace.export(args.trace)
+            print(f"trace written to {args.trace}")
         otrace.uninstall()
-        print(f"trace written to {args.trace}")
 
 
 def _cli_run(args) -> None:
@@ -439,6 +458,36 @@ def _cli_run(args) -> None:
             and not args.shared_system:
         raise SystemExit("--prefix-cache/--rate ride the paged engine; "
                          "add --engine paged (or --shared-system N)")
+
+    if args.serve_port is not None:
+        # the live ops front-end (DESIGN.md §Observability): real socket
+        # requests stream through the same paged engine + fold_in(key,
+        # rid) derivation as the in-process RequestDriver, so a served
+        # request is bitwise-identical to the driver path
+        from repro.obs.server import OpsServer
+        params = init(jax.random.PRNGKey(args.seed), cfg)
+        eng = build_paged_engine(
+            cfg, max_prompt_len=args.max_prompt_len, max_new=args.max_new,
+            num_slots=args.slots, page_size=args.page_size, seed=args.seed,
+            spec_k=spec_k, spec_draft=args.spec_draft,
+            prefix_cache=args.prefix_cache)
+        eng.set_params(params)
+        srv = OpsServer(engine=eng, key=jax.random.PRNGKey(args.seed + 1),
+                        port=args.serve_port)
+        srv.start()
+        print(f"serving {args.arch} on {srv.url}\n"
+              f"  POST {srv.url}/v1/generate "
+              f'{{"prompt": [1,2,3], "max_new": {args.max_new}}} (SSE)\n'
+              f"  GET  {srv.url}/metrics /healthz /status\n"
+              f"ctrl-C to stop")
+        try:
+            while True:
+                time.sleep(1.0)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            srv.stop()
+        return
 
     if args.shared_system:
         # shared-system-prompt scenario: the radix tree serves every

@@ -122,7 +122,7 @@ def build_pipeline(cfg, rl: RLConfig, *, seed: int = 0, prompt_pad: int = 0,
                    "tri": tri, "transfer": transfer}
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b", choices=ARCH_IDS)
     ap.add_argument("--mode", default="async",
@@ -198,7 +198,22 @@ def main() -> None:
                          "this path (iterations, producer busy spans, train "
                          "steps, weight-plane buckets); analyze with "
                          "`repro-trace report`")
-    args = ap.parse_args()
+    ap.add_argument("--trace-dir", default="",
+                    help="streaming trace export: rotate JSONL segments "
+                         "into this directory (bounded tracer memory; "
+                         "multi-hour-run safe); analyze with "
+                         "`repro-trace report <dir>`")
+    ap.add_argument("--trace-segment-events", type=int, default=8192,
+                    help="events per trace segment before rotation")
+    ap.add_argument("--trace-flush-events", type=int, default=256,
+                    help="per-thread buffered events before a segment "
+                         "flush (the crash-durability granularity)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve GET /metrics (Prometheus), /healthz and "
+                         "/status on this port for the duration of the run "
+                         "(0 = ephemeral; the ops plane, DESIGN.md "
+                         "§Observability)")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -220,16 +235,46 @@ def main() -> None:
         transfer_bucket_bytes=args.transfer_bucket_bytes,
         transfer_wire_dtype=args.transfer_wire_dtype,
         transfer_pallas_cast=args.transfer_pallas_cast, trace=args.trace,
+        trace_dir=args.trace_dir,
+        trace_segment_events=args.trace_segment_events,
+        trace_flush_events=args.trace_flush_events,
         seed=args.seed)
-    if rl.trace:
+    if rl.trace_dir:
+        otrace.install(process_name="repro-train", stream_dir=rl.trace_dir,
+                       flush_events=rl.trace_flush_events,
+                       segment_events=rl.trace_segment_events)
+    elif rl.trace:
         otrace.install(process_name="repro-train")
 
     from repro.sharding.specs import set_profile
     set_profile(args.profile)
     sched, _ = build_pipeline(cfg, rl, seed=args.seed,
                               prompt_pad=args.prompt_pad)
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs.server import OpsServer
+        server = OpsServer(status_fn=sched.status,
+                           port=args.metrics_port).start()
+        print(f"ops server on {server.url} "
+              f"(/metrics /healthz /status)")
     t0 = time.time()
-    history = sched.run(args.iterations)
+    try:
+        history = sched.run(args.iterations)
+    except BaseException:
+        # flush-on-crash: a mid-iteration failure must not lose the
+        # timeline — streamed segments flush to disk, a monolithic
+        # buffer exports what it has (the partial trace is exactly the
+        # evidence a post-mortem needs)
+        if rl.trace_dir:
+            otrace.export()
+            print(f"partial trace flushed to {rl.trace_dir}")
+        elif rl.trace:
+            otrace.export(rl.trace)
+            print(f"partial trace written to {rl.trace}")
+        otrace.uninstall()
+        if server is not None:
+            server.stop()
+        raise
     wall = time.time() - t0
 
     total_tokens = sum(s.trained_tokens for s in history)
@@ -253,7 +298,13 @@ def main() -> None:
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump([s.__dict__ for s in history], f, indent=1, default=str)
-    if rl.trace:
+    if server is not None:
+        server.stop()
+    if rl.trace_dir:
+        otrace.export()
+        otrace.uninstall()
+        print(f"trace segments written to {rl.trace_dir}")
+    elif rl.trace:
         otrace.export(rl.trace)
         otrace.uninstall()
         print(f"trace written to {rl.trace}")

@@ -28,7 +28,9 @@ Event names consumed (the span taxonomy is documented in DESIGN.md):
 """
 from __future__ import annotations
 
+import glob
 import json
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 Interval = Tuple[float, float]
@@ -36,7 +38,48 @@ Interval = Tuple[float, float]
 _CONSUMER_SPANS = ("train.group", "train.update")
 
 
+def _load_jsonl(path: str, final_segment: bool) -> List[dict]:
+    """One JSONL trace segment. A crash can truncate the LAST line of the
+    last segment mid-write; tolerate exactly that (drop it) and treat a
+    malformed line anywhere else as corruption."""
+    out: List[dict] = []
+    with open(path) as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            if final_segment and i == len(lines) - 1:
+                break
+            raise
+    return out
+
+
 def load_trace(path: str) -> List[dict]:
+    """Read a trace from any of its export formats into one event list:
+
+    * a monolithic Chrome-JSON file (``{"traceEvents": [...]}``),
+    * a single ``.jsonl`` segment, or
+    * a directory of rotating ``trace-NNNN.jsonl`` segments (streaming
+      export), merged in segment order and re-sorted by timestamp so the
+      result is indistinguishable from the monolithic export.
+    """
+    if os.path.isdir(path):
+        segs = sorted(glob.glob(os.path.join(path, "trace-*.jsonl")))
+        if not segs:
+            raise FileNotFoundError(f"no trace-*.jsonl segments in {path}")
+        events: List[dict] = []
+        for i, seg in enumerate(segs):
+            events.extend(_load_jsonl(seg, final_segment=(i == len(segs) - 1)))
+        events.sort(key=lambda e: e.get("ts", 0.0))
+        return events
+    if path.endswith(".jsonl"):
+        events = _load_jsonl(path, final_segment=True)
+        events.sort(key=lambda e: e.get("ts", 0.0))
+        return events
     with open(path) as f:
         doc = json.load(f)
     return doc["traceEvents"] if isinstance(doc, dict) else doc

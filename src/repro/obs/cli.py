@@ -1,13 +1,18 @@
 """``repro-trace`` — bubble/overlap reports over exported traces.
 
     repro-trace report trace.json [--json out.json]
-    repro-trace compare sync.json async.json
+    repro-trace report trace_dir/            # streaming JSONL segments
+    repro-trace compare sync.json async_dir/
 
 ``report`` prints the per-iteration bubble/overlap table (and serving
 latency percentiles when request events are present). ``compare``
 asserts the paper's timeline claim on two traces of the same workload:
 the async trace's mean bubble fraction must be strictly below the sync
 trace's (exit 1 otherwise) — CI runs it on the smoke traces.
+
+Every trace argument accepts a monolithic Chrome-JSON file, a single
+``.jsonl`` segment, or a directory of ``trace-NNNN.jsonl`` segments from
+the streaming exporter — the report is identical across formats.
 """
 from __future__ import annotations
 

@@ -10,11 +10,23 @@ Hot-tier discipline: call sites cache the metric object once (engine
 bucket), never per token — each update is one small-lock add, always on,
 cheap enough to leave enabled (the <2% disabled-overhead budget is
 measured by table10).
+
+Memory discipline: every metric is O(1) in the number of observations.
+Histograms bucket into a FIXED boundary ladder (log-spaced 1-2.5-5 per
+decade, spanning microseconds to gigabytes) and keep only per-bucket
+counts plus exact count/sum/min/max — a multi-hour run observing one
+TTFT per request holds the same few hundred bytes as a ten-second one.
+``summary()`` percentiles are therefore *estimates*, linearly
+interpolated inside the containing bucket; the error is bounded by one
+bucket width (≤ 2.5x), which tests pin against the exact computation on
+small samples. The bucket ladder doubles as the Prometheus histogram
+exposition (``/metrics``; obs/server.py).
 """
 from __future__ import annotations
 
+import bisect
 import threading
-from typing import Dict, List, Union
+from typing import Dict, List, Sequence, Tuple, Union
 
 
 class Counter:
@@ -53,29 +65,89 @@ class Gauge:
             return self._value
 
 
-class Histogram:
-    """Stores observations; snapshot() summarises count/sum/min/max and
-    p50/p99 (exact — sample volume here is per-bucket / per-block, not
-    per-token, so keeping the values is fine)."""
-    __slots__ = ("_lock", "_values")
+def _default_bounds() -> Tuple[float, ...]:
+    """1-2.5-5 ladder per decade, 1e-6 .. 1e9: wide enough for seconds
+    (TTFT ~1e-3..1e2) and bytes (buckets ~1e6) on one fixed grid."""
+    out: List[float] = []
+    for e in range(-6, 10):
+        for m in (1.0, 2.5, 5.0):
+            out.append(m * 10.0 ** e)
+    return tuple(out)
 
-    def __init__(self):
+
+class Histogram:
+    """Fixed-bucket histogram: O(buckets) memory regardless of how many
+    values are observed (an unbounded per-observation list would retain
+    every TTFT of a multi-hour serving run). Tracks exact
+    count/sum/min/max; ``summary()`` percentiles interpolate within the
+    containing bucket (error ≤ one bucket width)."""
+    __slots__ = ("_lock", "_bounds", "_counts", "_count", "_sum",
+                 "_min", "_max")
+
+    def __init__(self, bounds: Sequence[float] = ()):
         self._lock = threading.Lock()
-        self._values: List[float] = []
+        self._bounds = tuple(bounds) or _default_bounds()
+        assert list(self._bounds) == sorted(self._bounds), \
+            "histogram bucket bounds must be sorted"
+        # counts[i] = observations with value <= bounds[i] (non-cumulative
+        # per-bucket here; cumulated on read); counts[-1] = overflow (+Inf)
+        self._counts = [0] * (len(self._bounds) + 1)
+        self._count = 0
+        self._sum = 0.0
+        self._min = None
+        self._max = None
 
     def observe(self, v: float) -> None:
+        i = bisect.bisect_left(self._bounds, v)
         with self._lock:
-            self._values.append(v)
+            self._counts[i] += 1
+            self._count += 1
+            self._sum += v
+            if self._min is None or v < self._min:
+                self._min = v
+            if self._max is None or v > self._max:
+                self._max = v
+
+    def _quantile_locked(self, q: float) -> float:
+        """Value at quantile ``q`` estimated from the bucket CDF: linear
+        interpolation between the containing bucket's edges, clamped to
+        the exact observed min/max (so degenerate single-bucket samples
+        report sane numbers)."""
+        rank = q * (self._count - 1) if self._count > 1 else 0.0
+        seen = 0.0
+        for i, c in enumerate(self._counts):
+            if c == 0:
+                continue
+            if seen + c > rank:
+                lo = self._bounds[i - 1] if i > 0 else self._min
+                hi = self._bounds[i] if i < len(self._bounds) else self._max
+                frac = (rank - seen) / c
+                est = lo + (hi - lo) * frac
+                return float(min(max(est, self._min), self._max))
+            seen += c
+        return float(self._max)
 
     def summary(self) -> Dict[str, float]:
         with self._lock:
-            vals = sorted(self._values)
-        if not vals:
-            return {"count": 0, "sum": 0.0}
-        n = len(vals)
-        return {"count": n, "sum": sum(vals), "min": vals[0],
-                "max": vals[-1], "p50": vals[n // 2],
-                "p99": vals[min(n - 1, int(n * 0.99))]}
+            if not self._count:
+                return {"count": 0, "sum": 0.0}
+            return {"count": self._count, "sum": self._sum,
+                    "min": self._min, "max": self._max,
+                    "p50": self._quantile_locked(0.50),
+                    "p99": self._quantile_locked(0.99)}
+
+    def buckets(self) -> Tuple[Tuple[float, ...], List[int], int, float]:
+        """(bounds, CUMULATIVE counts per bound + +Inf, count, sum) in one
+        lock hold — the Prometheus histogram exposition (obs/server.py):
+        ``le`` labels are the bounds, the final cumulative count equals
+        ``count`` by construction, so a scrape can never tear."""
+        with self._lock:
+            cum: List[int] = []
+            run = 0
+            for c in self._counts:
+                run += c
+                cum.append(run)
+            return self._bounds, cum, self._count, self._sum
 
 
 Metric = Union[Counter, Gauge, Histogram]
@@ -107,11 +179,15 @@ class MetricsRegistry:
     def histogram(self, name: str) -> Histogram:
         return self._get(name, Histogram)
 
-    def snapshot(self) -> Dict[str, object]:
+    def collect(self) -> List[Tuple[str, Metric]]:
+        """Stable-ordered (name, metric) pairs — the scrape path; values
+        are read per metric by the renderer, each under its own lock."""
         with self._lock:
-            items = list(self._metrics.items())
+            return sorted(self._metrics.items())
+
+    def snapshot(self) -> Dict[str, object]:
         out: Dict[str, object] = {}
-        for name, m in items:
+        for name, m in self.collect():
             out[name] = m.summary() if isinstance(m, Histogram) else m.value
         return out
 

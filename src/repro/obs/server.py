@@ -1,0 +1,609 @@
+"""Live ops plane: socket serving front-end + scrape endpoints
+(DESIGN.md §Observability).
+
+Everything before this module is post-mortem — traces export at exit,
+metrics are readable only in-process. `OpsServer` turns the pipeline
+into something an operator can watch *while it runs*, stdlib-only
+(``http.server`` threads, no new deps):
+
+* ``POST /v1/generate`` — accepts a generation request from a real
+  socket and streams committed tokens back as Server-Sent Events, riding
+  the paged engine's ``submit(on_token=...)`` hook. The handler thread
+  submits; a single driver thread steps the engine (``submit``/``step``
+  are engine-mutex-safe, the same convoy contract the inference pool
+  uses). Per-request keys are ``fold_in(key, rid)`` — the identical
+  scheduling-order-invariant derivation as the in-process
+  ``RequestDriver``, so a socket-served request is bitwise-identical to
+  the driver path (asserted server-side against ``host_rows`` on every
+  request, and cross-checked in tests/benchmarks).
+* ``GET /metrics`` — the `MetricsRegistry` in Prometheus text format
+  0.0.4. Every sample is read under its own metric lock and histograms
+  snapshot cumulatively in one hold (`Histogram.buckets`), so a mid-run
+  scrape can never tear: counters are monotone across scrapes and
+  ``_bucket{le="+Inf"} == _count`` within one.
+* ``GET /healthz`` / ``GET /status`` — liveness + a JSON introspection
+  snapshot: server counters, engine pool occupancy
+  (`PagedGroupEngine.status_snapshot`, one mutex hold), pipeline state
+  via an injected ``status_fn`` (`PeriodicAsyncScheduler.status`), and
+  an *online* bubble fraction computed incrementally from recent spans
+  by `OnlineBubble` (a tracer listener over a bounded window) instead of
+  a post-hoc full-trace walk.
+
+Thread shape (lock-discipline checked; this module is in
+THREADED_MODULES): `ThreadingHTTPServer` gives one thread per
+connection; `OpsServer` owns ``_lock`` guarding its request counters and
+lifecycle flag; the driver thread polls them briefly and never holds the
+lock across an engine step. The HTTP handler class keeps no shared
+state of its own — everything cross-thread goes through `OpsServer`
+public methods.
+
+``python -m repro.obs.server --smoke`` boots a tiny engine + server,
+scrapes itself, runs one SSE request end-to-end, and exits nonzero on
+any failure — the CI gate.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import re
+import threading
+import time
+from collections import deque
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.obs import trace as otrace
+from repro.obs.analyze import _clip, _intersect, _merge, _total
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               metrics)
+
+# =========================================================================
+# Prometheus text exposition (format 0.0.4)
+# =========================================================================
+
+_NAME_SANITIZE = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _prom_name(name: str) -> str:
+    """Registry name -> Prometheus metric name: ``paged.pages_live`` ->
+    ``repro_paged_pages_live`` (namespaced, dots to underscores)."""
+    return "repro_" + _NAME_SANITIZE.sub("_", name)
+
+
+def _fmt(v: float) -> str:
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return format(v, ".10g")
+
+
+def render_prometheus(reg: Optional[MetricsRegistry] = None) -> str:
+    """The registry as Prometheus text. Counters get the ``_total``
+    suffix; histograms expose the cumulative bucket ladder (sparse:
+    only bounds where the CDF moves, plus ``+Inf``), ``_sum`` and
+    ``_count`` — all from one `Histogram.buckets` lock hold, so the
+    family is internally consistent even mid-``observe``."""
+    reg = reg if reg is not None else metrics()
+    lines: List[str] = []
+    for name, m in reg.collect():
+        base = _prom_name(name)
+        if isinstance(m, Counter):
+            lines.append(f"# TYPE {base}_total counter")
+            lines.append(f"{base}_total {_fmt(m.value)}")
+        elif isinstance(m, Gauge):
+            lines.append(f"# TYPE {base} gauge")
+            lines.append(f"{base} {_fmt(m.value)}")
+        elif isinstance(m, Histogram):
+            bounds, cum, count, total = m.buckets()
+            lines.append(f"# TYPE {base} histogram")
+            prev = 0
+            for b, c in zip(bounds, cum):
+                if c != prev:
+                    lines.append(f'{base}_bucket{{le="{_fmt(b)}"}} {c}')
+                    prev = c
+            lines.append(f'{base}_bucket{{le="+Inf"}} {count}')
+            lines.append(f"{base}_sum {_fmt(total)}")
+            lines.append(f"{base}_count {count}")
+    return "\n".join(lines) + "\n"
+
+
+_SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^{}]*\})?'
+    r'\s+(-?(?:[0-9]*\.?[0-9]+(?:[eE][+-]?[0-9]+)?|Inf)|NaN|\+Inf)$')
+_LE_RE = re.compile(r'le="([^"]+)"')
+
+
+def parse_prometheus_text(text: str) -> Dict[str, float]:
+    """Validating parser for the exposition above — the well-formedness
+    gate tests and CI scrape through. Checks: every sample line matches
+    the grammar, every sample's family has a preceding ``# TYPE``,
+    histogram buckets are cumulative (non-decreasing in ``le`` order)
+    and ``+Inf`` equals ``_count``. Returns ``{name+labels: value}``;
+    raises ``ValueError`` on any violation."""
+    types: Dict[str, str] = {}
+    samples: Dict[str, float] = {}
+    hist_buckets: Dict[str, List[Tuple[float, float]]] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "histogram"):
+                raise ValueError(f"line {lineno}: malformed TYPE: {line!r}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {lineno}: malformed sample: {line!r}")
+        name, labels, val = m.group(1), m.group(2) or "", float(m.group(3))
+        family = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[:-len(suffix)] in types:
+                family = name[:-len(suffix)]
+                break
+        if family not in types:
+            raise ValueError(
+                f"line {lineno}: sample {name!r} has no # TYPE declaration")
+        if types[family] == "histogram" and name == family + "_bucket":
+            le = _LE_RE.search(labels)
+            if le is None:
+                raise ValueError(f"line {lineno}: bucket without le label")
+            bound = float("inf") if le.group(1) == "+Inf" \
+                else float(le.group(1))
+            hist_buckets.setdefault(family, []).append((bound, val))
+        key = name + labels
+        if key in samples:
+            raise ValueError(f"line {lineno}: duplicate sample {key!r}")
+        samples[key] = val
+    for family, buckets in hist_buckets.items():
+        in_order = sorted(buckets)
+        if [v for _, v in in_order] != sorted(v for _, v in buckets):
+            raise ValueError(f"{family}: bucket counts not cumulative")
+        if not in_order or in_order[-1][0] != float("inf"):
+            raise ValueError(f"{family}: missing le=+Inf bucket")
+        count = samples.get(family + "_count")
+        if count is None or in_order[-1][1] != count:
+            raise ValueError(
+                f"{family}: +Inf bucket {in_order[-1][1]} != _count {count}")
+        if family + "_sum" not in samples:
+            raise ValueError(f"{family}: missing _sum")
+    return samples
+
+
+# =========================================================================
+# Online bubble: incremental stage-occupancy over a sliding window
+# =========================================================================
+
+class OnlineBubble:
+    """Tracer listener that maintains the bubble/overlap estimate of
+    `obs.analyze` *incrementally*: producer/consumer spans land in
+    bounded deques at emit time; `value()` merges only the spans inside
+    the trailing ``window_s`` — O(window), no full-trace walk, callable
+    at any point mid-run from the ``/status`` handler."""
+
+    _PRODUCER = ("producer.busy",)
+    _CONSUMER = ("train.group", "train.update")
+
+    def __init__(self, window_s: float = 30.0, max_spans: int = 4096):
+        self.window_s = window_s
+        self._lock = threading.Lock()
+        self._p: deque = deque(maxlen=max_spans)
+        self._c: deque = deque(maxlen=max_spans)
+        self._tmax: Optional[float] = None
+
+    def on_event(self, ev: tuple) -> None:
+        """Raw-event-tuple hook (`Tracer.add_listener`); called from the
+        emitting thread, so only the deque append happens here."""
+        ph, name, ts_us, x = ev[0], ev[1], ev[2], ev[3]
+        if ph != "X":
+            return
+        if name in self._PRODUCER:
+            kind = "p"
+        elif name in self._CONSUMER:
+            kind = "c"
+        else:
+            return
+        lo, hi = ts_us / 1e6, (ts_us + x) / 1e6
+        with self._lock:
+            (self._p if kind == "p" else self._c).append((lo, hi))
+            if self._tmax is None or hi > self._tmax:
+                self._tmax = hi
+
+    def value(self) -> Optional[dict]:
+        with self._lock:
+            if self._tmax is None:
+                return None
+            p, c, tmax = list(self._p), list(self._c), self._tmax
+        starts = [lo for lo, _ in p] + [lo for lo, _ in c]
+        lo = max(tmax - self.window_s, min(starts))
+        wall = tmax - lo
+        if wall <= 0:
+            return None
+        p_u = _merge(_clip(p, lo, tmax))
+        c_u = _merge(_clip(c, lo, tmax))
+        p_occ, c_occ = _total(p_u), _total(c_u)
+        overlap = _total(_intersect(p_u, c_u))
+        denom = min(p_occ, c_occ)
+        return {"window_s": wall,
+                "producer_busy_s": p_occ,
+                "consumer_busy_s": c_occ,
+                "bubble_fraction": 1.0 - (p_occ + c_occ) / (2.0 * wall),
+                "overlap_efficiency": overlap / denom if denom > 0 else 0.0}
+
+
+# =========================================================================
+# HTTP front-end
+# =========================================================================
+
+class _Handler(BaseHTTPRequestHandler):
+    """One instance per connection (ThreadingHTTPServer). Keeps no
+    cross-request state — all shared mutation goes through `OpsServer`
+    public methods, which own the lock."""
+
+    server_version = "repro-ops/1.0"
+    protocol_version = "HTTP/1.0"   # connection-close delimits the stream
+
+    def log_message(self, fmt, *args):  # quiet: the server is scrapeable
+        pass
+
+    @property
+    def ops(self) -> "OpsServer":
+        return self.server.ops  # type: ignore[attr-defined]
+
+    def _send_text(self, code: int, body: str,
+                   ctype: str = "text/plain; charset=utf-8") -> None:
+        data = body.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            self._send_text(200, "ok\n")
+        elif self.path == "/metrics":
+            self._send_text(200, render_prometheus(self.ops.registry),
+                            "text/plain; version=0.0.4; charset=utf-8")
+        elif self.path == "/status":
+            self._send_text(200, json.dumps(self.ops.status(), indent=1,
+                                            default=str) + "\n",
+                            "application/json")
+        else:
+            self._send_text(404, "not found\n")
+
+    def do_POST(self):
+        if self.path != "/v1/generate":
+            self._send_text(404, "not found\n")
+            return
+        ops = self.ops
+        if ops.eng is None:
+            self._send_text(503, "no engine attached\n")
+            return
+        try:
+            n = int(self.headers.get("Content-Length") or 0)
+            req = json.loads(self.rfile.read(n) or b"{}")
+        except (ValueError, json.JSONDecodeError):
+            self._send_text(400, "bad json\n")
+            return
+        prompt = req.get("prompt")
+        if not isinstance(prompt, list) or not prompt or \
+                not all(isinstance(t, int) for t in prompt):
+            self._send_text(400, "prompt must be a non-empty int list\n")
+            return
+        rid = int(req["rid"]) if "rid" in req else ops.alloc_rid()
+        max_new = int(req["max_new"]) if "max_new" in req else None
+
+        import jax
+        import numpy as np
+        q: "queue.Queue[int]" = queue.Queue()
+        t_submit = time.time()
+        # arrival == submit: a socket request has no open-loop queue model
+        otrace.begin("request", uid=rid, rid=rid,
+                     arrival=t_submit, submit=t_submit)
+        try:
+            handle = ops.eng.submit(
+                np.asarray(prompt, np.int32),
+                jax.random.fold_in(ops.key, rid), max_new=max_new,
+                on_token=lambda row, tok: q.put(int(tok)))
+        except Exception as e:  # inadmissible prompt etc.
+            otrace.end("request", uid=rid, rid=rid, error=str(e))
+            self._send_text(400, f"submit rejected: {e}\n")
+            return
+        ops.request_started()
+        try:
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.send_header("Connection", "close")
+            self.end_headers()
+            streamed: List[int] = []
+            first_t: Optional[float] = None
+            deadline = time.time() + ops.request_timeout_s
+            timed_out = False
+            while True:
+                try:
+                    tok = q.get(timeout=0.05)
+                except queue.Empty:
+                    if handle.done() and q.empty():
+                        break
+                    if time.time() > deadline:
+                        timed_out = True
+                        break
+                    continue
+                if first_t is None:
+                    first_t = time.time()
+                streamed.append(tok)
+                otrace.instant("request.token", rid=rid)
+                self.wfile.write(
+                    f"data: {json.dumps({'token': tok})}\n\n".encode())
+                self.wfile.flush()
+            if timed_out:
+                otrace.end("request", uid=rid, rid=rid, error="timeout")
+                self.wfile.write(
+                    b'event: error\ndata: {"error": "timeout"}\n\n')
+                return
+            # bitwise-identity proof, per request: the streamed token ids
+            # must equal the engine's committed host rows exactly — the
+            # same assertion RequestDriver makes on the in-process path
+            final = handle.host_rows()[0].tolist()
+            verified = streamed == final
+            otrace.end("request", uid=rid, rid=rid, num_tokens=len(streamed))
+            if first_t is not None:
+                ops.ttft_hist.observe(first_t - t_submit)
+            ops.tokens_counter.add(len(streamed))
+            done = {"num_tokens": len(streamed), "verified": verified}
+            self.wfile.write(
+                f"event: done\ndata: {json.dumps(done)}\n\n".encode())
+        except BrokenPipeError:
+            pass  # client went away mid-stream; the engine finishes alone
+        finally:
+            ops.request_finished()
+
+
+class OpsServer:
+    """The live ops front-end. ``engine`` (optional) must be a paged
+    engine with ``group_size == 1`` (the serving shape); without one the
+    server still exposes ``/metrics``/``/healthz``/``/status`` — the
+    metrics-only mode ``launch/train.py --metrics-port`` uses.
+
+    ``status_fn`` is merged into ``/status`` under ``"pipeline"``; each
+    contributor (engine, scheduler) snapshots its fields atomically
+    under its own lock, so no multi-field view can tear."""
+
+    def __init__(self, *, engine=None, key=None,
+                 status_fn: Optional[Callable[[], dict]] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 window_s: float = 30.0,
+                 request_timeout_s: float = 120.0):
+        if engine is not None:
+            assert engine.G == 1, \
+                "OpsServer serves 1-row groups (build_paged_engine shape)"
+            assert key is not None, "an engine needs a base sampling key"
+        self.eng = engine
+        self.key = key
+        self.status_fn = status_fn
+        self.registry = registry if registry is not None else metrics()
+        self.request_timeout_s = request_timeout_s
+        self.bubble = OnlineBubble(window_s=window_s)
+        self.ttft_hist = self.registry.histogram("serve.ttft_s")
+        self.tokens_counter = self.registry.counter("serve.streamed_tokens")
+        self.t0 = time.time()
+        self._lock = threading.Lock()
+        self._stopped = False
+        self._started = False
+        self._active = 0
+        self._next_rid = 0
+        self.requests_served = 0
+        self._threads: List[threading.Thread] = []
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd.ops = self  # type: ignore[attr-defined]
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self._httpd.server_address[0]}:{self.port}"
+
+    def start(self) -> "OpsServer":
+        tracer = otrace.get()
+        if tracer is not None:
+            tracer.add_listener(self.bubble.on_event)
+        serve_t = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.05},
+            name="ops-http", daemon=True)
+        threads = [serve_t]
+        if self.eng is not None:
+            threads.append(threading.Thread(
+                target=self._drive, name="ops-drive", daemon=True))
+        with self._lock:
+            self._started = True
+            self._threads.extend(threads)
+        for t in threads:
+            t.start()
+        return self
+
+    def _drive(self) -> None:
+        """Engine-stepping thread: steps only while server-submitted
+        requests are in flight, sleeps otherwise. Never holds the ops
+        lock across a step — ``PagedGroupEngine.step`` has its own
+        mutex and may block on a drain."""
+        while True:
+            with self._lock:
+                if self._stopped:
+                    return
+                active = self._active
+            if active:
+                if not self.eng.step():
+                    # submitted but not yet admitted, or done and the
+                    # handler hasn't decremented yet — don't hot-spin
+                    time.sleep(0.002)
+            else:
+                time.sleep(0.01)
+
+    def alloc_rid(self) -> int:
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        return rid
+
+    def request_started(self) -> None:
+        with self._lock:
+            self._active += 1
+
+    def request_finished(self) -> None:
+        with self._lock:
+            self._active -= 1
+            self.requests_served += 1
+
+    def status(self) -> dict:
+        with self._lock:
+            served = self.requests_served
+            active = self._active
+        out: Dict[str, Any] = {
+            "uptime_s": time.time() - self.t0,
+            "requests_served": served,
+            "active_requests": active,
+        }
+        online = self.bubble.value()
+        if online is not None:
+            out["online"] = online
+        if self.eng is not None:
+            out["engine"] = self.eng.status_snapshot()
+        if self.status_fn is not None:
+            out["pipeline"] = self.status_fn()
+        return out
+
+    def stop(self) -> None:
+        with self._lock:
+            already = self._stopped or not self._started
+            self._stopped = True
+            threads = list(self._threads)
+        if already:
+            return
+        tracer = otrace.get()
+        if tracer is not None:
+            tracer.remove_listener(self.bubble.on_event)
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        for t in threads:
+            t.join(timeout=5)
+
+    def __enter__(self) -> "OpsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False
+
+
+# =========================================================================
+# CLI / CI smoke
+# =========================================================================
+
+def _sse_request(base: str, payload: dict, timeout: float = 120.0
+                 ) -> Tuple[List[int], Optional[dict]]:
+    """Minimal SSE client (the README walkthrough shape): POST the
+    request, read ``data:`` lines until the ``done`` event."""
+    import urllib.request
+    req = urllib.request.Request(
+        base + "/v1/generate", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    tokens: List[int] = []
+    done: Optional[dict] = None
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        assert resp.status == 200, resp.status
+        event = None
+        for raw in resp:
+            line = raw.decode().strip()
+            if line.startswith("event: "):
+                event = line[len("event: "):]
+            elif line.startswith("data: "):
+                doc = json.loads(line[len("data: "):])
+                if event == "done":
+                    done = doc
+                elif event == "error":
+                    raise RuntimeError(f"server error: {doc}")
+                else:
+                    tokens.append(doc["token"])
+    return tokens, done
+
+
+def _smoke() -> int:
+    """Boot a tiny engine + server, scrape ourselves, stream one request
+    — the CI benchmark-smoke gate (response codes + Prometheus
+    well-formedness + one verified SSE round trip)."""
+    import urllib.request
+
+    import jax
+
+    from repro.configs import get_config, reduced_config
+    from repro.launch.serve import build_paged_engine
+    from repro.models import init
+
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    params = init(jax.random.PRNGKey(0), cfg)
+    eng = build_paged_engine(cfg, max_prompt_len=16, max_new=8,
+                             num_slots=2, page_size=8, seed=0)
+    eng.set_params(params)
+    srv = OpsServer(engine=eng, key=jax.random.PRNGKey(1))
+    srv.start()
+    try:
+        def get(path: str) -> Tuple[int, str]:
+            with urllib.request.urlopen(srv.url + path, timeout=30) as r:
+                return r.status, r.read().decode()
+
+        code, body = get("/healthz")
+        assert code == 200 and body == "ok\n", (code, body)
+        code, text = get("/metrics")
+        assert code == 200, code
+        before = parse_prometheus_text(text)
+
+        tokens, done = _sse_request(
+            srv.url, {"prompt": list(range(1, 9)), "rid": 0, "max_new": 8})
+        assert tokens, "no tokens streamed"
+        assert done is not None and done["verified"], done
+        assert done["num_tokens"] == len(tokens), done
+
+        code, text = get("/metrics")
+        after = parse_prometheus_text(text)
+        for k, v in before.items():
+            if k.endswith("_total") or "_bucket" in k or k.endswith("_count"):
+                assert after.get(k, v) >= v, f"counter {k} went backwards"
+        assert after["repro_serve_streamed_tokens_total"] >= len(tokens)
+
+        code, body = get("/status")
+        st = json.loads(body)
+        assert code == 200 and st["requests_served"] >= 1, st
+        assert "engine" in st and "pages_live" in st["engine"], st
+        print(f"ops-server smoke OK: {len(tokens)} tokens streamed, "
+              f"{len(after)} samples scraped, status keys "
+              f"{sorted(st)}")
+        return 0
+    finally:
+        srv.stop()
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="python -m repro.obs.server")
+    ap.add_argument("--smoke", action="store_true",
+                    help="boot a tiny engine+server, self-scrape, one SSE "
+                         "request; exit nonzero on failure (the CI gate)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return _smoke()
+    ap.error("serving mode is launched via repro.launch.serve --serve-port; "
+             "this entry point only runs --smoke")
+    return 2
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

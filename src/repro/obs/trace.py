@@ -20,6 +20,14 @@ Design constraints, in priority order:
 * **Lock-cheap under threads.** Every thread appends to its own buffer
   (``threading.local``); the tracer lock is taken once per thread at
   first use and once at export, never per event.
+* **Bounded peak memory when streaming.** With ``stream_dir`` set, each
+  thread's buffer is flushed to rotating JSONL segments
+  (``trace-000N.jsonl``) once it reaches ``flush_events`` entries, so
+  resident events never exceed ``threads x flush_events`` no matter how
+  long the run — a multi-hour trace costs disk, not RAM
+  (``peak_buffer_events`` records the observed bound for tests).
+  Monolithic mode (no ``stream_dir``) keeps the original
+  buffer-until-``export`` behaviour for short runs.
 
 Event model (Chrome trace-event phases):
 
@@ -34,13 +42,19 @@ Event model (Chrome trace-event phases):
   lifecycle).
 * ``instant(name)`` / ``counter(name, value)`` — "i" point events and
   "C" counter tracks (pages live, queue depth).
+
+Listeners: ``add_listener(fn)`` registers a callback invoked with each
+raw event tuple at emit time — the hook the ops server's online bubble
+estimator rides (obs/server.py). With no listeners registered the emit
+path pays one truthiness check.
 """
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class _NullSpan:
@@ -87,9 +101,13 @@ class _Span:
 
 class Tracer:
     """Collects trace events into per-thread buffers; ``export`` writes
-    the merged Chrome trace-event JSON."""
+    the merged Chrome trace-event JSON (monolithic mode) or flushes the
+    final JSONL segment (streaming mode)."""
 
-    def __init__(self, process_name: str = "repro"):
+    def __init__(self, process_name: str = "repro",
+                 stream_dir: Optional[str] = None,
+                 flush_events: int = 256,
+                 segment_events: int = 8192):
         self.process_name = process_name
         self._epoch = time.perf_counter()
         self._lock = threading.Lock()
@@ -101,6 +119,28 @@ class Tracer:
         # emitting thread (settle threads are one-shot)
         self._tracks: Dict[str, int] = {}
         self._next_track = 1 << 20
+        self._listeners: List[Callable[[tuple], None]] = []
+        # -- streaming state (all mutated under _io_lock) ---------------
+        self.stream_dir = stream_dir
+        self.flush_events = max(1, flush_events)
+        self.segment_events = max(self.flush_events, segment_events)
+        self.peak_buffer_events = 0  # monotone max; tests assert the bound
+        self._io_lock = threading.Lock()
+        self._seg_file = None
+        self._seg_index = -1
+        self._seg_count = 0
+        self._closed = False
+        if stream_dir is not None:
+            os.makedirs(stream_dir, exist_ok=True)
+            with self._io_lock:
+                self._rotate_io_locked()
+                self._write_io_locked([{
+                    "ph": "M", "name": "process_name", "pid": 0, "tid": 0,
+                    "args": {"name": process_name}}])
+
+    @property
+    def streaming(self) -> bool:
+        return self.stream_dir is not None
 
     # -- clock ----------------------------------------------------------
     def _ts(self, t: float) -> float:
@@ -112,13 +152,41 @@ class Tracer:
         if buf is None:
             buf = []
             th = threading.current_thread()
+            entry = (th.ident or 0, th.name, buf)
             with self._lock:
-                self._buffers.append((th.ident or 0, th.name, buf))
+                self._buffers.append(entry)
+            if self.streaming:
+                with self._io_lock:
+                    self._write_io_locked([{
+                        "ph": "M", "name": "thread_name", "pid": 0,
+                        "tid": entry[0], "args": {"name": th.name}}])
             self._local.buf = buf
         return buf
 
     def _emit(self, ev: tuple) -> None:
-        self._buf().append(ev)
+        buf = self._buf()
+        buf.append(ev)
+        if self._listeners:
+            for fn in tuple(self._listeners):
+                fn(ev)
+        if self.streaming:
+            n = len(buf)
+            if n > self.peak_buffer_events:
+                # benign racy max: monotone, and any lost update is
+                # re-observed by the next append on the same thread
+                self.peak_buffer_events = n
+            if n >= self.flush_events:
+                self._flush_one(buf)
+
+    def add_listener(self, fn: Callable[[tuple], None]) -> None:
+        with self._lock:
+            self._listeners = self._listeners + [fn]
+
+    def remove_listener(self, fn: Callable[[tuple], None]) -> None:
+        # == not `is`: a bound method is a fresh object per attribute
+        # access, so identity would never match the one registered
+        with self._lock:
+            self._listeners = [f for f in self._listeners if f != fn]
 
     def track_tid(self, track: str) -> int:
         tid = self._tracks.get(track)
@@ -126,6 +194,11 @@ class Tracer:
             with self._lock:
                 tid = self._tracks.setdefault(
                     track, self._next_track + len(self._tracks))
+            if self.streaming:
+                with self._io_lock:
+                    self._write_io_locked([{
+                        "ph": "M", "name": "thread_name", "pid": 0,
+                        "tid": tid, "args": {"name": track}}])
         return tid
 
     # -- recording API --------------------------------------------------
@@ -158,9 +231,95 @@ class Tracer:
         t = time.perf_counter()
         self._emit(("C", name, self._ts(t), None, None, {"value": value}))
 
+    # -- event-dict conversion ------------------------------------------
+    @staticmethod
+    def _to_dict(ev: tuple, default_tid: int) -> dict:
+        ph, name, ts, x, etid, attrs = ev
+        out: Dict[str, Any] = {"ph": ph, "name": name, "pid": 0,
+                               "tid": etid if etid is not None else default_tid,
+                               "ts": ts}
+        if ph == "X":
+            out["dur"] = x
+        elif ph in ("b", "e"):
+            out["cat"] = "async"
+            out["id"] = str(x)
+        elif ph == "i":
+            out["s"] = "t"
+        if attrs:
+            out["args"] = dict(attrs)
+        return out
+
+    # -- streaming IO (segment rotation) --------------------------------
+    def _rotate_io_locked(self) -> None:
+        if self._seg_file is not None:
+            self._seg_file.close()
+        self._seg_index += 1
+        self._seg_count = 0
+        path = os.path.join(self.stream_dir,
+                            f"trace-{self._seg_index:04d}.jsonl")
+        self._seg_file = open(path, "w")
+
+    def _write_io_locked(self, dicts: List[dict]) -> None:
+        if self._closed or self._seg_file is None:
+            return
+        for d in dicts:
+            self._seg_file.write(json.dumps(d) + "\n")
+        self._seg_count += len(dicts)
+        self._seg_file.flush()
+        # rotate at batch boundaries: a segment may overshoot the cap by
+        # at most one flush batch, never split an event across files
+        if self._seg_count >= self.segment_events:
+            self._rotate_io_locked()
+
+    def _flush_one(self, buf: list, tid: Optional[int] = None) -> None:
+        """Drain one thread's buffer to the current segment. Safe from
+        both the owning thread (threshold hit) and a foreign flusher
+        (export/close): the length is re-read under the IO lock and only
+        the first ``n`` entries are written+removed, so a concurrent
+        owner append (GIL-atomic, lands past ``n``) is never lost or
+        double-written."""
+        if tid is None:
+            tid = threading.get_ident()
+        with self._io_lock:
+            n = len(buf)
+            if n:
+                self._write_io_locked([self._to_dict(ev, tid)
+                                       for ev in buf[:n]])
+                del buf[:n]
+
+    def flush(self) -> None:
+        """Flush every thread's buffer (streaming mode); no-op otherwise.
+        Called on export/close and by the flush-on-crash wrappers in
+        launch/."""
+        if not self.streaming:
+            return
+        with self._lock:
+            buffers = list(self._buffers)
+        for tid, _, buf in buffers:
+            self._flush_one(buf, tid=tid)
+
+    def close(self) -> Optional[str]:
+        """Flush all buffers and close the active segment; returns the
+        stream dir (None in monolithic mode). Idempotent."""
+        if not self.streaming:
+            return None
+        self.flush()
+        with self._io_lock:
+            if self._seg_file is not None:
+                self._seg_file.close()
+                self._seg_file = None
+            self._closed = True
+        return self.stream_dir
+
     # -- export ---------------------------------------------------------
     def events(self) -> List[dict]:
-        """Merged Chrome trace-event dicts (also the analyzer's input)."""
+        """Merged Chrome trace-event dicts (also the analyzer's input).
+        Monolithic mode only — a streaming tracer's events live on disk
+        (read them back with ``obs.analyze.load_trace(stream_dir)``)."""
+        if self.streaming:
+            raise RuntimeError(
+                "events() unavailable on a streaming tracer; "
+                "load the segment dir with obs.analyze.load_trace()")
         pid = 0
         out: List[dict] = [{
             "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
@@ -176,24 +335,17 @@ class Tracer:
             out.append({"ph": "M", "name": "thread_name", "pid": pid,
                         "tid": tid, "args": {"name": track}})
         for tid, _, buf in buffers:
-            for ph, name, ts, x, etid, attrs in buf:
-                ev: Dict[str, Any] = {"ph": ph, "name": name, "pid": pid,
-                                      "tid": etid if etid is not None else tid,
-                                      "ts": ts}
-                if ph == "X":
-                    ev["dur"] = x
-                elif ph in ("b", "e"):
-                    ev["cat"] = "async"
-                    ev["id"] = str(x)
-                elif ph == "i":
-                    ev["s"] = "t"
-                if attrs:
-                    ev["args"] = dict(attrs)
-                out.append(ev)
+            for ev in buf:
+                out.append(self._to_dict(ev, tid))
         out.sort(key=lambda e: e.get("ts", 0.0))
         return out
 
-    def export(self, path: str) -> str:
+    def export(self, path: str = "") -> str:
+        """Monolithic: write one Chrome-JSON file at ``path``. Streaming:
+        flush+close the segments and return the stream dir (``path`` is
+        ignored — the segments are already on disk)."""
+        if self.streaming:
+            return self.close() or self.stream_dir
         with open(path, "w") as f:
             json.dump({"traceEvents": self.events(),
                        "displayTimeUnit": "ms"}, f)
@@ -204,16 +356,25 @@ class Tracer:
 _active: Optional[Tracer] = None
 
 
-def install(process_name: str = "repro") -> Tracer:
-    """Install a fresh process-wide tracer and return it."""
+def install(process_name: str = "repro",
+            stream_dir: Optional[str] = None,
+            flush_events: int = 256,
+            segment_events: int = 8192) -> Tracer:
+    """Install a fresh process-wide tracer and return it. ``stream_dir``
+    selects streaming JSONL-segment mode (bounded memory)."""
     global _active
-    _active = Tracer(process_name)
+    _active = Tracer(process_name, stream_dir=stream_dir,
+                     flush_events=flush_events,
+                     segment_events=segment_events)
     return _active
 
 
 def uninstall() -> None:
     global _active
+    t = _active
     _active = None
+    if t is not None and t.streaming:
+        t.close()
 
 
 def get() -> Optional[Tracer]:
@@ -262,6 +423,6 @@ def counter(name: str, value: float) -> None:
         t.counter(name, value)
 
 
-def export(path: str) -> Optional[str]:
+def export(path: str = "") -> Optional[str]:
     t = _active
     return None if t is None else t.export(path)

@@ -225,6 +225,217 @@ def test_reset_stats_clears_busy_clock():
 
 
 # ---------------------------------------------------------------------------
+# bounded histogram: O(1) memory, bucket-CDF percentiles vs exact
+# ---------------------------------------------------------------------------
+
+def test_histogram_bounded_memory_exact_aggregates():
+    from repro.obs.metrics import Histogram
+    h = Histogram()
+    n_buckets = len(h._counts)
+    vals = [(i % 997) / 100.0 + 0.001 for i in range(10_000)]
+    for v in vals:
+        h.observe(v)
+    assert len(h._counts) == n_buckets    # no per-observation retention
+    s = h.summary()
+    assert s["count"] == 10_000
+    assert s["sum"] == pytest.approx(sum(vals))
+    assert s["min"] == min(vals) and s["max"] == max(vals)
+
+
+def test_histogram_percentiles_vs_exact_small_n():
+    from repro.obs.metrics import Histogram
+    rng = np.random.RandomState(0)
+    vals = rng.lognormal(mean=-2.0, sigma=1.5, size=200)
+    h = Histogram()
+    for v in vals:
+        h.observe(float(v))
+    s = h.summary()
+    for q, key in ((50, "p50"), (99, "p99")):
+        exact = float(np.percentile(vals, q))
+        est = s[key]
+        # bucket-CDF estimate: error bounded by one bucket width of the
+        # 1-2.5-5 ladder (max edge ratio 2.5)
+        assert exact / 2.5 <= est <= exact * 2.5, (key, est, exact)
+
+
+def test_histogram_degenerate_and_empty():
+    from repro.obs.metrics import Histogram
+    h = Histogram()
+    assert h.summary() == {"count": 0, "sum": 0.0}
+    for _ in range(5):
+        h.observe(0.3)
+    s = h.summary()
+    # single-bucket sample: clamped to exact observed min/max
+    assert s["p50"] == s["p99"] == pytest.approx(0.3)
+
+
+def test_histogram_buckets_cumulative_and_consistent():
+    from repro.obs.metrics import Histogram
+    h = Histogram()
+    for v in (0.001, 0.5, 0.5, 123.0, 1e12):   # incl. +Inf overflow
+        h.observe(v)
+    bounds, cum, count, total = h.buckets()
+    assert len(cum) == len(bounds) + 1
+    assert cum == sorted(cum)                  # cumulative by construction
+    assert cum[-1] == count == 5
+    assert total == pytest.approx(sum((0.001, 0.5, 0.5, 123.0, 1e12)))
+
+
+# ---------------------------------------------------------------------------
+# streaming trace export: segments == monolithic, bounded peak memory
+# ---------------------------------------------------------------------------
+
+def _script_pipeline_events(tr):
+    """Deterministic span set (offsets from the tracer's own epoch) —
+    identical input to a monolithic and a streaming tracer."""
+    e = tr._epoch
+
+    def one_iter(i):
+        lo = e + i * 1.0
+        tr.complete("iteration", lo, lo + 1.0, iteration=i, mode="async")
+        tr.complete("producer.busy", lo + 0.05, lo + 0.60, busy=0.5)
+        tr.complete("train.group", lo + 0.40, lo + 0.80)
+        tr.complete("train.update", lo + 0.80, lo + 0.95)
+        tr.complete("transfer.ensure", lo + 0.95, lo + 0.97, gap=0.02)
+
+    threads = [threading.Thread(target=one_iter, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def test_streaming_segments_report_equals_monolithic(tmp_path):
+    from repro.obs.analyze import analyze, load_trace
+    mono = Tracer("p")
+    _script_pipeline_events(mono)
+    want = analyze(mono.events())
+    assert len(want["iterations"]) == 4      # non-trivial report
+
+    stream = Tracer("p", stream_dir=str(tmp_path / "seg"),
+                    flush_events=4, segment_events=8)
+    _script_pipeline_events(stream)
+    out_dir = stream.export()
+    got = analyze(load_trace(out_dir))
+    assert got == want                        # exactly, not approximately
+
+
+def test_streaming_peak_buffer_bounded(tmp_path):
+    tr = Tracer("p", stream_dir=str(tmp_path / "seg"), flush_events=16)
+
+    def emit(k):
+        for i in range(500):
+            tr.complete(f"x{k}", tr._epoch + i, tr._epoch + i + 0.5)
+
+    threads = [threading.Thread(target=emit, args=(k,)) for k in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    tr.close()
+    # the documented bound: resident events never exceed the flush batch
+    # per thread, no matter how many events the run emits
+    assert 0 < tr.peak_buffer_events <= 16
+
+
+def test_streaming_rotation_and_readback(tmp_path):
+    from repro.obs.analyze import load_trace
+    d = tmp_path / "seg"
+    tr = Tracer("p", stream_dir=str(d), flush_events=4, segment_events=8)
+    for i in range(100):
+        tr.complete("ev", tr._epoch + i, tr._epoch + i + 0.5, n=i)
+    assert tr.export() == str(d)
+    segs = sorted(d.glob("trace-*.jsonl"))
+    assert len(segs) > 3                      # actually rotated
+    for seg in segs:
+        n_lines = sum(1 for _ in open(seg))
+        # cap + at most one flush batch of overshoot (+ meta lines)
+        assert n_lines <= 8 + 4 + 2
+    evs = load_trace(str(d))
+    xs = [e for e in evs if e.get("ph") == "X"]
+    assert [e["args"]["n"] for e in xs] == list(range(100))  # all, in order
+    assert tr.peak_buffer_events <= 4
+
+
+def test_streaming_tracer_rejects_events_and_tolerates_truncation(tmp_path):
+    from repro.obs.analyze import load_trace
+    d = tmp_path / "seg"
+    tr = Tracer("p", stream_dir=str(d), flush_events=2, segment_events=1000)
+    for i in range(10):
+        tr.complete("ev", tr._epoch + i, tr._epoch + i + 0.5)
+    with pytest.raises(RuntimeError):
+        tr.events()                           # streaming: events live on disk
+    tr.close()
+    segs = sorted(d.glob("trace-*.jsonl"))
+    # a hard kill can truncate the LAST line of the LAST segment mid-write;
+    # the loader drops exactly that and nothing else
+    with open(segs[-1], "a") as f:
+        f.write('{"ph": "X", "name": "torn')
+    evs = load_trace(str(d))
+    assert sum(1 for e in evs if e.get("ph") == "X") == 10
+    # the same garbage in a non-final position is corruption, not a crash
+    with open(segs[-1], "a") as f:
+        f.write('\n{"ph": "M", "name": "process_name", "ts": 0}\n')
+    with pytest.raises(json.JSONDecodeError):
+        load_trace(str(d))
+
+
+def test_streaming_close_idempotent_and_uninstall_closes(tmp_path):
+    d = str(tmp_path / "seg")
+    tr = otrace.install("p", stream_dir=d, flush_events=4)
+    tr.complete("ev", tr._epoch, tr._epoch + 1.0)
+    otrace.uninstall()                        # closes the streaming tracer
+    assert tr._closed
+    assert tr.close() == d                    # idempotent
+
+
+# ---------------------------------------------------------------------------
+# flush-on-crash: a SIGKILLed training run leaves readable segments
+# ---------------------------------------------------------------------------
+
+def test_killed_run_leaves_readable_segments(tmp_path):
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    import time
+
+    from repro.obs.analyze import analyze, load_trace
+    d = tmp_path / "seg"
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", "--iterations", "99",
+         "--batch-prompts", "2", "--group-size", "2", "--micro-batch", "1",
+         "--instances", "1", "--max-prompt-len", "16",
+         "--max-response-len", "8", "--trace-dir", str(d),
+         "--trace-flush-events", "4", "--trace-segment-events", "16"],
+        cwd=root, env=env, stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL)
+    try:
+        # wait until real span events (not just meta lines) are on disk —
+        # i.e. the run is mid-iteration — then kill it dead, no cleanup
+        deadline = time.time() + 180
+        while time.time() < deadline:
+            if any('"X"' in open(f).read()
+                   for f in sorted(d.glob("trace-*.jsonl"))):
+                break
+            time.sleep(0.2)
+            if proc.poll() is not None:
+                raise AssertionError("training run exited prematurely")
+        else:
+            raise AssertionError("no flushed span events before deadline")
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+    evs = load_trace(str(d))                  # readable despite the kill
+    assert any(e.get("ph") == "X" for e in evs)
+    analyze(evs)                              # and analyzable, not just JSON
+
+
+# ---------------------------------------------------------------------------
 # obs-discipline checker
 # ---------------------------------------------------------------------------
 

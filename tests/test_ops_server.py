@@ -1,0 +1,315 @@
+"""Tests for the live ops plane (src/repro/obs/server.py).
+
+Covers: Prometheus rendering + the validating parser (round-trip and
+rejection of torn/malformed text), the scrape endpoints in metrics-only
+mode, SSE socket serving proven bitwise-identical to the in-process
+``RequestDriver`` under *sampled* (non-greedy) decode — the key-derivation
+contract, not just greedy determinism — scrape-under-load while the paged
+engine drains, and the `OnlineBubble` incremental estimator against
+hand-computed occupancies.
+"""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.obs import trace as otrace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.server import (OnlineBubble, OpsServer, _sse_request,
+                              parse_prometheus_text, render_prometheus)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_tracer():
+    yield
+    otrace.uninstall()
+
+
+def _get(url: str, path: str):
+    with urllib.request.urlopen(url + path, timeout=30) as r:
+        return r.status, r.read().decode()
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text format: render -> parse round trip
+# ---------------------------------------------------------------------------
+
+def test_render_parse_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("prefix.hit_pages").add(7)
+    reg.gauge("paged.pages_live").set(13)
+    h = reg.histogram("serve.ttft_s")
+    for v in (0.01, 0.02, 0.02, 5.0):
+        h.observe(v)
+    samples = parse_prometheus_text(render_prometheus(reg))
+    assert samples["repro_prefix_hit_pages_total"] == 7
+    assert samples["repro_paged_pages_live"] == 13
+    assert samples["repro_serve_ttft_s_count"] == 4
+    assert samples["repro_serve_ttft_s_sum"] == pytest.approx(5.05)
+    # sparse cumulative ladder: the +Inf bucket equals _count
+    assert samples['repro_serve_ttft_s_bucket{le="+Inf"}'] == 4
+
+
+def test_render_empty_registry_parses():
+    assert parse_prometheus_text(render_prometheus(MetricsRegistry())) == {}
+
+
+@pytest.mark.parametrize("text,why", [
+    ("foo 1\n", "no TYPE"),
+    ("# TYPE x counter\nx_total 1\nx_tot", "torn mid-line"),
+    ("# TYPE x counter\nx_total 1\nx_total 2\n", "duplicate sample"),
+    ("# TYPE x counter\nx_total abc\n", "non-numeric value"),
+    ('# TYPE h histogram\nh_bucket{le="1"} 5\nh_bucket{le="+Inf"} 3\n'
+     'h_sum 1\nh_count 3\n', "non-cumulative buckets"),
+    ('# TYPE h histogram\nh_bucket{le="1"} 2\nh_sum 1\nh_count 2\n',
+     "missing +Inf"),
+    ('# TYPE h histogram\nh_bucket{le="+Inf"} 3\nh_sum 1\nh_count 2\n',
+     "+Inf != _count"),
+    ('# TYPE h histogram\nh_bucket{le="+Inf"} 2\nh_count 2\n',
+     "missing _sum"),
+])
+def test_parser_rejects_malformed(text, why):
+    with pytest.raises(ValueError):
+        parse_prometheus_text(text)
+
+
+# ---------------------------------------------------------------------------
+# endpoints, metrics-only mode (no engine): the --metrics-port shape
+# ---------------------------------------------------------------------------
+
+def test_endpoints_metrics_only_mode():
+    reg = MetricsRegistry()
+    reg.counter("scheduler.trained_tokens").add(42)
+    with OpsServer(registry=reg,
+                   status_fn=lambda: {"iteration": 3}) as srv:
+        code, body = _get(srv.url, "/healthz")
+        assert (code, body) == (200, "ok\n")
+        code, text = _get(srv.url, "/metrics")
+        assert code == 200
+        assert parse_prometheus_text(text)[
+            "repro_scheduler_trained_tokens_total"] == 42
+        code, body = _get(srv.url, "/status")
+        st = json.loads(body)
+        assert code == 200 and st["requests_served"] == 0
+        assert st["pipeline"]["iteration"] == 3   # status_fn merged
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url, "/nope")
+        assert ei.value.code == 404
+        # generation needs an engine: 503, not a crash
+        req = urllib.request.Request(
+            srv.url + "/v1/generate", data=b'{"prompt": [1]}',
+            method="POST")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req, timeout=10)
+        assert ei.value.code == 503
+
+
+def test_generate_rejects_bad_payloads():
+    cfg, params, eng = _engine()
+    with OpsServer(engine=eng, key=jax.random.PRNGKey(1)) as srv:
+        for payload in (b"not json", b"{}", b'{"prompt": "text"}',
+                        b'{"prompt": []}'):
+            req = urllib.request.Request(
+                srv.url + "/v1/generate", data=payload, method="POST")
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(req, timeout=10)
+            assert ei.value.code == 400, payload
+
+
+# ---------------------------------------------------------------------------
+# socket serving == in-process driver, bitwise (sampled decode)
+# ---------------------------------------------------------------------------
+
+_ENGINE_CACHE = {}
+
+
+def _engine():
+    """One serving-shaped engine per module run (jit compile is the
+    expensive part); temperature 0.7 so identity below exercises the
+    per-request key derivation, not greedy argmax determinism."""
+    if "eng" not in _ENGINE_CACHE:
+        from repro.configs import get_config, reduced_config
+        from repro.launch.serve import build_paged_engine
+        from repro.models import init
+        cfg = reduced_config(get_config("llama3.2-3b"))
+        params = init(jax.random.PRNGKey(0), cfg)
+        eng = build_paged_engine(cfg, max_prompt_len=16, max_new=8,
+                                 num_slots=2, page_size=8, seed=0)
+        eng.set_params(params)
+        _ENGINE_CACHE["eng"] = (cfg, params, eng)
+    return _ENGINE_CACHE["eng"]
+
+
+def test_sse_stream_bitwise_identical_to_driver():
+    from repro.launch.serve import serve_requests
+    cfg, params, eng = _engine()
+    prompts = [np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32),
+               np.asarray([2, 7, 1, 8, 2, 8, 1, 8], np.int32)]
+    eng.reset_stats()
+    reqs, _, _ = serve_requests(
+        cfg, prompts, max_prompt_len=16, max_new=8,
+        arrivals=np.zeros(len(prompts)), params=params, engine=eng, seed=0)
+    driver_tokens = {r.rid: r.tokens for r in reqs}
+    # seed+1: the same base key serve_requests hands its RequestDriver
+    with OpsServer(engine=eng, key=jax.random.PRNGKey(1)) as srv:
+        for rid, prompt in enumerate(prompts):
+            toks, done = _sse_request(
+                srv.url, {"prompt": [int(t) for t in prompt], "rid": rid,
+                          "max_new": 8})
+            assert done is not None and done["verified"], done
+            assert toks == driver_tokens[rid], \
+                f"rid {rid}: socket stream diverged from driver"
+
+
+def test_sse_auto_rid_and_status_counters():
+    _, _, eng = _engine()
+    with OpsServer(engine=eng, key=jax.random.PRNGKey(1)) as srv:
+        toks, done = _sse_request(
+            srv.url, {"prompt": [5, 4, 3, 2, 1], "max_new": 4})
+        assert toks and done["verified"]
+        st = json.loads(_get(srv.url, "/status")[1])
+        assert st["requests_served"] == 1
+        assert st["active_requests"] == 0
+        eng_st = st["engine"]
+        assert eng_st["pages_live"] + eng_st["pages_free"] == \
+            eng_st["pages_total"]
+        assert eng_st["slots_active"] == 0
+
+
+# ---------------------------------------------------------------------------
+# scrape under load: /metrics and /status hammered while the engine drains
+# ---------------------------------------------------------------------------
+
+def test_scrape_under_load_never_tears():
+    _, _, eng = _engine()
+    with OpsServer(engine=eng, key=jax.random.PRNGKey(1)) as srv:
+        stop = threading.Event()
+        # per-thread series: only within one thread is scrape order the
+        # wall order (cross-thread list appends interleave arbitrarily)
+        series, statuses, errors = [[], []], [], []
+
+        def hammer(out):
+            try:
+                while not stop.is_set():
+                    out.append(
+                        parse_prometheus_text(_get(srv.url, "/metrics")[1]))
+                    statuses.append(json.loads(_get(srv.url, "/status")[1]))
+            except Exception as e:  # surfaced below, not swallowed
+                errors.append(e)
+
+        hammers = [threading.Thread(target=hammer, args=(out,))
+                   for out in series]
+        for t in hammers:
+            t.start()
+        # several generation requests drain through the engine meanwhile
+        results = []
+
+        def generate(rid):
+            results.append(_sse_request(
+                srv.url, {"prompt": [rid + 1] * 6, "rid": rid,
+                          "max_new": 8}))
+
+        gens = [threading.Thread(target=generate, args=(rid,))
+                for rid in range(4)]
+        for t in gens:
+            t.start()
+        for t in gens:
+            t.join(timeout=120)
+        stop.set()
+        for t in hammers:
+            t.join(timeout=30)
+        assert not errors, errors     # every scrape parsed as well-formed
+        assert len(results) == 4 and all(d["verified"] for _, d in results)
+        assert sum(len(s) for s in series) >= 2
+        for scraped in series:        # counters monotone per scrape thread
+            for prev, cur in zip(scraped, scraped[1:]):
+                for name, v in prev.items():
+                    if name.endswith("_total") and name in cur:
+                        assert cur[name] >= v, f"{name} went backwards"
+        for st in statuses:           # no torn multi-field engine view
+            e = st["engine"]
+            assert e["pages_live"] + e["pages_free"] == e["pages_total"]
+            assert 0 <= e["slots_active"] <= e["slots_total"]
+
+
+# ---------------------------------------------------------------------------
+# OnlineBubble: incremental estimator vs hand-computed occupancy
+# ---------------------------------------------------------------------------
+
+def _x(name, lo_s, hi_s):
+    return ("X", name, lo_s * 1e6, (hi_s - lo_s) * 1e6, None, {})
+
+
+def test_online_bubble_matches_hand_computation():
+    ob = OnlineBubble(window_s=30.0)
+    assert ob.value() is None                       # nothing seen yet
+    ob.on_event(_x("producer.busy", 0.0, 1.0))
+    ob.on_event(_x("train.group", 0.5, 1.5))
+    ob.on_event(_x("paged.drain", 0.0, 9.0))        # neither stage: ignored
+    ob.on_event(("i", "request.token", 5e6, None, None, {}))  # non-X
+    v = ob.value()
+    # wall [0, 1.5]: p busy 1.0, c busy 1.0, overlap [0.5, 1.0] = 0.5
+    assert v["window_s"] == pytest.approx(1.5)
+    assert v["producer_busy_s"] == pytest.approx(1.0)
+    assert v["consumer_busy_s"] == pytest.approx(1.0)
+    assert v["bubble_fraction"] == pytest.approx(1 - 2.0 / 3.0)
+    assert v["overlap_efficiency"] == pytest.approx(0.5)
+
+
+def test_online_bubble_window_clips_old_spans():
+    ob = OnlineBubble(window_s=1.0)
+    ob.on_event(_x("producer.busy", 0.0, 1.0))
+    ob.on_event(_x("train.update", 0.5, 1.5))
+    v = ob.value()
+    # window [0.5, 1.5]: p clipped to 0.5s, c full 1.0s, overlap 0.5s
+    assert v["window_s"] == pytest.approx(1.0)
+    assert v["producer_busy_s"] == pytest.approx(0.5)
+    assert v["consumer_busy_s"] == pytest.approx(1.0)
+    assert v["bubble_fraction"] == pytest.approx(1 - 1.5 / 2.0)
+    assert v["overlap_efficiency"] == pytest.approx(1.0)
+
+
+def test_online_bubble_rides_tracer_listener():
+    otrace.install("p")
+    ob = OnlineBubble()
+    otrace.get().add_listener(ob.on_event)
+    t = otrace.get()
+    t.complete("producer.busy", t._epoch + 0.0, t._epoch + 1.0)
+    t.complete("train.group", t._epoch + 0.5, t._epoch + 1.5)
+    v = ob.value()
+    assert v is not None and v["producer_busy_s"] == pytest.approx(1.0)
+    otrace.get().remove_listener(ob.on_event)
+    t.complete("producer.busy", t._epoch + 2.0, t._epoch + 9.0)
+    assert ob.value()["producer_busy_s"] == pytest.approx(1.0)  # detached
+
+
+# ---------------------------------------------------------------------------
+# /status exposes the online bubble when a tracer is live
+# ---------------------------------------------------------------------------
+
+def test_status_includes_online_bubble_with_tracer():
+    otrace.install("p")
+    with OpsServer() as srv:
+        t = otrace.get()
+        t.complete("producer.busy", t._epoch, t._epoch + 0.2)
+        t.complete("train.group", t._epoch + 0.1, t._epoch + 0.3)
+        st = json.loads(_get(srv.url, "/status")[1])
+        assert "online" in st
+        assert 0.0 <= st["online"]["bubble_fraction"] <= 1.0
+
+
+def test_stop_is_idempotent_and_port_is_real():
+    srv = OpsServer()
+    srv.start()
+    port = srv.port
+    assert port > 0
+    srv.stop()
+    srv.stop()                         # second stop: no-op, no raise
+    time.sleep(0.05)
+    with pytest.raises(Exception):     # socket actually closed
+        urllib.request.urlopen(srv.url + "/healthz", timeout=2)
